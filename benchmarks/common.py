@@ -1,0 +1,43 @@
+"""Shared helpers for the per-figure benchmark modules."""
+
+from __future__ import annotations
+
+from repro.configs.opto_vit import get_config
+from repro.core.energy import (EnergyReport, accumulate_matmuls,
+                               energy_of_stats, latency_of_stats)
+from repro.models.vit import vit_matmul_shapes
+
+VARIANTS = ("tiny", "small", "base", "large")
+IMG_SIZES = (96, 224)
+
+
+def nonlin_elems(cfg, n_tokens: int) -> int:
+    """Softmax (H * n^2) + GELU (n * d_ff) element count per frame."""
+    return cfg.n_layers * (cfg.n_heads * n_tokens * n_tokens
+                           + n_tokens * cfg.d_ff)
+
+
+def frame_report(variant: str, img_size: int,
+                 kept_patches: int | None = None,
+                 include_mgnet: bool = False,
+                 pipelined_tuning: bool = True) -> EnergyReport:
+    """Full per-frame energy+latency report for one ViT workload."""
+    cfg = get_config(variant, img_size=img_size)
+    shapes = vit_matmul_shapes(cfg, kept_patches=kept_patches,
+                               include_mgnet=include_mgnet)
+    stats, tiles = accumulate_matmuls(shapes)
+    n = (kept_patches if kept_patches is not None
+         else (img_size // cfg.patch) ** 2) + 1
+    nl = nonlin_elems(cfg, n)
+    rep = energy_of_stats(stats, nl)
+    lat = latency_of_stats(stats, nl, n_tiles=tiles,
+                           pipelined_tuning=pipelined_tuning)
+    rep.optical_us, rep.epu_us, rep.memory_us = (lat.optical_us, lat.epu_us,
+                                                 lat.memory_us)
+    return rep
+
+
+def fmt_uj(rep: EnergyReport) -> str:
+    return (f"tuning={rep.tuning_uj:.2f} vcsel={rep.vcsel_uj:.2f} "
+            f"bpd={rep.bpd_uj:.2f} adc={rep.adc_uj:.2f} dac={rep.dac_uj:.2f} "
+            f"mem={rep.memory_uj:.2f} epu={rep.epu_uj:.2f}")

@@ -1,0 +1,54 @@
+"""Paper Figs. 10/11: MGNet RoI selection energy + latency savings.
+
+Baseline ViT-Base processing all patches vs MGNet-pruned processing (the
+MGNet's own cost included). The paper reports up to 84% energy savings at
+~66-68% pixel skip; savings scale with the skip ratio."""
+
+from __future__ import annotations
+
+from benchmarks.common import frame_report
+
+
+def run() -> list[dict]:
+    rows = []
+    print("\n== Figs. 10/11: MGNet RoI savings ==")
+    for variant, img in (("base", 96), ("base", 224), ("tiny", 224)):
+        n_patches = (img // 16) ** 2
+        base = frame_report(variant, img)
+        print(f"\n{variant} {img}x{img} ({n_patches} patches); "
+              f"baseline E={base.total_uj:.1f}uJ t={base.total_us:.1f}us")
+        for skip in (0.33, 0.5, 0.67, 0.85):
+            kept = max(1, int(round((1 - skip) * n_patches)))
+            masked = frame_report(variant, img, kept_patches=kept,
+                                  include_mgnet=True)
+            e_sav = 1 - masked.total_uj / base.total_uj
+            t_sav = 1 - masked.total_us / base.total_us
+            rows.append({"variant": variant, "img": img, "skip": skip,
+                         "kept": kept, "energy_uj": masked.total_uj,
+                         "latency_us": masked.total_us,
+                         "energy_saving": e_sav, "latency_saving": t_sav})
+            print(f"  skip={skip:.0%} kept={kept:3d}  "
+                  f"E={masked.total_uj:8.1f}uJ (save {e_sav:5.1%})   "
+                  f"t={masked.total_us:7.1f}us (save {t_sav:5.1%})")
+
+    # paper claims: saving grows with skip ratio; MGNet overhead is small;
+    # large inputs save more (more patches to skip). The residual gap to
+    # the paper's best-case 84% is the M-independent weight-tuning/SRAM
+    # cost (per-frame MR re-tuning does not shrink with pruned patches) +
+    # the sensor-interface savings the paper also counts — see DESIGN.md.
+    for variant, img in (("base", 96), ("base", 224), ("tiny", 224)):
+        sub = [r for r in rows if r["img"] == img
+               and r["variant"] == variant]
+        sav = [r["energy_saving"] for r in sub]
+        assert sav == sorted(sav), "saving must grow with skip ratio"
+    best = max(rows, key=lambda r: r["energy_saving"])
+    print(f"\nbest case: {best['variant']}-{best['img']} "
+          f"@{best['skip']:.0%} skip -> {best['energy_saving']:.1%} energy "
+          f"saving (paper: 'up to 84%' incl. sensor-interface savings)")
+    assert best["energy_saving"] > 0.6, best
+    # 224 saves more than 96 at equal skip (paper Fig. 10 trend)
+    b96 = [r for r in rows if r["img"] == 96 and r["skip"] == 0.67][0]
+    b224 = [r for r in rows if r["img"] == 224 and r["skip"] == 0.67
+            and r["variant"] == "base"][0]
+    assert b224["energy_saving"] > b96["energy_saving"]
+    return rows

@@ -1,0 +1,33 @@
+"""Paper Fig. 8: energy breakdown per ViT variant x image size.
+
+Reproduces: (i) energy decreases with smaller networks / images, (ii) the
+Tiny-96x96 pie is ADC-dominated."""
+
+from __future__ import annotations
+
+from benchmarks.common import IMG_SIZES, VARIANTS, fmt_uj, frame_report
+
+
+def run() -> list[dict]:
+    rows = []
+    print("\n== Fig. 8: energy breakdown (uJ/frame) ==")
+    for v in VARIANTS:
+        for img in IMG_SIZES:
+            rep = frame_report(v, img)
+            rows.append({"variant": v, "img": img, "total_uj": rep.total_uj,
+                         "breakdown": rep.breakdown()})
+            print(f"{v:>6}-{img:<4} total={rep.total_uj:9.2f}uJ  "
+                  f"{fmt_uj(rep)}")
+    tiny = rows[0]
+    pie = tiny["breakdown"]
+    dom = max(pie, key=pie.get)
+    print(f"Tiny-96 pie: {({k: round(x, 3) for k, x in pie.items()})}")
+    print(f"dominant component: {dom} "
+          f"({'MATCHES' if dom == 'adc_uj' else 'DIFFERS FROM'} paper's "
+          f"ADC-dominant finding)")
+    # monotonicity checks (paper's 'clear trend of energy reduction')
+    totals = {(r["variant"], r["img"]): r["total_uj"] for r in rows}
+    assert totals[("tiny", 96)] < totals[("small", 96)] < \
+        totals[("base", 96)] < totals[("large", 96)]
+    assert all(totals[(v, 96)] < totals[(v, 224)] for v in VARIANTS)
+    return rows

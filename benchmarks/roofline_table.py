@@ -1,0 +1,52 @@
+"""Deliverable (g): the full per-(arch x shape x mesh) roofline table,
+read from the dry-run artifacts under experiments/dryrun/."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.roofline.hlo_analysis import Cost
+from repro.roofline.report import make_row, render_table
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_rows(mesh: str | None = None, variant: str = "baseline"):
+    rows, skips, fails = [], [], []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(fn))
+        if r.get("variant", "baseline") != variant:
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            skips.append(r)
+            continue
+        if r["status"] != "ok":
+            fails.append(r)
+            continue
+        cost = Cost(r["parsed"]["flops"], r["parsed"]["bytes"],
+                    r["parsed"]["coll_bytes"], r["parsed"]["coll_by_op"])
+        rows.append(make_row(r["arch"], r["shape"], r["mesh"], cost,
+                             r["roofline"], r.get("bytes_per_device")))
+    return rows, skips, fails
+
+
+def run() -> list[dict]:
+    print("\n== Roofline table (single-pod 16x16, baselines) ==")
+    rows, skips, fails = load_rows(mesh="pod")
+    if not rows:
+        print(f"  (no dry-run artifacts under {DRYRUN_DIR} — run "
+              "`python -m repro.launch.dryrun --all` first)")
+        return []
+    print(render_table(rows))
+    print(f"\n{len(rows)} cells ok, {len(skips)} documented skips, "
+          f"{len(fails)} failures")
+    for s in skips:
+        print(f"  SKIP {s['arch']} {s['shape']}: {s['reason'][:70]}")
+    mrows, _, mfails = load_rows(mesh="multipod")
+    print(f"multipod: {len(mrows)} cells ok, {len(mfails)} failures")
+    assert not fails and not mfails, "dry-run failures present"
+    return rows

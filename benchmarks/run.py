@@ -1,0 +1,46 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig8 table4
+
+Each module's ``run()`` prints its table and ASSERTS the paper's
+qualitative claims (orderings, dominances, calibrated headline) so the
+harness doubles as a reproduction gate."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (fig8_energy, fig9_latency, fig10_11_mgnet,
+                        roofline_table, table1_qat, table4_kfps)
+
+ALL = {
+    "fig8": fig8_energy.run,
+    "fig9": fig9_latency.run,
+    "fig10_11": fig10_11_mgnet.run,
+    "table1": table1_qat.run,
+    "table4": table4_kfps.run,
+    "roofline": roofline_table.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    t0 = time.time()
+    failed = []
+    for n in names:
+        try:
+            ALL[n]()
+        except AssertionError as e:
+            failed.append((n, str(e)))
+            print(f"!! {n} reproduction assertion failed: {e}")
+    dt = time.time() - t0
+    print(f"\n== benchmarks done in {dt:.1f}s: "
+          f"{len(names) - len(failed)}/{len(names)} reproduction gates pass")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

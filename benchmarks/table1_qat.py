@@ -1,0 +1,72 @@
+"""Paper Table I (mechanism level): 8-bit QAT accuracy vs full precision.
+
+Full ImageNet/CIFAR fine-tuning is out of scope on CPU; this reproduces
+the MECHANISM the table demonstrates — QAT holds accuracy within ~1 point
+of full precision — on a synthetic separable vision task (planted-box
+ImageStream), plus the RoI-mask variant's controlled degradation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import smoke_variant
+from repro.configs.opto_vit import get_config
+from repro.data.pipeline import ImageStream
+from repro.models.vit import forward_vit, init_vit
+
+
+def _train_eval(cfg, steps=150, seed=0):
+    from repro.data.pipeline import quadrant_labels
+    stream = ImageStream(img_size=cfg.img_size, global_batch=32,
+                         n_classes=8, patch=cfg.patch, seed=seed)
+    params = init_vit(jax.random.PRNGKey(seed), cfg, n_classes=4)
+
+    def loss_fn(p, images, labels):
+        lg, _ = forward_vit(p, images, cfg)
+        lf = lg.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lf, -1)
+        gold = jnp.take_along_axis(lf, labels[:, None], -1)[:, 0]
+        return (lse - gold).mean()
+
+    @jax.jit
+    def step(p, images, labels):
+        l, g = jax.value_and_grad(loss_fn)(p, images, labels)
+        return jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g), l
+
+    for i in range(steps):
+        b = stream.batch_at(i)
+        params, _ = step(params, b["images"],
+                         quadrant_labels(b["patch_mask"]))
+
+    correct = total = 0
+    for j in range(4):
+        b = stream.batch_at(2000 + j)
+        lg, _ = forward_vit(params, b["images"], cfg)
+        correct += int((jnp.argmax(lg, -1)
+                        == quadrant_labels(b["patch_mask"])).sum())
+        total += int(b["patch_mask"].shape[0])
+    return correct / total
+
+
+def run() -> list[dict]:
+    print("\n== Table I (mechanism): QAT + RoI-mask accuracy ==")
+    base = smoke_variant(get_config("tiny")).with_(n_layers=2, remat=False)
+    cells = [
+        ("fp32", base.with_(quant_bits=0)),
+        ("w8a8 QAT", base.with_(quant_bits=8)),
+        ("w8a8 + mask(keep 2/3)", base.with_(quant_bits=8, mgnet=True,
+                                             mgnet_keep_ratio=0.67)),
+    ]
+    rows = []
+    for name, cfg in cells:
+        acc = _train_eval(cfg)
+        rows.append({"config": name, "acc": acc})
+        print(f"  {name:<24} acc = {acc:.3f}")
+    fp = rows[0]["acc"]
+    q = rows[1]["acc"]
+    print(f"QAT drop vs fp: {fp - q:+.3f} "
+          f"(paper Table I: <=1.6% across variants)")
+    assert fp > 0.55, "task must be learnable"
+    assert q > fp - 0.15, (fp, q)
+    return rows

@@ -1,0 +1,43 @@
+"""Paper Table IV: KFPS/W efficiency vs SiPh accelerators + GPU/FPGA.
+
+Our number is computed from the calibrated cross-layer model (Tiny-96x96
+reference workload, as the paper's headline). Competitor rows carry the
+paper's reported figures (the paper itself reconstructed those designs in
+its proprietary simulator; we report its table verbatim as the
+comparison baseline and validate OUR number against the model)."""
+
+from __future__ import annotations
+
+from benchmarks.common import frame_report
+from repro.core.energy import kfps_per_watt
+
+PAPER_TABLE = {          # KFPS/W as reported in Table IV
+    "LightBulb [34]": 57.75,
+    "HolyLight [33]": 3.3,
+    "HQNNA [53]": 34.6,
+    "Robin [26]": 46.5,
+    "CrossLight [28]": 52.59,       # best case
+    "Lightator [36]": 188.24,       # best case
+    "Xilinx VCK190 (INT8)": 1.42,
+    "NVIDIA A100 (INT8 TRT)": 0.86,
+}
+
+
+def run() -> list[dict]:
+    print("\n== Table IV: KFPS/W comparison ==")
+    rep = frame_report("tiny", 96)
+    ours = kfps_per_watt(rep)
+    rows = [{"design": "Opto-ViT (this work, model)", "kfps_w": ours}]
+    print(f"  {'Opto-ViT (reproduced model)':<28} {ours:8.1f} KFPS/W "
+          f"(paper: 100.4)")
+    for k, v in PAPER_TABLE.items():
+        rows.append({"design": k, "kfps_w": v})
+        print(f"  {k:<28} {v:8.2f} KFPS/W "
+              f"({ours / v:5.1f}x {'better' if ours > v else 'worse'})")
+    assert abs(ours - 100.4) / 100.4 < 0.05, \
+        f"calibration drifted: {ours} vs paper 100.4"
+    # paper's ordering claims: beats everything except Lightator-best
+    for k, v in PAPER_TABLE.items():
+        if "Lightator" not in k:
+            assert ours > v, (k, v)
+    return rows

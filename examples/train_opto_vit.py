@@ -1,0 +1,103 @@
+"""Train an Opto-ViT (QAT + MGNet) end to end on the synthetic RoI task.
+
+Two phases, mirroring the paper's §IV training pipeline:
+  1. MGNet trained with BCE against box-derived patch labels (Eq. 3
+     scoring head), evaluated by mask mIoU,
+  2. the 8-bit-QAT ViT backbone trained on classification with MGNet
+     pruning active (straight-through estimator end to end).
+
+Runs in ~2-4 minutes on CPU with the reduced config; scale --d-model /
+--layers / --img up on real hardware (the code path is identical).
+
+    PYTHONPATH=src python examples/train_opto_vit.py --steps 200
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import smoke_variant
+from repro.configs.opto_vit import get_config
+from repro.core.mgnet import (MGNetConfig, bce_loss, init_mgnet, mask_iou,
+                              mgnet_scores)
+from repro.data.pipeline import ImageStream
+from repro.models.vit import forward_vit, init_vit
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--keep", type=float, default=0.5)
+    args = ap.parse_args()
+
+    stream = ImageStream(img_size=32, global_batch=args.batch, n_classes=8,
+                         patch=8, seed=0)
+
+    # ---- phase 1: MGNet ----------------------------------------------
+    mcfg = MGNetConfig(patch=8, embed=32, heads=2, img_size=32)
+    mparams = init_mgnet(jax.random.PRNGKey(0), mcfg)
+
+    @jax.jit
+    def mgnet_step(p, batch):
+        def loss(p):
+            return bce_loss(mgnet_scores(p, batch["images"], mcfg),
+                            batch["patch_mask"])
+        l, g = jax.value_and_grad(loss)(p)
+        return jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g), l
+
+    t0 = time.time()
+    for i in range(args.steps):
+        mparams, ml = mgnet_step(mparams, stream.batch_at(i))
+    val = stream.batch_at(9999)
+    pred = (jax.nn.sigmoid(mgnet_scores(mparams, val["images"], mcfg))
+            > mcfg.t_reg).astype(jnp.float32)
+    miou = float(mask_iou(pred, val["patch_mask"]))
+    print(f"[mgnet] {args.steps} steps in {time.time() - t0:.0f}s; "
+          f"BCE {float(ml):.3f}; mask mIoU {miou:.3f}")
+
+    # ---- phase 2: QAT ViT backbone with RoI pruning --------------------
+    cfg = smoke_variant(get_config("tiny")).with_(
+        n_layers=2, remat=False, quant_bits=8,
+        mgnet=True, mgnet_keep_ratio=args.keep,
+        mgnet_embed=mcfg.embed, mgnet_heads=mcfg.heads)
+    params = init_vit(jax.random.PRNGKey(1), cfg, n_classes=8)
+    params["mgnet"] = mparams          # plug the trained MGNet in
+
+    def loss_fn(p, batch):
+        lg, _ = forward_vit(p, batch["images"], cfg)
+        lf = lg.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lf, -1)
+        gold = jnp.take_along_axis(lf, batch["labels"][:, None], -1)[:, 0]
+        return (lse - gold).mean()
+
+    @jax.jit
+    def vit_step(p, batch):
+        l, g = jax.value_and_grad(loss_fn)(p, batch)
+        return jax.tree_util.tree_map(lambda a, b: a - args.lr * b, p, g), l
+
+    t0 = time.time()
+    losses = []
+    for i in range(args.steps):
+        params, l = vit_step(params, stream.batch_at(10000 + i))
+        losses.append(float(l))
+        if i % 50 == 0:
+            print(f"[vit] step {i:4d} loss {float(l):.4f}")
+
+    correct = total = 0
+    for j in range(4):
+        b = stream.batch_at(20000 + j)
+        lg, kept = forward_vit(params, b["images"], cfg)
+        correct += int((jnp.argmax(lg, -1) == b["labels"]).sum())
+        total += int(b["labels"].shape[0])
+    print(f"[vit] {args.steps} QAT steps in {time.time() - t0:.0f}s; "
+          f"loss {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f}; "
+          f"val acc {correct / total:.3f} with {kept}/{16} patches kept")
+
+
+if __name__ == "__main__":
+    main()

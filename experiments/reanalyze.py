@@ -1,0 +1,51 @@
+"""Re-run the roofline analyzer over saved HLO artifacts and update the
+dry-run/perf JSONs in place (used after analyzer model improvements —
+no recompilation needed).
+
+    PYTHONPATH=src python experiments/reanalyze.py
+"""
+
+import glob
+import json
+import os
+import sys
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+from repro.roofline.hlo_analysis import analyze_module
+from repro.roofline.report import roofline_terms
+
+BASE = os.path.dirname(os.path.abspath(__file__))
+
+
+def reanalyze(json_dir: str):
+    n = 0
+    for fn in sorted(glob.glob(os.path.join(json_dir, "*.json"))):
+        r = json.load(open(fn))
+        if r.get("status") != "ok":
+            continue
+        hlo_path = r.get("hlo_path")
+        if not hlo_path or not os.path.exists(hlo_path):
+            print(f"  no hlo for {os.path.basename(fn)}; skipped")
+            continue
+        cost = analyze_module(open(hlo_path).read())
+        cfg = get_config(r["arch"])
+        if r.get("overrides"):
+            cfg = cfg.with_(**r["overrides"])
+        shape = SHAPES[r["shape"]]
+        terms = roofline_terms(cost, cfg, shape, r["n_devices"])
+        r["parsed"] = {"flops": cost.flops, "bytes": cost.bytes,
+                       "coll_bytes": cost.coll_bytes,
+                       "coll_by_op": cost.coll_by_op,
+                       "bytes_by_tag": cost.bytes_by_tag,
+                       "int8_flops": cost.int8_flops}
+        r["roofline"] = terms
+        with open(fn, "w") as f:
+            json.dump(r, f, indent=1)
+        n += 1
+    print(f"reanalyzed {n} records in {json_dir}")
+
+
+if __name__ == "__main__":
+    for d in ("dryrun", "perf"):
+        reanalyze(os.path.join(BASE, d))

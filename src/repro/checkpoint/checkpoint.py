@@ -1,0 +1,208 @@
+"""Sharding-aware checkpointing: save/restore, async, elastic re-mesh.
+
+Layout: a checkpoint directory holds
+    meta.json            - step, tree structure, shapes/dtypes, rules hash
+    <leaf-path>.npy      - one file per pytree leaf (gathered host arrays)
+
+Design points for the 1000+-node posture (DESIGN.md §4):
+  * restore takes a ShardingCtx + logical-axes tree and device_puts each
+    leaf with its target NamedSharding -> restoring onto a *different*
+    mesh shape is the elastic re-mesh path (tests/test_checkpoint.py).
+  * ``async_save`` snapshots to host memory synchronously (cheap) and
+    writes to disk on a background thread — training continues.
+  * saves are atomic (tmp dir + rename) and carry a content checksum so a
+    torn write from a preemption is detected at restore.
+  * on a real multi-host pod each host would write only its addressable
+    shards; the single-process degenerate case writes full arrays.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingCtx, named_sharding
+
+__all__ = ["save", "restore", "async_save", "latest_step", "CheckpointManager"]
+
+
+def _flatten(tree, is_leaf=None):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree,
+                                                         is_leaf=is_leaf)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _flatten_axes(axes):
+    """Logical-axis trees have TUPLE leaves — stop flattening at tuples."""
+    return _flatten(axes, is_leaf=lambda t: isinstance(t, tuple))
+
+
+def _checksum(arrays: dict) -> str:
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        h.update(k.encode())
+        a = arrays[k]
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(np.ascontiguousarray(a).tobytes()[:4096])  # prefix hash
+    return h.hexdigest()
+
+
+def save(path: str, tree: Any, step: int = 0, extra: dict | None = None):
+    """Atomic synchronous save (unique tmp dir: concurrent saves of the
+    same step cannot clobber each other's in-flight writes)."""
+    tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat, _ = _flatten(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    for k, v in host.items():
+        fn = os.path.join(tmp, k.replace("/", "__") + ".npy")
+        np.save(fn, v)
+    meta = {"step": int(step),
+            "keys": sorted(host.keys()),
+            "shapes": {k: list(v.shape) for k, v in host.items()},
+            "dtypes": {k: str(v.dtype) for k, v in host.items()},
+            "checksum": _checksum(host),
+            "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    try:
+        os.rename(tmp, path)
+    except OSError:
+        # lost the rename race to an identical concurrent save — fine
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def _coerce_dtype(a: np.ndarray, dtype_str: str) -> np.ndarray:
+    """np.load returns ml_dtypes arrays (bf16, fp8) as raw void dtypes —
+    reinterpret with the dtype recorded in meta.json."""
+    if str(a.dtype) == dtype_str:
+        return a
+    try:
+        dt = np.dtype(dtype_str)
+    except TypeError:
+        import ml_dtypes
+        dt = np.dtype(getattr(ml_dtypes, dtype_str))
+    if a.dtype.itemsize == dt.itemsize:
+        return a.view(dt) if a.ndim else a.reshape(1).view(dt).reshape(())
+    return a.astype(dt)
+
+
+def restore(path: str, like: Any, ctx: ShardingCtx | None = None,
+            axes: Any | None = None) -> tuple[Any, int]:
+    """Restore into the structure of ``like``. With (ctx, axes) the leaves
+    are device_put with their logical shardings — pass a ctx built on a NEW
+    mesh to re-shard elastically. Returns (tree, step)."""
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    flat_like, treedef = _flatten(like)
+    flat_axes, _ = _flatten_axes(axes) if axes is not None else ({}, None)
+    host = {}
+    for k in flat_like:
+        fn = os.path.join(path, k.replace("/", "__") + ".npy")
+        host[k] = _coerce_dtype(np.load(fn), meta["dtypes"].get(k, ""))
+    if meta["checksum"] != _checksum(host):
+        raise IOError(f"checkpoint {path} failed checksum (torn write?)")
+    leaves = []
+    for k, ref_leaf in flat_like.items():
+        a = host[k].astype(ref_leaf.dtype if hasattr(ref_leaf, "dtype")
+                           else host[k].dtype)
+        if ctx is not None and k in flat_axes and flat_axes[k] is not None:
+            sh = named_sharding(a.shape, flat_axes[k], ctx)
+            leaves.append(jax.device_put(a, sh))
+        else:
+            leaves.append(jnp.asarray(a))
+    # rebuild in treedef order
+    keys_in_order = list(flat_like.keys())
+    tree = jax.tree_util.tree_unflatten(
+        treedef, [leaves[keys_in_order.index(k)] for k in flat_like])
+    return tree, meta["step"]
+
+
+def async_save(path: str, tree: Any, step: int = 0,
+               extra: dict | None = None) -> threading.Thread:
+    """Snapshot to host memory now; write to disk in the background."""
+    flat, treedef = _flatten(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    snapshot = jax.tree_util.tree_unflatten(
+        treedef, [host[k] for k in flat])
+    t = threading.Thread(target=save, args=(path, snapshot, step, extra),
+                         daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(root: str) -> int | None:
+    """Highest step among ``<root>/step_<n>`` checkpoint dirs."""
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for d in os.listdir(root):
+        if (d.startswith("step_") and d[5:].isdigit()   # skip .tmp in-flight
+                and os.path.exists(os.path.join(root, d, "meta.json"))):
+            steps.append(int(d[5:]))
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Periodic + emergency checkpoints with retention."""
+
+    def __init__(self, root: str, every: int = 100, keep: int = 3):
+        self.root = root
+        self.every = every
+        self.keep = keep
+        self._pending: list[threading.Thread] = []
+        self._saved_steps: set[int] = set()
+        os.makedirs(root, exist_ok=True)
+
+    def maybe_save(self, step: int, tree: Any, extra: dict | None = None,
+                   force: bool = False):
+        if not force and (step == 0 or step % self.every):
+            return
+        if step in self._saved_steps:          # dedup force + periodic
+            return
+        self._saved_steps.add(step)
+        path = os.path.join(self.root, f"step_{step}")
+        self._pending.append(async_save(path, tree, step, extra))
+        self._gc()
+
+    def emergency_save(self, step: int, tree: Any):
+        """Synchronous save for SIGTERM/preemption handlers."""
+        save(os.path.join(self.root, f"step_{step}"), tree, step,
+             {"emergency": True})
+
+    def wait(self):
+        for t in self._pending:
+            t.join()
+        self._pending.clear()
+
+    def _gc(self):
+        all_steps = sorted(int(d[5:]) for d in os.listdir(self.root)
+                           if d.startswith("step_") and d[5:].isdigit())
+        for s in all_steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like: Any, ctx=None, axes=None):
+        self.wait()
+        s = latest_step(self.root)
+        if s is None:
+            return None, 0
+        return restore(os.path.join(self.root, f"step_{s}"), like, ctx, axes)

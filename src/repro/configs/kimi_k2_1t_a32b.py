@@ -1,0 +1,21 @@
+"""kimi-k2-1t-a32b [moe]: 61L d_model=7168 64H (GQA kv=8) d_ff=2048/expert,
+vocab=163840, 384 experts top-8 + 1 shared, first layer dense
+(arXiv:2501.kimi2 paper-table). ~1T total / ~32B active params.
+Memory: at 1T params a single 256x16GB pod cannot hold params+grads+opt
+(8TB at bf16+bf16 AdamW) — the dry-run memory table documents this; the
+multi-pod mesh with bf16 optimizer state is the supported configuration."""
+
+from repro.configs.base import ArchConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="kimi-k2-1t-a32b", family="moe",
+        n_layers=61, d_model=7168, n_heads=64, kv_heads=8,
+        d_ff=2048, vocab=163840,
+        n_experts=384, top_k=8, shared_experts=1, first_dense_layers=1,
+        capacity_factor=1.25, moe_groups=16,
+        rope_theta=50000.0,
+        microbatch_steps=8,
+        use_fp32_master=False,
+    )

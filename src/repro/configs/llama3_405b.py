@@ -1,0 +1,17 @@
+"""llama3-405b [dense]: 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256 (arXiv:2407.21783). Memory policy for 256x16GB v5e:
+microbatch accumulation + bf16 optimizer state (DESIGN.md §4)."""
+
+from repro.configs.base import ArchConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="llama3-405b", family="dense",
+        n_layers=126, d_model=16384, n_heads=128, kv_heads=8,
+        d_ff=53248, vocab=128256,
+        rope_theta=500000.0,
+        microbatch_steps=8,          # microbatch 32 of global 256
+        use_fp32_master=False,       # bf16 m/v (low_mem AdamW)
+        attn_block_q=512, attn_block_kv=1024,
+    )

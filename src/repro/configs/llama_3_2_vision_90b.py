@@ -1,0 +1,18 @@
+"""llama-3.2-vision-90b [vlm]: 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256; gated image cross-attention every 5th layer (20 of 100);
+vision tower STUB supplies patch embeddings (hf:meta-llama/Llama-3.2).
+MGNet RoI pruning applies naturally here (mgnet flag prunes image
+tokens before cross-attn K/V)."""
+
+from repro.configs.base import ArchConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="llama-3.2-vision-90b", family="vlm",
+        n_layers=100, d_model=8192, n_heads=64, kv_heads=8,
+        d_ff=28672, vocab=128256,
+        rope_theta=500000.0,
+        cross_every=5, n_img_tokens=1601, d_frontend=1280,
+        microbatch_steps=4,
+    )

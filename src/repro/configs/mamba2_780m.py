@@ -1,0 +1,17 @@
+"""mamba2-780m [ssm]: 48L d_model=1536, attn-free SSD, vocab=50280,
+ssm_state=128 (arXiv:2405.21060). Paper technique applicability: photonic
+w8a8 linears apply to all projections; Eq. 2 decomposition inapplicable
+(no QK^T) — see DESIGN.md §Arch-applicability."""
+
+from repro.configs.base import ArchConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="mamba2-780m", family="ssm",
+        n_layers=48, d_model=1536, n_heads=24, kv_heads=24,
+        d_ff=0, vocab=50280,
+        ssm_state=128, ssm_headdim=64, ssm_expand=2, conv_kernel=4,
+        ssm_chunk=256,
+        microbatch_steps=1,
+    )

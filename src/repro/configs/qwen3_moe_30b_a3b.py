@@ -1,0 +1,16 @@
+"""qwen3-moe-30b-a3b [moe]: 48L d_model=2048 32H (GQA kv=4) d_ff=768/expert
+vocab=151936, 128 experts top-8 (hf:Qwen/Qwen3-30B-A3B)."""
+
+from repro.configs.base import ArchConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-moe-30b-a3b", family="moe",
+        n_layers=48, d_model=2048, n_heads=32, kv_heads=4,
+        d_ff=768, vocab=151936,
+        n_experts=128, top_k=8, shared_experts=0, first_dense_layers=0,
+        capacity_factor=1.25, moe_groups=16,
+        rope_theta=1000000.0,
+        microbatch_steps=1,
+    )

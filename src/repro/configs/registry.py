@@ -1,0 +1,41 @@
+"""Architecture registry: --arch <id> resolves here."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig
+
+ARCH_IDS = [
+    "mamba2-780m",
+    "stablelm-12b",
+    "qwen2-1.5b",
+    "llama3-405b",
+    "qwen2.5-3b",
+    "llama-3.2-vision-90b",
+    "whisper-medium",
+    "recurrentgemma-9b",
+    "kimi-k2-1t-a32b",
+    "qwen3-moe-30b-a3b",
+    # the paper's own backbones
+    "opto-vit-tiny", "opto-vit-small", "opto-vit-base", "opto-vit-large",
+]
+
+_MODULE_FOR = {i: "repro.configs." + i.replace("-", "_").replace(".", "_")
+               for i in ARCH_IDS}
+for v in ("tiny", "small", "base", "large"):
+    _MODULE_FOR[f"opto-vit-{v}"] = "repro.configs.opto_vit"
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(_MODULE_FOR[arch_id])
+    if arch_id.startswith("opto-vit-"):
+        return mod.get_config(arch_id.split("-")[-1])
+    return mod.get_config()
+
+
+def all_lm_archs() -> list[str]:
+    """The 10 assigned LM-family architectures (dry-run set)."""
+    return ARCH_IDS[:10]

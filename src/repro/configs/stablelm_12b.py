@@ -1,0 +1,14 @@
+"""stablelm-12b [dense]: 40L d_model=5120 32H (GQA kv=8) d_ff=13824
+vocab=100352 (hf:stabilityai family)."""
+
+from repro.configs.base import ArchConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="stablelm-12b", family="dense",
+        n_layers=40, d_model=5120, n_heads=32, kv_heads=8,
+        d_ff=13824, vocab=100352,
+        rope_theta=10000.0,
+        microbatch_steps=2,
+    )

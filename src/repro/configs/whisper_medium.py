@@ -1,0 +1,17 @@
+"""whisper-medium [audio]: enc-dec, 24L decoder d_model=1024 16H (MHA kv=16)
+d_ff=4096 vocab=51865; 24L encoder over 1500 stub frame embeddings
+(arXiv:2212.04356). Conv/mel frontend is a STUB: input_specs supplies
+precomputed frame embeddings (B, 1500, 1024)."""
+
+from repro.configs.base import ArchConfig
+
+
+def get_config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-medium", family="encdec",
+        n_layers=24, d_model=1024, n_heads=16, kv_heads=16,
+        d_ff=4096, vocab=51865,
+        enc_layers=24, enc_frames=1500, d_frontend=1024,
+        rope_theta=10000.0,
+        microbatch_steps=1,
+    )

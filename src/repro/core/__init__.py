@@ -1,0 +1,16 @@
+"""Opto-ViT core: the paper's contributions as composable JAX modules.
+
+  quant                 - symmetric 8-bit QAT with STE (paper S.IV Accuracy)
+  noise                 - MR crosstalk/resolution device model (paper S.IV MR)
+  photonic              - optical-core WDM chunked MatMul simulator (Figs 4/6)
+  mgnet                 - RoI mask generation network + patch pruning (Eq. 3)
+  decomposed_attention  - Eq. 2 (Q W_K^T) X^T score dataflow
+  energy                - cross-layer energy/latency model (Figs 8-11, Tab IV)
+  schedule              - 5-core pipeline occupancy model (Fig. 5)
+"""
+
+from repro.core import (decomposed_attention, energy, mgnet, noise, photonic,
+                        quant, schedule)
+
+__all__ = ["quant", "noise", "photonic", "mgnet", "decomposed_attention",
+           "energy", "schedule"]

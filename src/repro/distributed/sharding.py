@@ -1,0 +1,162 @@
+"""Sharding context + logical-axis rules for the whole framework.
+
+Model code annotates activations/params with *logical* axes ("batch", "seq",
+"heads", "embed", "mlp", "vocab", "experts", "kv_seq", "stage", ...). A
+rules table maps logical axes to mesh axes (or None = replicate). The launch
+layer installs a ShardingCtx (mesh + rules); with no context installed, every
+annotation is a no-op — so smoke tests and single-device examples run
+unchanged.
+
+This is the t5x/MaxText "logical axis rules" pattern, rebuilt minimally.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingCtx", "use_sharding", "current_ctx", "shard", "logical_spec",
+           "DEFAULT_RULES", "MULTIPOD_RULES", "named_sharding", "param_spec"]
+
+# Default logical->mesh axis rules, single-pod (data, model) mesh.
+# FSDP: parameter "embed"/"mlp_in" dims shard over data; TP dims over model.
+DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
+    # activations
+    "batch": "data",
+    "seq": None,
+    "kv_seq": "model",        # decode-time KV cache seq sharding (flash-decode)
+    "embed": None,
+    "heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": None,
+    # parameters (FSDP axis = data; TP axis = model)
+    "p_embed": "data",
+    "p_heads": "model",
+    "p_mlp": "model",
+    "p_vocab": "model",
+    "p_experts": "model",
+    "p_layers": None,
+    "p_state": None,
+}
+
+# Multi-pod: pod joins data-parallel batch + FSDP axes.
+MULTIPOD_RULES = dict(DEFAULT_RULES)
+MULTIPOD_RULES.update({
+    "batch": ("pod", "data"),
+    "p_embed": ("pod", "data"),
+})
+
+
+@dataclass
+class ShardingCtx:
+    mesh: Mesh
+    rules: Mapping[str, str | tuple[str, ...] | None]
+
+    def spec(self, *logical_axes: str | None) -> P:
+        parts = []
+        for ax in logical_axes:
+            if ax is None:
+                parts.append(None)
+            else:
+                parts.append(self.rules.get(ax))
+        return P(*parts)
+
+    def sharding(self, *logical_axes: str | None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical_axes))
+
+
+_local = threading.local()
+
+
+def current_ctx() -> ShardingCtx | None:
+    return getattr(_local, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh | None, rules: Mapping | None = None):
+    """Install a sharding context (None mesh = disable all annotations)."""
+    prev = current_ctx()
+    if mesh is None:
+        _local.ctx = None
+    else:
+        if rules is None:
+            rules = MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
+        _local.ctx = ShardingCtx(mesh, rules)
+    try:
+        yield _local.ctx
+    finally:
+        _local.ctx = prev
+
+
+def _axis_size(mesh: Mesh, rule) -> int:
+    if rule is None:
+        return 1
+    if isinstance(rule, tuple):
+        n = 1
+        for r in rule:
+            n *= mesh.shape[r]
+        return n
+    return mesh.shape[rule]
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Annotate ``x`` with the sharding implied by its logical axes.
+
+    No-op outside a sharding context. Axes whose mesh-rule does not divide
+    the dimension evenly are dropped to replicated (jax rejects uneven
+    shardings) — e.g. GQA KV heads (8) on a model axis of 16.
+    """
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    if x.ndim != len(logical_axes):
+        raise ValueError(f"rank mismatch: {x.shape} vs {logical_axes}")
+    parts = []
+    for dim, ax in zip(x.shape, logical_axes):
+        rule = None if ax is None else ctx.rules.get(ax)
+        if rule is not None and dim % _axis_size(ctx.mesh, rule) != 0:
+            rule = None
+        parts.append(rule)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*parts)))
+
+
+def logical_spec(shape: Sequence[int], logical_axes: Sequence[str | None],
+                 ctx: ShardingCtx) -> P:
+    """PartitionSpec for a given shape under the ctx rules (with the same
+    divisibility fallback as ``shard``)."""
+    parts = []
+    for dim, ax in zip(shape, logical_axes):
+        rule = None if ax is None else ctx.rules.get(ax)
+        if rule is not None and dim % _axis_size(ctx.mesh, rule) != 0:
+            rule = None
+        parts.append(rule)
+    return P(*parts)
+
+
+def named_sharding(shape: Sequence[int], logical_axes: Sequence[str | None],
+                   ctx: ShardingCtx) -> NamedSharding:
+    return NamedSharding(ctx.mesh, logical_spec(shape, logical_axes, ctx))
+
+
+def param_spec(path: str, shape: tuple[int, ...], ctx: ShardingCtx) -> P:
+    """Heuristic parameter PartitionSpec from a param path + shape.
+
+    Rules (2D-sharded "FSDP x TP" layout, MaxText-style):
+      * stacked-layer leading dim (path under 'layers/') -> p_layers (None)
+      * token/vocab embedding (vocab, d)  -> (p_vocab, p_embed)
+      * attention/mlp projections (d_in, d_out): the larger "model-parallel"
+        dim goes to p_heads/p_mlp, the other to p_embed (FSDP)
+      * 1-D params (norm scales, biases) -> replicated
+    The concrete mapping is defined in configs via explicit per-leaf logical
+    axes where the heuristic is not enough (MoE experts, conv kernels).
+    """
+    raise NotImplementedError("use configs.param_logical_axes instead")

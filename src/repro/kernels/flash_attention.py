@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused flash attention (GQA, causal/local).
+
+Streaming-softmax attention with VMEM-resident running (max, sum, acc)
+state — the (Sq, Skv) score matrix never reaches HBM. Grid layout:
+
+    grid = (B * H, Sq/bq, Skv/bkv)
+
+The innermost (KV) grid dimension accumulates into VMEM scratch; on the
+last KV step the normalized block output is written. GQA is expressed in
+the BlockSpec index maps: query row ``i`` reads KV row ``i // group`` —
+no KV repetition materializes.
+
+Causal + local-window masking is applied per element; fully-masked KV
+blocks are skipped with ``pl.when`` (the kernel-level analogue of the
+causal_block_skip hillclimb in the XLA path).
+
+Validated in interpret mode against kernels/ref.py::flash_attention_ref
+over shape/dtype sweeps (tests/test_kernels_flash.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                           *, scale: float, causal: bool, window: int,
+                           bq: int, bkv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = qi * bq
+    kv_lo = ki * bkv
+
+    # live = this KV block intersects the visible region of this Q block
+    live = True
+    if causal:
+        live = kv_lo <= q_lo + bq - 1
+    if window > 0:
+        live = jnp.logical_and(live, kv_lo + bkv - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kv_pos = kv_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            mask &= q_pos >= kv_pos
+        if window > 0:
+            mask &= q_pos - kv_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot_general(
+                            p, v_ref[0].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = 128, bkv: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q (B, H, Sq, D); k/v (B, Hkv, Skv, D) -> (B, H, Sq, D).
+
+    H must be a multiple of Hkv (GQA group = H // Hkv); Sq % bq == 0,
+    Skv % bkv == 0. D should be a multiple of 128 on real TPUs (lane
+    alignment); interpret mode accepts any D.
+    """
+    b, h, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0 and sq % bq == 0 and skv % bkv == 0, \
+        (q.shape, k.shape, bq, bkv)
+    g = h // hkv
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.reshape(b * h, sq, dh)
+    kf = k.reshape(b * hkv, skv, dh)
+    vf = v.reshape(b * hkv, skv, dh)
+
+    grid = (b * h, sq // bq, skv // bkv)
+    kern = functools.partial(flash_attention_kernel, scale=scale,
+                             causal=causal, window=window, bq=bq, bkv=bkv)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda i, qi, ki: (i, qi, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda i, qi, ki, g=g: (i // g, ki, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda i, qi, ki, g=g: (i // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda i, qi, ki: (i, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, dh), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, dh)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused flash-decoding (one-token attention vs cache).
+
+The decode roofline (EXPERIMENTS.md §3/§4 cell D) is memory-bound on KV
+cache reads; the XLA lowering additionally materializes f32 score rows
+per block. This kernel streams the cache through VMEM once per token:
+
+    grid = (B * Hkv, S / bs)
+
+Each step loads a (bs, D) K/V block for one (batch, kv-head), computes
+the (G, bs) score tile for the GQA group of G query heads against it,
+and maintains the running (max, sum, acc) in VMEM scratch — the
+flash-decoding inner loop. Cache positions >= length are masked.
+
+Validated in interpret mode against models/attention.decode_attention
+(tests/test_kernels_decode.py). On a real TPU pass interpret=False; the
+seq-sharded (flash-decoding) merge across shards composes outside the
+kernel exactly as the XLA path does.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_decode_kernel", "flash_decode"]
+
+NEG_INF = -1e30
+
+
+def flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, scale: float, bs: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    blk_lo = si * bs
+
+    @pl.when(blk_lo < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (G, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bs, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos = blk_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot_general(
+                            p, v_ref[0].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(si == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 length, *, bs: int = 256, interpret: bool = True
+                 ) -> jax.Array:
+    """q (B, 1, H, D); k/v_cache (B, S, Hkv, D); length scalar int32 count
+    of valid cache rows. Returns (B, 1, H, D). S % bs == 0."""
+    b, _, h, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    assert h % hkv == 0 and s % bs == 0, (q.shape, k_cache.shape, bs)
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    # (B*Hkv, G/ bs, D) layouts: one grid row per (batch, kv head)
+    qf = q.reshape(b, hkv, g, d).reshape(b * hkv, g, d)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    len_arr = jnp.full((1, 1), length, jnp.int32)
+
+    grid = (b * hkv, s // bs)
+    kern = functools.partial(flash_decode_kernel, scale=scale, bs=bs)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, si: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, d), lambda i, si: (i, 0, 0)),
+            pl.BlockSpec((1, bs, d), lambda i, si: (i, si, 0)),
+            pl.BlockSpec((1, bs, d), lambda i, si: (i, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda i, si: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, d), jnp.float32)],
+        interpret=interpret,
+    )(len_arr, qf, kf, vf)
+    return out.reshape(b, 1, h, d)

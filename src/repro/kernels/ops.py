@@ -1,0 +1,76 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``photonic_matmul(x, w)`` is the drop-in float API: it quantizes (absmax,
+symmetric — core/quant.py), pads to kernel block multiples, runs the int8
+kernel and dequantizes. ``fused_attention`` exposes the flash kernel with
+the models/attention.py calling convention (B, S, H, D).
+
+Both take ``interpret=`` so tests run the kernel body on CPU; on a real
+TPU deployment set interpret=False (config flag ``use_pallas``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.photonic_matmul import photonic_matmul_int8
+
+__all__ = ["photonic_matmul", "fused_attention", "flash_decode"]
+
+
+def _pad_to(x, mult, axis):
+    r = (-x.shape[axis]) % mult
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, r)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk",
+                                             "interpret"))
+def photonic_matmul(x: jax.Array, w: jax.Array, *, bits: int = 8,
+                    bm: int = 128, bn: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """Float API: quantize -> photonic int8 kernel -> dequantize.
+
+    x (..., K) any float dtype; w (K, N). Returns (..., N) f32.
+    """
+    lead = x.shape[:-1]
+    k, n = w.shape
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    m = x2.shape[0]
+
+    sx = quant.absmax_scale(x2, bits=bits)
+    sw = quant.absmax_scale(w.astype(jnp.float32), bits=bits, axis=0)[0]
+    xq = quant.quantize(x2, sx, bits=bits)
+    wq = quant.quantize(w.astype(jnp.float32), sw[None], bits=bits)
+
+    xq = _pad_to(_pad_to(xq, bm, 0), bk, 1)
+    wq = _pad_to(_pad_to(wq, bk, 0), bn, 1)
+    swp = _pad_to(sw, bn, 0)
+    out = photonic_matmul_int8(xq, wq, sx.reshape(()), swp,
+                               bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = 128, bkv: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """models/attention.py layout: q (B, Sq, H, D); k/v (B, Skv, Hkv, D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    sq, skv = qt.shape[2], kt.shape[2]
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          bq=bq, bkv=bkv, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the numerics contracts)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["photonic_matmul_ref", "flash_attention_ref"]
+
+
+def photonic_matmul_ref(xq: jax.Array, wq: jax.Array, sx: jax.Array,
+                        sw: jax.Array) -> jax.Array:
+    """Integer-exact w8a8 matmul + dequant. xq (M,K) int8; wq (K,N) int8;
+    sx () f32; sw (N,) f32 -> (M,N) f32. Must match the Pallas kernel
+    bit-for-bit (integer accumulate is exact)."""
+    acc = jax.lax.dot_general(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * sx * sw[None, :]
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """Dense softmax attention oracle. q (B,H,Sq,D); k/v (B,Hkv,Skv,D)."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = h // hkv
+    qf = q.reshape(b, hkv, g, sq, d).astype(jnp.float32) / math.sqrt(d)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+    q_pos = jnp.arange(sq)[:, None]
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window > 0:
+        mask &= q_pos - kv_pos < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)

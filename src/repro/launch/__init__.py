@@ -1,0 +1,1 @@
+"""Launch layer: production meshes, jit step builders, dry-run, drivers."""

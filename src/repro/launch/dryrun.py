@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the host
+device count on first init); 512 placeholder CPU devices let
+``jax.make_mesh`` build the production meshes:
+
+    single-pod : (16, 16)    ("data", "model")          256 chips
+    multi-pod  : (2, 16, 16) ("pod", "data", "model")   512 chips
+
+For every cell this driver:
+  1. builds the jitted step (train_step / prefill / serve_step) with its
+     in/out shardings (launch/steps.py),
+  2. ``.lower()`` on ShapeDtypeStruct stand-ins (no allocation),
+  3. ``.compile()`` — sharding mismatches / unsupported collectives fail
+     here and are bugs in the system,
+  4. records ``compiled.memory_analysis()`` + ``compiled.cost_analysis()``
+     and the parsed per-device roofline Cost (roofline/hlo_analysis.py)
+     into a JSON artifact under --out.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh pod
+    python -m repro.launch.dryrun --all --mesh multipod
+    python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.configs.registry import all_lm_archs, get_config
+from repro.distributed.sharding import use_sharding
+from repro.launch.mesh import batch_shard_count, make_production_mesh
+from repro.launch.steps import build_cell
+from repro.models import api as model_api
+from repro.roofline.hlo_analysis import analyze_module
+from repro.roofline.report import make_row, render_table, roofline_terms
+
+
+def cell_skip_reason(cfg, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and model_api.skips_long_context(cfg):
+        return ("full-attention arch: 524k dense decode is quadratic; "
+                "long_500k runs only for ssm/hybrid (DESIGN.md §5)")
+    if shape.kind == "decode" and not model_api.supports_decode(cfg):
+        return "no decode step for this family"
+    return None
+
+
+def prepare_cfg(cfg, shape: ShapeConfig, mesh):
+    """Launch-time config resolution (mesh-dependent knobs)."""
+    kw = {}
+    if cfg.family == "moe":
+        kw["moe_groups"] = batch_shard_count(mesh)
+    if shape.kind != "train":
+        kw["remat"] = False
+    if shape.name == "long_500k" and cfg.family == "ssm":
+        # decode path: chunk config irrelevant (single-token recurrence)
+        pass
+    return cfg.with_(**kw) if kw else cfg
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, hlo_dir: str | None = None,
+             variant: str = "baseline",
+             overrides: dict | None = None) -> dict:
+    mesh_name = "multipod" if multi_pod else "pod"
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch_id)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    rec: dict = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                 "variant": variant, "kind": shape.kind,
+                 "overrides": overrides or {}}
+
+    reason = cell_skip_reason(cfg, shape)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        _write(rec, out_dir)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    cfg = prepare_cfg(cfg, shape, mesh)
+
+    t0 = time.time()
+    try:
+        with mesh, use_sharding(mesh):
+            jitted, arg_specs = build_cell(cfg, shape, mesh)
+            lowered = jitted.lower(*arg_specs)
+            t_lower = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t1
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        _write(rec, out_dir)
+        return rec
+
+    mem = compiled.memory_analysis()
+    try:
+        ca = compiled.cost_analysis() or {}
+    except Exception:
+        ca = {}
+    hlo = compiled.as_text()
+    cost = analyze_module(hlo)
+    terms = roofline_terms(cost, cfg, shape, n_dev)
+
+    mem_per_dev = None
+    if mem is not None:
+        mem_per_dev = (getattr(mem, "argument_size_in_bytes", 0)
+                       + getattr(mem, "temp_size_in_bytes", 0)
+                       + getattr(mem, "output_size_in_bytes", 0)
+                       - getattr(mem, "alias_size_in_bytes", 0))
+
+    rec.update(
+        status="ok",
+        n_devices=n_dev,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory_analysis={
+            k: int(getattr(mem, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes")} if mem else {},
+        bytes_per_device=mem_per_dev,
+        cost_analysis={k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float))},
+        parsed={"flops": cost.flops, "bytes": cost.bytes,
+                "coll_bytes": cost.coll_bytes,
+                "coll_by_op": cost.coll_by_op,
+                "bytes_by_tag": cost.bytes_by_tag},
+        roofline=terms,
+        hlo_len=len(hlo),
+    )
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        suffix = "" if variant == "baseline" else f"__{variant}"
+        fn = os.path.join(
+            hlo_dir,
+            f"{mesh_name}__{arch_id}__{shape_name}{suffix}.hlo.txt")
+        with open(fn, "w") as f:
+            f.write(hlo)
+        rec["hlo_path"] = fn
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec: dict, out_dir: str | None):
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    var = rec.get("variant", "baseline")
+    suffix = "" if var == "baseline" else f"__{var}"
+    fn = os.path.join(
+        out_dir, f"{rec['mesh']}__{rec['arch']}__{rec['shape']}{suffix}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def summarize(rec: dict) -> str:
+    if rec["status"] == "skipped":
+        return f"SKIP  {rec['arch']:<22}{rec['shape']:<12}{rec['reason'][:60]}"
+    if rec["status"] == "error":
+        return f"FAIL  {rec['arch']:<22}{rec['shape']:<12}{rec['error'][:80]}"
+    t = rec["roofline"]
+    gb = (rec.get("bytes_per_device") or 0) / 2**30
+    return (f"OK    {rec['arch']:<22}{rec['shape']:<12}"
+            f"mem/dev={gb:7.2f}GiB  "
+            f"c={t['compute_s']:.3g}s m={t['memory_s']:.3g}s "
+            f"x={t['collective_s']:.3g}s dom={t['dominant']:<10}"
+            f"compile={rec['compile_s']:.0f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="architecture id (see --list)")
+    ap.add_argument("--shape", choices=list(SHAPES), help="shape cell")
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="pod")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--hlo-dir", default=None,
+                    help="also dump compiled HLO text here")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    help="label for this run's artifacts (§Perf)")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="ArchConfig override, e.g. --set attn_p_bf16=true")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            overrides[k] = v.lower() == "true"
+        else:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                try:
+                    overrides[k] = float(v)
+                except ValueError:
+                    overrides[k] = v
+
+    if args.list:
+        for a in all_lm_archs():
+            print(a)
+        return
+
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    archs = all_lm_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    rows = []
+    for a, s, mp in cells:
+        rec = run_cell(a, s, mp, out_dir=args.out, hlo_dir=args.hlo_dir,
+                       variant=args.variant, overrides=overrides or None)
+        print(summarize(rec), flush=True)
+        if rec["status"] == "ok":
+            from repro.roofline.hlo_analysis import Cost
+            cost = Cost(rec["parsed"]["flops"], rec["parsed"]["bytes"],
+                        rec["parsed"]["coll_bytes"],
+                        rec["parsed"]["coll_by_op"])
+            rows.append(make_row(a, s, rec["mesh"], cost, rec["roofline"],
+                                 rec.get("bytes_per_device")))
+    if rows:
+        print()
+        print(render_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — critical because the dry-run
+overrides the host device count via XLA_FLAGS *before* first jax init,
+while tests/benches must keep seeing the single real CPU device.
+
+Meshes (pinned by the assignment):
+  single-pod : (16, 16)            axes ("data", "model")   = 256 chips
+  multi-pod  : (2, 16, 16)         axes ("pod", "data", "model") = 512 chips
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "batch_shard_count"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the real host devices (examples / integration tests)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_shard_count(mesh) -> int:
+    """Device count along the batch (DP) axes = pod x data."""
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n

@@ -1,0 +1,109 @@
+"""Serving driver: batched prefill + token-by-token decode on host devices.
+
+Demonstrates the inference path end to end (the dry-run lowers the same
+``serve_step``): prefill the prompt, write K/V (or recurrent state) into
+the cache, then decode tokens with the one-token step. On a production
+pod the KV cache sits seq-sharded over the "model" axis (flash-decoding);
+on the host mesh the same code path runs with whatever axes exist.
+
+Usage:
+    python -m repro.launch.serve --arch qwen2-1.5b --smoke \\
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig, smoke_variant
+from repro.configs.registry import get_config
+from repro.distributed.sharding import current_ctx, use_sharding
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_serve_step
+from repro.models import api as model_api
+from repro.models.layers import ExecPolicy
+
+__all__ = ["init_cache", "prefill_into_cache", "generate", "main"]
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    shapes, _ = model_api.cache_axes_spec(cfg, batch, seq_len)
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def prefill_into_cache(params, cache, prompt, cfg: ArchConfig,
+                       extras: dict | None = None):
+    """Sequential prefill via the decode step (correct for every family;
+    a fused prefill that emits the cache in one pass is the production
+    path — the decode-step loop keeps this driver family-agnostic)."""
+    plen = prompt.shape[1]
+    logits = None
+    for i in range(plen):
+        logits, cache = model_api.decode_fn(params, cache, prompt[:, i:i + 1],
+                                            jnp.int32(i), cfg)
+    return logits, cache
+
+
+def generate(params, cache, prompt, n_tokens: int, cfg: ArchConfig,
+             greedy: bool = True, seed: int = 0):
+    """Returns (generated (B, n_tokens) i32, tokens/s)."""
+    b, plen = prompt.shape
+    logits, cache = prefill_into_cache(params, cache, prompt, cfg)
+    step_fn = jax.jit(
+        lambda p, c, t, pos: model_api.decode_fn(p, c, t, pos, cfg))
+    out = []
+    key = jax.random.PRNGKey(seed)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for i in range(n_tokens):
+        out.append(tok)
+        logits, cache = step_fn(params, cache, tok, jnp.int32(plen + i))
+        if greedy:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits)[:, None].astype(
+                jnp.int32)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    return jnp.concatenate(out, axis=1), (b * n_tokens) / dt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    if not model_api.supports_decode(cfg):
+        raise SystemExit(f"{args.arch} has no decode step")
+
+    mesh = make_host_mesh(args.data_par, args.model_par)
+    with mesh, use_sharding(mesh):
+        key = jax.random.PRNGKey(0)
+        params = model_api.init_model(key, cfg)
+        cache = init_cache(cfg, args.batch, args.cache_len)
+        prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                    cfg.vocab, jnp.int32)
+        toks, tps = generate(params, cache, prompt, args.gen, cfg)
+    print(f"[serve] generated {toks.shape} tokens at {tps:.1f} tok/s "
+          f"(batch {args.batch})")
+    print("[serve] first sequence:", np.asarray(toks[0])[:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,269 @@
+"""jit step builders: train_step / prefill_step / serve_step per arch.
+
+This is the single place where model code, optimizer, sharding rules and
+the mesh meet. Every builder returns
+
+    (jitted_fn, arg_specs, arg_shardings)
+
+where ``arg_specs`` are ShapeDtypeStruct pytrees suitable for
+``jitted.lower(*arg_specs)`` (the dry-run path) and ``arg_shardings`` the
+matching NamedSharding pytrees (also installed as jit in_shardings).
+
+Train step semantics:
+  state = {"params", "opt": {m, v, count}, "step"}
+  * microbatch gradient accumulation: cfg.microbatch_steps k splits the
+    global batch into k sequential microbatches inside a lax.scan; grads
+    accumulate in f32 (memory policy for the 405B-scale cells),
+  * grad clip (global norm) + warmup-cosine LR + AdamW (bf16 m/v when
+    cfg.use_fp32_master is False),
+  * optional int8 gradient-compression hook (cfg-independent knob, see
+    distributed/collectives.py; measured in EXPERIMENTS.md §Perf).
+
+Serve step semantics: one token for the whole batch against a KV/state
+cache of seq_len (flash-decoding layout: KV seq sharded over "model").
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding import (ShardingCtx, named_sharding,
+                                        use_sharding)
+from repro.models import api as model_api
+from repro.models.layers import ExecPolicy
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, warmup_cosine)
+
+__all__ = ["abstract_params", "abstract_state", "state_logical_axes",
+           "tree_shardings", "tree_specs", "batch_arg_specs",
+           "make_train_step", "make_prefill_step", "make_serve_step",
+           "build_cell"]
+
+
+# --------------------------------------------------------------------------
+# abstract state + shardings
+# --------------------------------------------------------------------------
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: model_api.init_model(key, cfg, dtype)
+                          if cfg.family != "vit"
+                          else model_api.init_model(key, cfg))
+
+
+def abstract_state(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the full train state."""
+    params = abstract_params(cfg, dtype)
+    ocfg = AdamWConfig(low_mem=not cfg.use_fp32_master)
+    opt = jax.eval_shape(lambda: adamw_init(
+        jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), params),
+        ocfg))
+    return {"params": params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def state_logical_axes(cfg: ArchConfig):
+    """Logical-axis pytree matching abstract_state (opt m/v mirror params)."""
+    pax = model_api.model_logical_axes(cfg)
+    return {"params": pax, "opt": {"m": pax, "v": pax, "count": ()},
+            "step": ()}
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple)
+
+
+def tree_shardings(axes_tree, shape_tree, ctx: ShardingCtx):
+    """NamedSharding pytree from (logical axes, ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map(
+        lambda ax, s: named_sharding(s.shape, ax, ctx),
+        axes_tree, shape_tree, is_leaf=_is_axes_leaf)
+
+
+def tree_specs(shape_tree, sharding_tree):
+    """Attach shardings onto ShapeDtypeStructs (dry-run input stand-ins)."""
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shape_tree, sharding_tree)
+
+
+def batch_arg_specs(cfg: ArchConfig, shape: ShapeConfig, ctx: ShardingCtx):
+    """(specs, shardings) dicts for the batch of one cell."""
+    raw = model_api.batch_specs(cfg, shape)
+    specs, shards = {}, {}
+    for k, (shp, dt, axes) in raw.items():
+        ns = named_sharding(shp, axes, ctx)
+        shards[k] = ns
+        specs[k] = jax.ShapeDtypeStruct(shp, dt, sharding=ns)
+    return specs, shards
+
+
+# --------------------------------------------------------------------------
+# train step
+# --------------------------------------------------------------------------
+
+def make_train_fn(cfg: ArchConfig, grad_compression: bool = False):
+    """Pure train_step(state, batch) -> (state, metrics). Not yet jitted."""
+    ocfg = AdamWConfig(low_mem=not cfg.use_fp32_master)
+    policy = ExecPolicy.from_cfg(cfg, training=True)
+    k = max(cfg.microbatch_steps, 1)
+
+    def loss(params, batch):
+        return model_api.loss_fn(params, batch, cfg, policy)
+
+    def grads_of(params, batch):
+        if k == 1:
+            return jax.value_and_grad(loss)(params, batch)
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch)
+        acc_dt = jnp.bfloat16 if cfg.grad_accum_dtype == "bf16" \
+            else jnp.float32
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+        def body(acc, mb):
+            l_acc, g_acc = acc
+            l, g = jax.value_and_grad(loss)(params, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(acc_dt), g_acc, g)
+            return (l_acc + l, g_acc), None
+
+        (l_sum, g_sum), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), micro)
+        g = jax.tree_util.tree_map(lambda x: (x / k), g_sum)
+        return l_sum / k, g
+
+    def train_step(state, batch):
+        params = state["params"]
+        l, g = grads_of(params, batch)
+        g, gnorm = clip_by_global_norm(g, 1.0)
+        # step counts *completed* steps; warmup_cosine(0) == 0 would make
+        # the first step a no-op, so schedule on step + 1.
+        lr = warmup_cosine(state["step"] + 1, warmup=cfg.lr_warmup,
+                           total=cfg.lr_total)
+        new_params, new_opt = adamw_update(g, state["opt"], params, ocfg, lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": l, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_train_step(cfg: ArchConfig, shape: ShapeConfig, ctx: ShardingCtx,
+                    donate: bool = True):
+    """Returns (jitted_step, (state_specs, batch_specs))."""
+    st_abs = abstract_state(cfg)
+    st_ax = state_logical_axes(cfg)
+    st_sh = tree_shardings(st_ax, st_abs, ctx)
+    st_specs = tree_specs(st_abs, st_sh)
+    b_specs, b_sh = batch_arg_specs(cfg, shape, ctx)
+
+    rep = NamedSharding(ctx.mesh, P())
+    fn = make_train_fn(cfg)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(st_sh, b_sh),
+        out_shardings=(st_sh, {"loss": rep, "grad_norm": rep}),
+        donate_argnums=(0,) if donate else ())
+    return jitted, (st_specs, b_specs)
+
+
+# --------------------------------------------------------------------------
+# prefill step
+# --------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig, shape: ShapeConfig, ctx: ShardingCtx):
+    """Returns (jitted_prefill, (param_specs, batch_specs))."""
+    p_abs = abstract_params(cfg)
+    p_ax = model_api.model_logical_axes(cfg)
+    p_sh = tree_shardings(p_ax, p_abs, ctx)
+    p_specs = tree_specs(p_abs, p_sh)
+    b_specs, b_sh = batch_arg_specs(cfg, shape, ctx)
+
+    policy = ExecPolicy.from_cfg(cfg, training=False)
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vit":
+        logits_sh = named_sharding((b, 1000), ("batch", None), ctx)
+    else:
+        # logical_spec applies the divisibility fallback (odd vocabs like
+        # 50280 / tiny batches replicate instead of erroring)
+        logits_sh = named_sharding((b, s, cfg.vocab),
+                                   ("batch", "seq", "vocab"), ctx)
+
+    def prefill(params, batch):
+        return model_api.prefill_fn(params, batch, cfg, policy)
+
+    jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh),
+                     out_shardings=logits_sh)
+    return jitted, (p_specs, b_specs)
+
+
+# --------------------------------------------------------------------------
+# serve (decode) step
+# --------------------------------------------------------------------------
+
+def make_serve_step(cfg: ArchConfig, shape: ShapeConfig, ctx: ShardingCtx,
+                    donate: bool = True):
+    """One-token decode against a seq_len cache.
+
+    Returns (jitted_step, (param_specs, cache_specs, token_specs, pos_spec)).
+    """
+    p_abs = abstract_params(cfg)
+    p_ax = model_api.model_logical_axes(cfg)
+    p_sh = tree_shardings(p_ax, p_abs, ctx)
+    p_specs = tree_specs(p_abs, p_sh)
+
+    shapes, axes = model_api.cache_axes_spec(cfg, shape.global_batch,
+                                             shape.seq_len)
+    c_sh = {k: named_sharding(shp, axes[k], ctx)
+            for k, (shp, dt) in shapes.items()}
+    c_specs = {k: jax.ShapeDtypeStruct(shp, dt, sharding=c_sh[k])
+               for k, (shp, dt) in shapes.items()}
+
+    t_sh = named_sharding((shape.global_batch, 1),
+                          model_api.BATCH_AXES["decode_tokens"], ctx)
+    t_spec = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32,
+                                  sharding=t_sh)
+    rep = NamedSharding(ctx.mesh, P())
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+
+    policy = ExecPolicy.from_cfg(cfg, training=False)
+    logits_sh = named_sharding((shape.global_batch, cfg.vocab),
+                               ("batch", "vocab"), ctx)
+
+    def serve_step(params, cache, tokens, pos):
+        return model_api.decode_fn(params, cache, tokens, pos, cfg, policy)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_sh, c_sh, t_sh, rep),
+                     out_shardings=(logits_sh, c_sh),
+                     donate_argnums=(1,) if donate else ())
+    return jitted, (p_specs, c_specs, t_spec, pos_spec)
+
+
+# --------------------------------------------------------------------------
+# one-call cell builder (dry-run entry)
+# --------------------------------------------------------------------------
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+               grad_compression: bool = False):
+    """Build the jitted step + arg specs for one (arch x shape) cell.
+
+    Must be called inside ``with mesh, use_sharding(mesh):`` — the model
+    code's shard() annotations read the ambient context at trace time.
+    """
+    from repro.distributed.sharding import current_ctx
+    ctx = current_ctx()
+    assert ctx is not None, "build_cell requires an active use_sharding ctx"
+    if shape.kind == "train":
+        return make_train_step(cfg, shape, ctx)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape, ctx)
+    if shape.kind == "decode":
+        return make_serve_step(cfg, shape, ctx)
+    raise ValueError(shape.kind)

@@ -1,0 +1,1 @@
+"""Model substrate: composable JAX model definitions for all families."""

@@ -1,0 +1,197 @@
+"""Family-dispatch model API: one uniform surface for the launch layer.
+
+Every architecture family exposes the same five entry points here:
+
+    init_model(key, cfg)            -> params pytree
+    model_logical_axes(cfg)         -> logical-axis pytree (matches params)
+    loss_fn(params, batch, cfg)     -> scalar loss          (train shapes)
+    prefill_fn(params, batch, cfg)  -> logits               (prefill shapes)
+    decode_fn(params, cache, tokens, pos, cfg) -> (logits, cache)  (decode)
+
+plus the input plumbing the dry-run needs:
+
+    batch_specs(cfg, shape_cfg)     -> {name: (shape, dtype, logical_axes)}
+    cache_axes_spec(cfg, b, s)      -> ({name: (shape, dtype)}, {name: axes})
+
+Batches are dicts; the per-family key sets are:
+    dense/moe/ssm/hybrid : tokens, labels
+    encdec (whisper)     : frames (stub embeddings), tokens, labels
+    vlm                  : img_embeds (stub embeddings), tokens, labels
+    vit                  : images, labels
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec as ed_mod
+from repro.models import transformer as tf_mod
+from repro.models import vit as vit_mod
+from repro.models import vlm as vlm_mod
+from repro.models.layers import ExecPolicy
+
+__all__ = ["init_model", "model_logical_axes", "loss_fn", "prefill_fn",
+           "decode_fn", "batch_specs", "cache_axes_spec", "supports_decode",
+           "skips_long_context", "BATCH_AXES"]
+
+_LM_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+# logical axes of every batch key (rank must match the array)
+BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "frames": ("batch", "seq", None),
+    "img_embeds": ("batch", None, None),
+    "images": ("batch", None, None, None),
+    "decode_tokens": ("batch", None),
+}
+
+
+def init_model(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    if cfg.family in _LM_FAMILIES:
+        return tf_mod.init_lm(key, cfg, dtype)
+    if cfg.family == "encdec":
+        return ed_mod.init_encdec(key, cfg, dtype)
+    if cfg.family == "vlm":
+        return vlm_mod.init_vlm(key, cfg, dtype)
+    if cfg.family == "vit":
+        return vit_mod.init_vit(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def model_logical_axes(cfg: ArchConfig):
+    if cfg.family in _LM_FAMILIES:
+        return tf_mod.lm_logical_axes(cfg)
+    if cfg.family == "encdec":
+        return ed_mod.encdec_logical_axes(cfg)
+    if cfg.family == "vlm":
+        return vlm_mod.vlm_logical_axes(cfg)
+    if cfg.family == "vit":
+        return vit_mod.vit_logical_axes(cfg)
+    raise ValueError(cfg.family)
+
+
+def _xent(logits, labels):
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def loss_fn(params, batch, cfg: ArchConfig,
+            policy: ExecPolicy | None = None) -> jnp.ndarray:
+    fam = cfg.family
+    if fam in _LM_FAMILIES:
+        return tf_mod.lm_loss(params, batch, cfg, policy)
+    if fam == "encdec":
+        logits, _ = ed_mod.forward_encdec(params, batch["frames"],
+                                          batch["tokens"], cfg, policy)
+        return _xent(logits, batch["labels"])
+    if fam == "vlm":
+        logits, _ = vlm_mod.forward_vlm(params, batch["tokens"],
+                                        batch["img_embeds"], cfg, policy)
+        return _xent(logits, batch["labels"])
+    if fam == "vit":
+        logits, _ = vit_mod.forward_vit(params, batch["images"], cfg, policy)
+        return _xent(logits, batch["labels"])
+    raise ValueError(fam)
+
+
+def prefill_fn(params, batch, cfg: ArchConfig,
+               policy: ExecPolicy | None = None):
+    """Inference forward over the full prompt (logits out)."""
+    fam = cfg.family
+    policy = policy or ExecPolicy.from_cfg(cfg, training=False)
+    if fam in _LM_FAMILIES:
+        logits, _ = tf_mod.forward_lm(params, batch["tokens"], cfg, policy)
+        return logits
+    if fam == "encdec":
+        logits, _ = ed_mod.forward_encdec(params, batch["frames"],
+                                          batch["tokens"], cfg, policy)
+        return logits
+    if fam == "vlm":
+        logits, _ = vlm_mod.forward_vlm(params, batch["tokens"],
+                                        batch["img_embeds"], cfg, policy)
+        return logits
+    if fam == "vit":
+        logits, _ = vit_mod.forward_vit(params, batch["images"], cfg, policy)
+        return logits
+    raise ValueError(fam)
+
+
+def decode_fn(params, cache, tokens, pos, cfg: ArchConfig,
+              policy: ExecPolicy | None = None):
+    fam = cfg.family
+    policy = policy or ExecPolicy.from_cfg(cfg, training=False)
+    if fam in _LM_FAMILIES:
+        return tf_mod.decode_step(params, cache, tokens, pos, cfg, policy)
+    if fam == "encdec":
+        return ed_mod.decode_step_encdec(params, cache, tokens, pos, cfg,
+                                         policy)
+    if fam == "vlm":
+        return vlm_mod.decode_step_vlm(params, cache, tokens, pos, cfg,
+                                       policy)
+    raise ValueError(f"{fam} has no decode step")
+
+
+def supports_decode(cfg: ArchConfig) -> bool:
+    return cfg.family != "vit"
+
+
+def skips_long_context(cfg: ArchConfig) -> bool:
+    """long_500k runs only for sub-quadratic archs (SSM / hybrid window
+    attention). Full-attention archs skip — see DESIGN.md §5."""
+    return cfg.family not in ("ssm", "hybrid")
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """{key: (shape_tuple, dtype, logical_axes)} for the given cell.
+
+    decode kinds describe the *single-token step* inputs (the cache is
+    produced separately via ``cache_axes_spec``).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    fam = cfg.family
+    if shape.kind == "decode":
+        return {"tokens": ((b, 1), jnp.int32, BATCH_AXES["decode_tokens"])}
+
+    out: dict = {}
+    if fam in _LM_FAMILIES:
+        out["tokens"] = ((b, s), jnp.int32, BATCH_AXES["tokens"])
+    elif fam == "encdec":
+        dfr = cfg.d_frontend or cfg.d_model
+        out["frames"] = ((b, cfg.enc_frames, dfr), jnp.float32,
+                         BATCH_AXES["frames"])
+        out["tokens"] = ((b, s), jnp.int32, BATCH_AXES["tokens"])
+    elif fam == "vlm":
+        dfr = cfg.d_frontend or cfg.d_model
+        out["img_embeds"] = ((b, cfg.n_img_tokens, dfr), jnp.float32,
+                             BATCH_AXES["img_embeds"])
+        out["tokens"] = ((b, s), jnp.int32, BATCH_AXES["tokens"])
+    elif fam == "vit":
+        out["images"] = ((b, cfg.img_size, cfg.img_size, 3), jnp.float32,
+                         BATCH_AXES["images"])
+    else:
+        raise ValueError(fam)
+
+    if shape.kind == "train":
+        if fam == "vit":
+            out["labels"] = ((b,), jnp.int32, ("batch",))
+        else:
+            out["labels"] = ((b, s), jnp.int32, BATCH_AXES["labels"])
+    return out
+
+
+def cache_axes_spec(cfg: ArchConfig, batch: int, seq_len: int,
+                    dtype=jnp.bfloat16):
+    """(shapes {name: (shape, dtype)}, axes {name: logical_axes})."""
+    fam = cfg.family
+    if fam in _LM_FAMILIES:
+        return tf_mod.cache_spec(cfg, batch, seq_len, dtype)
+    if fam == "encdec":
+        return ed_mod.encdec_cache_spec(cfg, batch, seq_len, dtype)
+    if fam == "vlm":
+        return vlm_mod.vlm_cache_spec(cfg, batch, seq_len, dtype)
+    raise ValueError(f"{fam} has no decode cache")

@@ -1,0 +1,269 @@
+"""Attention: GQA blockwise-flash (train/prefill) + cache decode.
+
+Design notes
+------------
+* ``blockwise_attention`` is a pure-XLA flash attention: it scans KV blocks
+  with a running (max, sum, acc) accumulator so the (S, S) score matrix is
+  never materialized — required for the 32k prefill shapes. A Pallas TPU
+  kernel with the same contract lives in kernels/flash_attention.py; the
+  XLA version is what the CPU dry-run lowers (kernels cannot compile for
+  the TPU target on this host) and doubles as the oracle.
+* Causal masking over a KV-block scan wastes ~2x score FLOPs (fully-masked
+  blocks are still computed). With ``causal_block_skip`` the scan switches
+  to a q-block x kv-block double scan whose body skips fully-masked blocks
+  via lax.cond — a roofline hillclimb knob (see EXPERIMENTS.md §Perf).
+* Decode attention runs over a seq-sharded KV cache (logical axis "kv_seq"
+  -> mesh "model"); the softmax over the sharded axis lowers to the
+  flash-decoding partial-merge collectives under GSPMD (verified in the
+  dry-run HLO: KB-scale all-reduces, no cache all-gather).
+* ``decomposed=True`` applies paper Eq. 2: scores = (Q W_K^T/sqrt(d)) X^T.
+  Blockwise structure is unchanged — "K" becomes X and Q is pre-multiplied
+  by W_K^T (exact-equivalence tested in tests/test_decomposition.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+__all__ = ["blockwise_attention", "full_attention", "decode_attention",
+           "update_kv_cache"]
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, kv_pos, causal: bool, window: int) -> jnp.ndarray:
+    """(…q, …kv) additive mask bias in f32. window>0 = local attention."""
+    m = jnp.ones(q_pos.shape + kv_pos.shape, jnp.bool_)
+    if causal:
+        m &= q_pos[..., None] >= kv_pos[None, ...]
+    if window > 0:
+        m &= q_pos[..., None] - kv_pos[None, ...] < window
+    return jnp.where(m, 0.0, NEG_INF)
+
+
+def full_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Reference attention materializing scores. q: (B,Sq,H,D); k/v:
+    (B,Skv,Hkv,D). GQA by head-group broadcast. Returns (B,Sq,H,D)."""
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    qf = q.reshape(b, sq, hkv, g, d).astype(jnp.float32) / math.sqrt(d)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf)
+    q_pos = q_offset + jnp.arange(sq)
+    kv_pos = jnp.arange(skv)
+    s = s + _mask_bias(q_pos, kv_pos, causal, window)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def _flash_scan_kv(q, k, v, q_pos, causal, window, block_kv,
+                   p_bf16=False, qk_bf16=False):
+    """Inner flash loop: scan over KV blocks, vectorized over all Q.
+
+    q: (B, Sq, Hkv, G, D) pre-scaled; k/v: (B, Skv, Hkv, D).
+    Returns (B, Sq, Hkv, G, D) f32 accumulator output (unnormalized merge
+    already applied)."""
+    b, sq, hkv, g, d = q.shape
+    skv = k.shape[1]
+    nkv = skv // block_kv
+    kb = k.reshape(b, nkv, block_kv, hkv, d)
+    vb = v.reshape(b, nkv, block_kv, hkv, d)
+
+    m0 = jnp.full((b, sq, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, hkv, g, d), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, kv_base = xs
+        kv_pos = kv_base + jnp.arange(block_kv)
+        if qk_bf16:
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", q.astype(jnp.bfloat16),
+                           kblk.astype(jnp.bfloat16),
+                           preferred_element_type=jnp.float32)
+        else:
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", q,
+                           kblk.astype(jnp.float32))
+        bias = _mask_bias(q_pos, kv_pos, causal, window)      # (Sq, bkv)
+        s = s + bias[None, :, None, None, :]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        if p_bf16:
+            # probs+V in bf16 for the PV matmul; running stats stay f32.
+            pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(jnp.bfloat16),
+                            vblk.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bqhgk,bkhd->bqhgd", p,
+                            vblk.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    kv_bases = jnp.arange(nkv) * block_kv
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kv_bases))
+    return acc / jnp.maximum(l[..., None], 1e-30)
+
+
+def _flash_double_scan(q, k, v, q_offset, causal, window, block_q,
+                       block_kv, p_bf16=False, qk_bf16=False):
+    """Double scan (q-blocks outer, kv-blocks inner) with lax.cond skip of
+    fully-masked causal blocks — halves score FLOPs at long seq."""
+    b, sq, hkv, g, d = q.shape
+    skv = k.shape[1]
+    nq, nkv = sq // block_q, skv // block_kv
+    qb = jnp.moveaxis(q.reshape(b, nq, block_q, hkv, g, d), 1, 0)
+    kb = jnp.moveaxis(k.reshape(b, nkv, block_kv, hkv, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nkv, block_kv, hkv, d), 1, 0)
+
+    def q_step(_, qi_qblk):
+        qi, qblk = qi_qblk
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+        m0 = jnp.full((b, block_q, hkv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, block_q, hkv, g), jnp.float32)
+        a0 = jnp.zeros((b, block_q, hkv, g, d), jnp.float32)
+
+        def kv_step(carry, kj_blk):
+            kj, kblk, vblk = kj_blk
+            kv_lo = kj * block_kv
+
+            def compute(c):
+                m, l, acc = c
+                kv_pos = kv_lo + jnp.arange(block_kv)
+                if qk_bf16:
+                    s = jnp.einsum("bqhgd,bkhd->bqhgk",
+                                   qblk.astype(jnp.bfloat16),
+                                   kblk.astype(jnp.bfloat16),
+                                   preferred_element_type=jnp.float32)
+                else:
+                    s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk,
+                                   kblk.astype(jnp.float32))
+                bias = _mask_bias(q_pos, kv_pos, causal, window)
+                s = s + bias[None, :, None, None, :]
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                alpha = jnp.exp(m - m_new)
+                p = jnp.exp(s - m_new[..., None])
+                if p_bf16:
+                    pv = jnp.einsum("bqhgk,bkhd->bqhgd",
+                                    p.astype(jnp.bfloat16),
+                                    vblk.astype(jnp.bfloat16),
+                                    preferred_element_type=jnp.float32)
+                else:
+                    pv = jnp.einsum("bqhgk,bkhd->bqhgd", p,
+                                    vblk.astype(jnp.float32))
+                return (m_new, l * alpha + p.sum(-1),
+                        acc * alpha[..., None] + pv)
+
+            # skip iff every kv position in the block is masked for every q
+            # position of this q block (causal: kv_lo > last q pos; window:
+            # kv block entirely left of the window).
+            live = jnp.asarray(True)
+            if causal:
+                live &= kv_lo <= q_pos[-1]
+            if window > 0:
+                live &= (kv_lo + block_kv - 1) > (q_pos[0] - window)
+            return jax.lax.cond(live, compute, lambda c: c, carry), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nkv), kb, vb))
+        return None, acc / jnp.maximum(l[..., None], 1e-30)
+
+    _, out = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, hkv, g, d)
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                        block_q=512, block_kv=1024, block_skip=False,
+                        p_bf16=False, qk_bf16=False):
+    """Flash attention (XLA). q: (B,Sq,H,D); k/v: (B,Skv,Hkv,D) -> (B,Sq,H,D).
+
+    Falls back to ``full_attention`` when the sequence is shorter than one
+    block (smoke-test shapes). The whole region is wrapped in a
+    ``named_scope`` so the roofline analyzer can attribute its HBM traffic
+    (the fused Pallas kernel keeps these tensors in VMEM on real TPU)."""
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    if sq % block_q or skv % block_kv or skv <= block_kv:
+        with jax.named_scope("full_attn"):
+            return full_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset)
+    g = h // hkv
+    with jax.named_scope("flash_attn"):
+        qs = (q.reshape(b, sq, hkv, g, d).astype(jnp.float32) / math.sqrt(d))
+        if block_skip:
+            out = _flash_double_scan(qs, k, v, q_offset, causal, window,
+                                     block_q, block_kv, p_bf16=p_bf16,
+                                     qk_bf16=qk_bf16)
+        else:
+            q_pos = q_offset + jnp.arange(sq)
+            out = _flash_scan_kv(qs, k, v, q_pos, causal, window, block_kv,
+                                 p_bf16=p_bf16, qk_bf16=qk_bf16)
+        return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window=0,
+                     bf16_compute=False):
+    """One-token attention against a (possibly seq-sharded) KV cache.
+
+    q: (B, 1, H, D); k/v_cache: (B, S, Hkv, D); length: scalar count of valid
+    cache entries (the new token's K/V must already be written at
+    ``length - 1``). Softmax/max/sum over the sharded S axis lower to the
+    flash-decoding merge collectives under GSPMD.
+
+    bf16_compute: read the cache in its storage dtype with f32 dot
+    accumulation. Without it the operand f32 casts make XLA materialize
+    an f32 copy of the WHOLE cache inside the layer loop (verified in the
+    dry-run HLO — 2x footprint + full-cache convert traffic per layer).
+    """
+    b, _, h, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = h // hkv
+    with jax.named_scope("decode_attn"):
+        if bf16_compute:
+            qb = (q.reshape(b, hkv, g, d) / math.sqrt(d)).astype(
+                k_cache.dtype)
+            scores = jnp.einsum("bhgd,bshd->bhgs", qb, k_cache,
+                                preferred_element_type=jnp.float32)
+        else:
+            qf = q.reshape(b, hkv, g, d).astype(jnp.float32) / math.sqrt(d)
+            scores = jnp.einsum("bhgd,bshd->bhgs", qf,
+                                k_cache.astype(jnp.float32))
+        pos = jnp.arange(s)
+        valid = pos < length
+        if window > 0:
+            valid &= pos >= length - window
+        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        # explicit stable softmax (keeps the sharded-axis reductions obvious)
+        m = scores.max(axis=-1, keepdims=True)
+        p = jnp.exp(scores - m)
+        l = p.sum(axis=-1, keepdims=True)
+        if bf16_compute:
+            o = jnp.einsum("bhgs,bshd->bhgd", p.astype(k_cache.dtype),
+                           v_cache, preferred_element_type=jnp.float32)
+            o = o / l[..., 0, None]
+        else:
+            o = jnp.einsum("bhgs,bshd->bhgd",
+                           p, v_cache.astype(jnp.float32)) / l[..., 0, None]
+        return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def update_kv_cache(k_cache, v_cache, k_new, v_new, pos):
+    """Write the new token's K/V at ``pos``. Caches (B,S,Hkv,D); new
+    (B,1,Hkv,D). GSPMD turns the dynamic-update-slice on a sharded S axis
+    into a masked local write."""
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    return k_cache, v_cache

@@ -1,0 +1,202 @@
+"""Encoder-decoder transformer (Whisper-style backbone).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, enc_frames, d_frontend). The encoder is a
+bidirectional transformer over frames (learned positional embedding); the
+decoder is causal with cross-attention to the encoder output every layer.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import ffn as ffn_mod
+from repro.models.attention import (blockwise_attention, decode_attention,
+                                    full_attention, update_kv_cache)
+from repro.models.layers import (ExecPolicy, apply_rope, embedding_lookup,
+                                 he_init, linear, rmsnorm, rope)
+from repro.models.transformer import (attention_logical_axes, attn_decode,
+                                      attn_forward, init_attention)
+
+__all__ = ["init_encdec", "encdec_logical_axes", "forward_encdec",
+           "encode", "encdec_cache_spec", "decode_step_encdec"]
+
+
+def _init_cross(key, cfg, dtype):
+    return init_attention(key, cfg, dtype)
+
+
+def init_encdec(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    dfr = cfg.d_frontend or d
+    ks = jax.random.split(key, 8)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": jnp.ones((d,), dtype),
+                "attn": init_attention(k1, cfg, dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "ffn": ffn_mod.init_mlp(k2, d, cfg.d_ff, dtype)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": jnp.ones((d,), dtype),
+                "attn": init_attention(k1, cfg, dtype),
+                "lnx": jnp.ones((d,), dtype),
+                "xattn": _init_cross(k2, cfg, dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "ffn": ffn_mod.init_mlp(k3, d, cfg.d_ff, dtype)}
+
+    return {
+        "frontend_proj": he_init(ks[0], (dfr, d), dtype),
+        "enc_pos": (jax.random.normal(ks[1], (cfg.enc_frames, d), jnp.float32)
+                    * 0.02).astype(dtype),
+        "enc_blocks": jax.vmap(enc_layer)(jax.random.split(ks[2], cfg.enc_layers)),
+        "enc_ln": jnp.ones((d,), dtype),
+        "embed": (jax.random.normal(ks[3], (cfg.vocab, d), jnp.float32)
+                  * 0.02).astype(dtype),
+        "dec_blocks": jax.vmap(dec_layer)(jax.random.split(ks[4], cfg.n_layers)),
+        "final_ln": jnp.ones((d,), dtype),
+        "lm_head": he_init(ks[5], (d, cfg.vocab), dtype),
+    }
+
+
+def encdec_logical_axes(cfg: ArchConfig) -> dict:
+    from repro.models.transformer import _tree_prepend_axis
+    enc_l = {"ln1": (None,), "attn": attention_logical_axes(cfg),
+             "ln2": (None,), "ffn": ffn_mod.mlp_logical_axes()}
+    dec_l = {"ln1": (None,), "attn": attention_logical_axes(cfg),
+             "lnx": (None,), "xattn": attention_logical_axes(cfg),
+             "ln2": (None,), "ffn": ffn_mod.mlp_logical_axes()}
+    return {"frontend_proj": (None, "p_embed"),
+            "enc_pos": (None, "p_embed"),
+            "enc_blocks": _tree_prepend_axis(enc_l),
+            "enc_ln": (None,),
+            "embed": ("p_vocab", "p_embed"),
+            "dec_blocks": _tree_prepend_axis(dec_l),
+            "final_ln": (None,),
+            "lm_head": ("p_embed", "p_vocab")}
+
+
+def _cross_attn(p, x, enc_kv, cfg, policy):
+    """Cross attention: q from x, k/v precomputed from encoder output."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = linear(x, p["wq"], p.get("bq"), policy).reshape(b, s, h, hd)
+    k, v = enc_kv
+    o = full_attention(q, k, v, causal=False)
+    return linear(o.reshape(b, s, h * hd), p["wo"], policy=policy)
+
+
+def _enc_kv(p, enc_out, cfg, policy):
+    b, t, _ = enc_out.shape
+    hkv, hd = cfg.kv_heads, cfg.head_dim
+    k = linear(enc_out, p["wk"], p.get("bk"), policy).reshape(b, t, hkv, hd)
+    v = linear(enc_out, p["wv"], p.get("bv"), policy).reshape(b, t, hkv, hd)
+    return k, v
+
+
+def encode(params: dict, frames: jnp.ndarray, cfg: ArchConfig,
+           policy: ExecPolicy | None = None) -> jnp.ndarray:
+    """frames (B, T, d_frontend) -> encoder states (B, T, d)."""
+    policy = policy or ExecPolicy.from_cfg(cfg)
+    x = linear(frames, params["frontend_proj"], policy=policy)
+    x = x + params["enc_pos"][None, : x.shape[1]]
+    x = shard(x, "batch", "seq", "embed")
+
+    def body(carry, lp):
+        h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
+        b, s, _ = h.shape
+        hh, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+        q = linear(h, lp["attn"]["wq"], lp["attn"].get("bq"), policy) \
+            .reshape(b, s, hh, hd)
+        k = linear(h, lp["attn"]["wk"], lp["attn"].get("bk"), policy) \
+            .reshape(b, s, hkv, hd)
+        v = linear(h, lp["attn"]["wv"], lp["attn"].get("bv"), policy) \
+            .reshape(b, s, hkv, hd)
+        o = blockwise_attention(q, k, v, causal=False,
+                                block_q=cfg.attn_block_q,
+                                block_kv=cfg.attn_block_kv)
+        carry = carry + linear(o.reshape(b, s, hh * hd), lp["attn"]["wo"],
+                               policy=policy)
+        carry = carry + ffn_mod.mlp(lp["ffn"],
+                                    rmsnorm(carry, lp["ln2"], cfg.norm_eps),
+                                    policy)
+        return shard(carry, "batch", "seq", "embed"), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+    return rmsnorm(x, params["enc_ln"], cfg.norm_eps)
+
+
+def forward_encdec(params: dict, frames: jnp.ndarray, tokens: jnp.ndarray,
+                   cfg: ArchConfig, policy: ExecPolicy | None = None):
+    """Train/prefill forward. Returns (logits (B, S, V), aux=0)."""
+    policy = policy or ExecPolicy.from_cfg(cfg)
+    enc_out = encode(params, frames, cfg, policy)
+    x = embedding_lookup(params["embed"], tokens)
+    x = shard(x, "batch", "seq", "embed")
+
+    def body(carry, lp):
+        h, _ = attn_forward(lp["attn"], rmsnorm(carry, lp["ln1"], cfg.norm_eps),
+                            cfg, policy)
+        carry = carry + h
+        kv = _enc_kv(lp["xattn"], enc_out, cfg, policy)
+        carry = carry + _cross_attn(lp["xattn"],
+                                    rmsnorm(carry, lp["lnx"], cfg.norm_eps),
+                                    kv, cfg, policy)
+        carry = carry + ffn_mod.mlp(lp["ffn"],
+                                    rmsnorm(carry, lp["ln2"], cfg.norm_eps),
+                                    policy)
+        return shard(carry, "batch", "seq", "embed"), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["dec_blocks"])
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = linear(x, params["lm_head"], policy=policy)
+    return shard(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def encdec_cache_spec(cfg: ArchConfig, batch: int, seq_len: int,
+                      dtype=jnp.bfloat16):
+    hkv, hd = cfg.kv_heads, cfg.head_dim
+    n_l, t = cfg.n_layers, cfg.enc_frames
+    shapes = {"k": ((n_l, batch, seq_len, hkv, hd), dtype),
+              "v": ((n_l, batch, seq_len, hkv, hd), dtype),
+              "xk": ((n_l, batch, t, hkv, hd), dtype),
+              "xv": ((n_l, batch, t, hkv, hd), dtype)}
+    axes = {"k": ("p_layers", "batch", "kv_seq", None, None),
+            "v": ("p_layers", "batch", "kv_seq", None, None),
+            "xk": ("p_layers", "batch", None, None, None),
+            "xv": ("p_layers", "batch", None, None, None)}
+    return shapes, axes
+
+
+def decode_step_encdec(params: dict, cache: dict, tokens: jnp.ndarray, pos,
+                       cfg: ArchConfig, policy: ExecPolicy | None = None):
+    """Decoder-only step against self KV cache + precomputed cross KV."""
+    policy = policy or ExecPolicy.from_cfg(cfg, training=False)
+    x = embedding_lookup(params["embed"], tokens)
+
+    def body(carry, xs):
+        lp, ck, cv, xk, xv = xs
+        h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
+        o, ck, cv = attn_decode(lp["attn"], h, ck, cv, pos, cfg, policy)
+        carry = carry + o
+        hx = rmsnorm(carry, lp["lnx"], cfg.norm_eps)
+        carry = carry + _cross_attn(lp["xattn"], hx, (xk, xv), cfg, policy)
+        carry = carry + ffn_mod.mlp(lp["ffn"],
+                                    rmsnorm(carry, lp["ln2"], cfg.norm_eps),
+                                    policy)
+        return carry, (ck, cv)
+
+    x, (k2, v2) = jax.lax.scan(body, x, (params["dec_blocks"], cache["k"],
+                                         cache["v"], cache["xk"], cache["xv"]))
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = linear(x, params["lm_head"], policy=policy)[:, 0]
+    return logits, {"k": k2, "v": v2, "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,52 @@
+"""Feed-forward blocks: SwiGLU (LM default) and GELU-MLP (ViT/Whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import ExecPolicy, he_init, linear
+
+__all__ = ["init_swiglu", "swiglu", "init_mlp", "mlp",
+           "swiglu_logical_axes", "mlp_logical_axes"]
+
+
+def init_swiglu(key, d: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": he_init(k1, (d, d_ff), dtype),
+            "w_up": he_init(k2, (d, d_ff), dtype),
+            "w_down": he_init(k3, (d_ff, d), dtype)}
+
+
+def swiglu_logical_axes() -> dict:
+    return {"w_gate": ("p_embed", "p_mlp"),
+            "w_up": ("p_embed", "p_mlp"),
+            "w_down": ("p_mlp", "p_embed")}
+
+
+def swiglu(params: dict, x: jnp.ndarray, policy: ExecPolicy | None = None):
+    """x: (B, S, d) -> (B, S, d); hidden sharded on the TP axis."""
+    g = linear(x, params["w_gate"], policy=policy)
+    u = linear(x, params["w_up"], policy=policy)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "batch", "seq", "mlp")
+    return linear(h, params["w_down"], policy=policy)
+
+
+def init_mlp(key, d: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"w1": he_init(k1, (d, d_ff), dtype), "b1": jnp.zeros((d_ff,), dtype),
+            "w2": he_init(k2, (d_ff, d), dtype), "b2": jnp.zeros((d,), dtype)}
+
+
+def mlp_logical_axes() -> dict:
+    return {"w1": ("p_embed", "p_mlp"), "b1": ("p_mlp",),
+            "w2": ("p_mlp", "p_embed"), "b2": ("p_embed",)}
+
+
+def mlp(params: dict, x: jnp.ndarray, policy: ExecPolicy | None = None):
+    h = linear(x, params["w1"], params["b1"], policy=policy)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "batch", "seq", "mlp")
+    return linear(h, params["w2"], params["b2"], policy=policy)

@@ -1,0 +1,152 @@
+"""Shared neural-net building blocks (pure JAX, pytree params).
+
+Every matmul in the framework funnels through ``linear`` so the paper's
+execution modes apply uniformly:
+  * quant_bits=8   -> QAT fake-quant (training) / w8a8 integer path (inference)
+  * photonic=True  -> route through the optical-core simulator (bit-faithful
+    chunked w8a8 MatMul, optional MR noise) — used by the ViT benchmarks.
+Default (0/False) is the plain bf16 TPU path used by the LM dry-runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.photonic import OpticalCoreConfig, photonic_matmul_exact
+from repro.distributed.sharding import shard
+
+__all__ = ["linear", "rmsnorm", "layernorm", "rope", "apply_rope",
+           "embedding_lookup", "causal_conv1d", "he_init", "lecun_init",
+           "ExecPolicy"]
+
+
+class ExecPolicy:
+    """Execution-mode knobs threaded from ArchConfig into every layer."""
+
+    __slots__ = ("quant_bits", "photonic", "training", "dot_out_native")
+
+    def __init__(self, quant_bits: int = 0, photonic: bool = False,
+                 training: bool = True, dot_out_native: bool = False):
+        self.quant_bits = quant_bits
+        self.photonic = photonic
+        self.training = training
+        self.dot_out_native = dot_out_native
+
+    @staticmethod
+    def from_cfg(cfg, training: bool = True) -> "ExecPolicy":
+        return ExecPolicy(getattr(cfg, "quant_bits", 0),
+                          getattr(cfg, "photonic", False), training,
+                          getattr(cfg, "dot_out_native", False))
+
+
+_DEFAULT = ExecPolicy()
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
+           policy: ExecPolicy | None = None) -> jnp.ndarray:
+    """y = x @ w (+ b) under the active execution policy.
+
+    x: (..., d_in), w: (d_in, d_out). Contraction in the input dtype with
+    f32 accumulation via preferred_element_type (MXU semantics).
+    """
+    p = policy or _DEFAULT
+    if p.photonic:
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        y = photonic_matmul_exact(x2.astype(jnp.float32), w.astype(jnp.float32))
+        y = y.reshape(*lead, w.shape[-1]).astype(x.dtype)
+    elif p.quant_bits:
+        # QAT: fake-quant weights per-out-channel + activations per-tensor,
+        # STE in training so gradients flow (paper §IV Accuracy Analysis).
+        fq = quant.fake_quant_ste if p.training else quant.fake_quant
+        wq = fq(w, bits=p.quant_bits, axis=tuple(range(w.ndim - 1)))
+        xq = fq(x, bits=p.quant_bits, axis=None)
+        y = jax.lax.dot_general(xq, wq, (((x.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        y = y.astype(x.dtype)
+    elif p.dot_out_native:
+        # operand-dtype output: the MXU still accumulates f32 internally
+        # for bf16 operands, but no f32 result materializes in HBM and the
+        # TP all-reduce (when this matmul is row-parallel) moves bf16 —
+        # §Perf hillclimb knob (halves dominant activation-AR wire bytes).
+        y = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())))
+    else:
+        y = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32).astype(x.dtype)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+def layernorm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g + b
+
+
+def rope(positions: jnp.ndarray, head_dim: int,
+         theta: float = 500000.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Rotary embedding tables. positions: (..., seq). Returns cos/sin of
+    shape (..., seq, head_dim/2), f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]   # broadcast over heads
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Gather rows; with a vocab-sharded table XLA turns this into a
+    one-hot-free dynamic-gather + collective."""
+    return jnp.take(table, ids, axis=0)
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray,
+                  state: jnp.ndarray | None = None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C).
+
+    Training/prefill: returns (y, final_state) where final_state is the last
+    K-1 inputs (for handoff to decode). Decode (S==1 with state): uses the
+    rolling state. This is the Mamba/Griffin short conv.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:-2] + (k - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=-2)            # (B, S+K-1, C)
+    y = sum(xp[..., i:i + x.shape[-2], :] * w[i] for i in range(k))
+    new_state = xp[..., -(k - 1):, :]
+    return y.astype(x.dtype), new_state
+
+
+def he_init(key, shape, dtype=jnp.bfloat16):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    return (jax.random.normal(key, shape, jnp.float32)
+            * jnp.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+def lecun_init(key, shape, dtype=jnp.bfloat16):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    return (jax.random.normal(key, shape, jnp.float32)
+            * jnp.sqrt(1.0 / fan_in)).astype(dtype)

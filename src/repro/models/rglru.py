@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)  with c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Full-sequence mode uses jax.lax.associative_scan on (A, B) pairs with the
+affine composition (A2*A1, A2*B1 + B2) — log-depth, matmul-free. The block
+wraps the recurrence Griffin-style: in-proj -> short conv -> RG-LRU, gated
+by a parallel GeLU branch, then out-proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ExecPolicy, causal_conv1d, he_init, linear
+
+__all__ = ["init_rglru", "rglru_forward", "rglru_decode_step",
+           "rglru_logical_axes", "rglru_state_shape"]
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d, w = cfg.d_model, cfg.lru_dim
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a spans ~(0.9, 0.999) at r=1 (Griffin appendix)
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32)
+    return {
+        "in_proj": he_init(ks[0], (d, w), dtype),     # recurrent branch
+        "gate_proj": he_init(ks[1], (d, w), dtype),   # GeLU gate branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_kernel, w),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "w_a": he_init(ks[3], (w, w), dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": he_init(ks[4], (w, w), dtype),
+        "b_x": jnp.zeros((w,), jnp.float32),
+        "lambda": lam,
+        "out_proj": he_init(ks[5], (w, d), dtype),
+    }
+
+
+def rglru_logical_axes(cfg) -> dict:
+    return {"in_proj": ("p_embed", "p_mlp"), "gate_proj": ("p_embed", "p_mlp"),
+            "conv_w": (None, None),
+            "w_a": ("p_mlp", None), "b_a": (None,),
+            "w_x": ("p_mlp", None), "b_x": (None,),
+            "lambda": (None,),
+            "out_proj": ("p_mlp", "p_embed")}
+
+
+def rglru_state_shape(cfg, batch: int) -> dict:
+    return {"h": (batch, cfg.lru_dim),
+            "conv": (batch, cfg.conv_kernel - 1, cfg.lru_dim)}
+
+
+def _gates(params, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(uf @ params["w_x"].astype(jnp.float32) + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_forward(params: dict, x: jnp.ndarray, cfg,
+                  policy: ExecPolicy | None = None, initial_state=None):
+    """x: (B, S, d_model) -> (y, final_state)."""
+    u = linear(x, params["in_proj"], policy=policy)
+    conv0 = None if initial_state is None else initial_state["conv"]
+    u, conv_state = causal_conv1d(u, params["conv_w"], conv0)
+    a, b = _gates(params, u)                          # (B, S, W) f32
+
+    if initial_state is not None:
+        # fold h0 into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * initial_state["h"].astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    hn = h[:, -1]
+
+    gate = jax.nn.gelu(linear(x, params["gate_proj"], policy=policy)
+                       .astype(jnp.float32))
+    y = (h * gate).astype(x.dtype)
+    return linear(y, params["out_proj"], policy=policy), {
+        "h": hn, "conv": conv_state}
+
+
+def rglru_decode_step(params: dict, x: jnp.ndarray, state: dict, cfg,
+                      policy: ExecPolicy | None = None):
+    """x: (B, 1, d_model) -> (y, new_state)."""
+    u = linear(x, params["in_proj"], policy=policy)
+    u, conv_state = causal_conv1d(u, params["conv_w"], state["conv"])
+    a, b = _gates(params, u)                          # (B, 1, W)
+    h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+    gate = jax.nn.gelu(linear(x, params["gate_proj"], policy=policy)
+                       .astype(jnp.float32))
+    y = (h[:, None] * gate).astype(x.dtype)
+    return linear(y, params["out_proj"], policy=policy), {
+        "h": h, "conv": conv_state}

@@ -1,0 +1,181 @@
+"""Mamba-2: state-space duality (SSD) block, chunked matmul formulation.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the selective
+state-space recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * (B_t  (x)  x_t)
+    y_t = C_t . h_t + D * x_t
+
+computed chunk-parallel: within a chunk of Q timesteps the recurrence
+unrolls into masked matmuls (the "attention-like" dual form), across chunks
+a short scan carries the (H, P, N) state. All heavy ops are einsums that
+map onto the MXU; the chunk size trades VMEM footprint vs parallelism.
+
+B/C are shared across heads (single group, MQA-style), A is a scalar per
+head — the Mamba-2 defaults.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import ExecPolicy, causal_conv1d, he_init, linear, rmsnorm
+
+__all__ = ["init_ssd", "ssd_forward", "ssd_decode_step", "ssd_logical_axes",
+           "ssd_state_shape"]
+
+
+def init_ssd(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * n + h          # z, x, B, C, dt
+    return {
+        "in_proj": he_init(k1, (d, proj_out), dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_kernel, di + 2 * n),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),            # A = -exp(A_log)
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_g": jnp.ones((di,), dtype),
+        "out_proj": he_init(k3, (di, d), dtype),
+    }
+
+
+def ssd_logical_axes(cfg) -> dict:
+    return {
+        "in_proj": ("p_embed", "p_mlp"),
+        "conv_w": (None, None),
+        "A_log": (None,), "D": (None,), "dt_bias": (None,),
+        "norm_g": (None,),
+        "out_proj": ("p_mlp", "p_embed"),
+    }
+
+
+def ssd_state_shape(cfg, batch: int) -> dict:
+    """Decode-state ShapeDtypeStruct shapes (per layer)."""
+    return {
+        "h": (batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+        "conv": (batch, cfg.conv_kernel - 1, cfg.d_inner + 2 * cfg.ssm_state),
+    }
+
+
+def _split_proj(proj, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di: 2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def _segsum_decay(da_chunk):
+    """da_chunk: (..., Q) per-step log-decay -> L (..., Q, Q) with
+    L[i, j] = exp(sum_{k=j+1..i} da_k) for i >= j else 0."""
+    q = da_chunk.shape[-1]
+    cs = jnp.cumsum(da_chunk, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]        # sum_(j+1..i) = cs_i - cs_j
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_forward(params: dict, x: jnp.ndarray, cfg,
+                policy: ExecPolicy | None = None,
+                initial_state=None):
+    """Full-sequence SSD. x: (B, S, d_model) -> (y, final_state dict)."""
+    b, s, _ = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    proj = linear(x, params["in_proj"], policy=policy)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    conv_state0 = None if initial_state is None else initial_state["conv"]
+    xbc, conv_state = causal_conv1d(xbc, params["conv_w"], conv_state0)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :di].reshape(b, s, h, p)
+    bmat = xbc[..., di:di + n]                        # (B, S, N)
+    cmat = xbc[..., di + n:]                          # (B, S, N)
+
+    a = -jnp.exp(params["A_log"])                     # (H,) negative
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    da = dt * a                                       # log-decay per step
+
+    # chunked views
+    xc = xs.reshape(b, nc, q, h, p).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h)
+    dac = da.reshape(b, nc, q, h)
+
+    # ---- intra-chunk (dual "attention" form) ----
+    l = _segsum_decay(jnp.moveaxis(dac, -1, -2))      # (B, nc, H, Q, Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)    # shared across heads
+    xdt = xc * dtc[..., None]                         # dt folded into x
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", scores, l, xdt)
+
+    # ---- chunk states ----
+    cum = jnp.cumsum(dac, axis=2)                     # (B, nc, Q, H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)   # (B, nc, Q, H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", bc, decay_to_end * dtc, xc)
+
+    # ---- inter-chunk scan ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])           # (B, nc, H)
+
+    def scan_fn(hprev, inp):
+        st, dec = inp
+        hnew = dec[..., None, None] * hprev + st
+        return hnew, hprev
+
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state["h"].astype(jnp.float32))
+    hlast, hprevs = jax.lax.scan(scan_fn,
+                                 h0,
+                                 (jnp.moveaxis(states, 1, 0),
+                                  jnp.moveaxis(chunk_decay, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)               # (B, nc, H, P, N)
+
+    # ---- inter-chunk contribution ----
+    in_decay = jnp.exp(cum)                           # decay from chunk start
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc, hprevs, in_decay)
+
+    y = (y_diag + y_inter).reshape(b, s, h, p)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+
+    # gated output norm (Mamba-2 uses RMSNorm(y * silu(z)))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, params["norm_g"], cfg.norm_eps)
+    out = linear(y, params["out_proj"], policy=policy)
+    return out, {"h": hlast, "conv": conv_state}
+
+
+def ssd_decode_step(params: dict, x: jnp.ndarray, state: dict, cfg,
+                    policy: ExecPolicy | None = None):
+    """Single-token recurrence. x: (B, 1, d_model) -> (y, new_state)."""
+    b = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+
+    proj = linear(x, params["in_proj"], policy=policy)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc, conv_state = causal_conv1d(xbc, params["conv_w"], state["conv"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :di].reshape(b, 1, h, p).astype(jnp.float32)
+    bvec = xbc[..., di:di + n].astype(jnp.float32)    # (B, 1, N)
+    cvec = xbc[..., di + n:].astype(jnp.float32)
+
+    a = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    decay = jnp.exp(dt * a)                           # (B, H)
+
+    hs = state["h"].astype(jnp.float32)               # (B, H, P, N)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xs[:, 0], bvec[:, 0])
+    hnew = decay[..., None, None] * hs + upd
+    y = jnp.einsum("bn,bhpn->bhp", cvec[:, 0], hnew)
+    y = y + params["D"][None, :, None] * xs[:, 0]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, params["norm_g"], cfg.norm_eps)
+    out = linear(y, params["out_proj"], policy=policy)
+    return out, {"h": hnew, "conv": conv_state}

@@ -1,0 +1,599 @@
+"""Decoder-only LM assembly for all families (dense / moe / ssm / hybrid).
+
+Layer stacking follows the MaxText pattern: per-layer params are stacked on
+a leading axis and the layer loop is a ``jax.lax.scan`` (optionally with
+per-layer ``jax.checkpoint`` remat), so HLO size and compile time are O(1)
+in depth — a 126-layer 405B model lowers on this host.
+
+Heterogeneous stacks (hybrid RG-LRU 2:1 local-attention, MoE with leading
+dense layers) scan over *super-blocks* of the repeating pattern, with any
+remainder layers unrolled.
+
+Decode carries a per-family cache pytree whose leaves are stacked on the
+same leading layer axis; the layer scan threads cache slices as xs/ys.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (blockwise_attention, decode_attention,
+                                    full_attention, update_kv_cache)
+from repro.models.layers import (ExecPolicy, apply_rope, embedding_lookup,
+                                 he_init, linear, rmsnorm, rope)
+
+__all__ = ["init_lm", "lm_logical_axes", "forward_lm", "lm_loss",
+           "cache_spec", "decode_step"]
+
+
+# --------------------------------------------------------------------------
+# attention sub-block
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": he_init(ks[0], (d, h * hd), dtype),
+         "wk": he_init(ks[1], (d, hkv * hd), dtype),
+         "wv": he_init(ks[2], (d, hkv * hd), dtype),
+         "wo": he_init(ks[3], (h * hd, d), dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def attention_logical_axes(cfg: ArchConfig) -> dict:
+    ax = {"wq": ("p_embed", "p_heads"), "wk": ("p_embed", None),
+          "wv": ("p_embed", None), "wo": ("p_heads", "p_embed")}
+    if cfg.qkv_bias:
+        ax.update({"bq": ("p_heads",), "bk": (None,), "bv": (None,)})
+    return ax
+
+
+def _project_qkv(p, x, cfg, policy, positions):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = linear(x, p["wq"], p.get("bq"), policy).reshape(b, s, h, hd)
+    k = linear(x, p["wk"], p.get("bk"), policy).reshape(b, s, hkv, hd)
+    v = linear(x, p["wv"], p.get("bv"), policy).reshape(b, s, hkv, hd)
+    cos, sin = rope(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    return q, k, v
+
+
+def attn_forward(p, x, cfg: ArchConfig, policy, *, window=0):
+    """Full-sequence self attention (train/prefill)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, cfg, policy, positions)
+    if cfg.attn_impl == "decomposed":
+        o = _decomposed_attn(p, x, q, v, cfg)
+    else:
+        o = blockwise_attention(
+            q, k, v, causal=True, window=window,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+            block_skip=cfg.causal_block_skip, p_bf16=cfg.attn_p_bf16,
+            qk_bf16=cfg.attn_qk_bf16)
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return linear(o, p["wo"], policy=policy), (k, v)
+
+
+def _decomposed_attn(p, x, q, v, cfg):
+    """Paper Eq. 2 dataflow: scores_h = (Q_h W_K,h^T / sqrt(dh)) X^T.
+
+    RoPE is skipped in this mode (the decomposition requires scores be a
+    bilinear form in the *raw* X; the paper's ViT has no RoPE). Intended for
+    ViT-scale models; memory grows with H*d_model."""
+    b, s, h, hd = q.shape
+    d = x.shape[-1]
+    hkv = cfg.kv_heads
+    g = h // hkv
+    wk = p["wk"].reshape(d, hkv, hd)
+    scale = 1.0 / math.sqrt(hd)
+    # re-project q without rope: Eq.2 path recomputes raw Q
+    q_raw = linear(x, p["wq"], p.get("bq")).reshape(b, s, hkv, g, hd)
+    qwk = jnp.einsum("bshgk,dhk->bshgd", q_raw.astype(jnp.float32),
+                     wk.astype(jnp.float32)) * scale
+    scores = jnp.einsum("bshgd,btd->bhgst", qwk, x.astype(jnp.float32))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    pattn = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgst,bthk->bshgk", pattn, v.astype(jnp.float32))
+    return o.reshape(b, s, h, hd).astype(x.dtype)
+
+
+def attn_decode(p, x, cache_k, cache_v, pos, cfg: ArchConfig, policy,
+                *, window=0):
+    """One-token attention; returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = linear(x, p["wq"], p.get("bq"), policy).reshape(b, 1, h, hd)
+    k = linear(x, p["wk"], p.get("bk"), policy).reshape(b, 1, hkv, hd)
+    v = linear(x, p["wv"], p.get("bv"), policy).reshape(b, 1, hkv, hd)
+    posv = jnp.asarray(pos)[None]
+    cos, sin = rope(posv, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if window > 0 and cache_k.shape[1] <= window:
+        # ring-buffer local cache: slot = pos mod window
+        slot = jnp.mod(pos, cache_k.shape[1])
+        cache_k, cache_v = update_kv_cache(cache_k, cache_v, k, v, slot)
+        o = _ring_decode_attention(q, cache_k, cache_v, pos, window)
+    else:
+        cache_k, cache_v = update_kv_cache(cache_k, cache_v, k, v, pos)
+        o = decode_attention(q, cache_k, cache_v, pos + 1, window=window,
+                             bf16_compute=cfg.decode_attn_bf16)
+    o = o.reshape(b, 1, h * hd)
+    return linear(o, p["wo"], policy=policy), cache_k, cache_v
+
+
+def _ring_decode_attention(q, k_cache, v_cache, pos, window):
+    """Decode over a ring-buffer window cache. Slot s holds absolute
+    position p with p mod W == s and p <= pos; valid iff p > pos - W,
+    i.e. every slot is valid once pos >= W - 1."""
+    b, _, h, hd = q.shape
+    w = k_cache.shape[1]
+    slots = jnp.arange(w)
+    # absolute position currently stored in each slot
+    cur = jnp.mod(pos, w)
+    abs_pos = jnp.where(slots <= cur, pos - cur + slots, pos - cur + slots - w)
+    valid = abs_pos >= 0
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qf = q.reshape(b, hkv, g, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    m = s.max(-1, keepdims=True)
+    p_ = jnp.exp(s - m)
+    o = jnp.einsum("bhgs,bshd->bhgd", p_, v_cache.astype(jnp.float32))
+    o = o / p_.sum(-1, keepdims=True)[..., 0, None]
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# per-family layer blocks (pre-norm residual)
+# --------------------------------------------------------------------------
+
+def init_dense_layer(key, cfg, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": init_attention(k1, cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "ffn": ffn_mod.init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def dense_layer_axes(cfg):
+    return {"ln1": (None,), "attn": attention_logical_axes(cfg),
+            "ln2": (None,), "ffn": ffn_mod.swiglu_logical_axes()}
+
+
+def dense_layer_fwd(p, x, cfg, policy, window=0):
+    h, _ = attn_forward(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                        cfg, policy, window=window)
+    x = x + h
+    x = x + ffn_mod.swiglu(p["ffn"], rmsnorm(x, p["ln2"], cfg.norm_eps), policy)
+    return shard(x, "batch", "seq", "embed")
+
+
+def init_moe_layer(key, cfg, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": init_attention(k1, cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "moe": moe_mod.init_moe(k2, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                    cfg.shared_experts, dtype)}
+
+
+def moe_layer_axes(cfg):
+    return {"ln1": (None,), "attn": attention_logical_axes(cfg),
+            "ln2": (None,), "moe": moe_mod.moe_logical_axes(cfg.shared_experts)}
+
+
+def moe_layer_fwd(p, x, cfg, policy):
+    h, _ = attn_forward(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                        cfg, policy)
+    x = x + h
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe_impl == "shard_map":
+        y, aux = moe_mod.moe_ffn_shard_map(
+            p["moe"], h2, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, policy=policy)
+    else:
+        y, aux = moe_mod.moe_ffn(p["moe"], h2,
+                                 top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 groups=cfg.moe_groups, policy=policy,
+                                 local_combine=cfg.moe_local_combine)
+    return shard(x + y, "batch", "seq", "embed"), aux
+
+
+def init_ssm_layer(key, cfg, dtype=jnp.bfloat16):
+    return {"ln": jnp.ones((cfg.d_model,), dtype),
+            "ssd": ssm_mod.init_ssd(key, cfg, dtype)}
+
+
+def ssm_layer_axes(cfg):
+    return {"ln": (None,), "ssd": ssm_mod.ssd_logical_axes(cfg)}
+
+
+def init_rec_layer(key, cfg, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "rec": rglru_mod.init_rglru(k1, cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "ffn": ffn_mod.init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def rec_layer_axes(cfg):
+    return {"ln1": (None,), "rec": rglru_mod.rglru_logical_axes(cfg),
+            "ln2": (None,), "ffn": ffn_mod.swiglu_logical_axes()}
+
+
+# --------------------------------------------------------------------------
+# model init
+# --------------------------------------------------------------------------
+
+def _stack_init(key, n, init_fn):
+    """vmap an init over n layers -> stacked leaves with leading n axis."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_lm(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32)
+                  * 0.02).astype(dtype),
+        "final_ln": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = he_init(ks[1], (d, cfg.vocab), dtype)
+
+    fam = cfg.family
+    if fam == "dense":
+        params["blocks"] = _stack_init(
+            ks[2], cfg.n_layers, lambda k: init_dense_layer(k, cfg, dtype))
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            params["dense_blocks"] = _stack_init(
+                ks[3], nd, lambda k: init_dense_layer(k, cfg, dtype))
+        params["blocks"] = _stack_init(
+            ks[2], cfg.n_layers - nd, lambda k: init_moe_layer(k, cfg, dtype))
+    elif fam == "ssm":
+        params["blocks"] = _stack_init(
+            ks[2], cfg.n_layers, lambda k: init_ssm_layer(k, cfg, dtype))
+    elif fam == "hybrid":
+        nsb = cfg.n_layers // 3          # super-block = (rec, rec, attn)
+        rem = cfg.n_layers - 3 * nsb
+        params["blocks"] = _stack_init(
+            ks[2], nsb,
+            lambda k: {
+                "rec0": init_rec_layer(jax.random.fold_in(k, 0), cfg, dtype),
+                "rec1": init_rec_layer(jax.random.fold_in(k, 1), cfg, dtype),
+                "attn": init_dense_layer(jax.random.fold_in(k, 2), cfg, dtype),
+            })
+        if rem:
+            params["tail_blocks"] = _stack_init(
+                ks[3], rem, lambda k: init_rec_layer(k, cfg, dtype))
+    else:
+        raise ValueError(f"init_lm does not handle family {fam}")
+    return params
+
+
+def _tree_prepend_axis(tree, axis_name="p_layers"):
+    return jax.tree_util.tree_map(lambda ax: (axis_name,) + tuple(ax), tree,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+
+
+def lm_logical_axes(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    ax: dict[str, Any] = {"embed": ("p_vocab", "p_embed"),
+                          "final_ln": (None,)}
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = ("p_embed", "p_vocab")
+    fam = cfg.family
+    if fam == "dense":
+        ax["blocks"] = _tree_prepend_axis(dense_layer_axes(cfg))
+    elif fam == "moe":
+        if cfg.first_dense_layers:
+            ax["dense_blocks"] = _tree_prepend_axis(dense_layer_axes(cfg))
+        ax["blocks"] = _tree_prepend_axis(moe_layer_axes(cfg))
+    elif fam == "ssm":
+        ax["blocks"] = _tree_prepend_axis(ssm_layer_axes(cfg))
+    elif fam == "hybrid":
+        sb = {"rec0": rec_layer_axes(cfg), "rec1": rec_layer_axes(cfg),
+              "attn": dense_layer_axes(cfg)}
+        ax["blocks"] = _tree_prepend_axis(sb)
+        if cfg.n_layers % 3:
+            ax["tail_blocks"] = _tree_prepend_axis(rec_layer_axes(cfg))
+    return ax
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def forward_lm(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
+               policy: ExecPolicy | None = None):
+    """tokens (B, S) -> (logits (B, S, V), aux_loss scalar)."""
+    policy = policy or ExecPolicy.from_cfg(cfg)
+    x = embedding_lookup(params["embed"], tokens)
+    x = shard(x, "batch", "seq", "embed")
+    aux_total = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam == "dense":
+        def body(carry, lp):
+            return dense_layer_fwd(lp, carry, cfg, policy), None
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["blocks"])
+    elif fam == "moe":
+        if cfg.first_dense_layers:
+            def dbody(carry, lp):
+                return dense_layer_fwd(lp, carry, cfg, policy), None
+            x, _ = jax.lax.scan(_maybe_remat(dbody, cfg), x,
+                                params["dense_blocks"])
+
+        def mbody(carry, lp):
+            y, aux = moe_layer_fwd(lp, carry, cfg, policy)
+            return y, aux
+        x, auxs = jax.lax.scan(_maybe_remat(mbody, cfg), x, params["blocks"])
+        aux_total = aux_total + auxs.sum()
+    elif fam == "ssm":
+        def sbody(carry, lp):
+            y, _ = ssm_mod.ssd_forward(
+                lp["ssd"], rmsnorm(carry, lp["ln"], cfg.norm_eps), cfg, policy)
+            return shard(carry + y, "batch", "seq", "embed"), None
+        x, _ = jax.lax.scan(_maybe_remat(sbody, cfg), x, params["blocks"])
+    elif fam == "hybrid":
+        def rec_fwd(lp, carry):
+            y, _ = rglru_mod.rglru_forward(
+                lp["rec"], rmsnorm(carry, lp["ln1"], cfg.norm_eps), cfg, policy)
+            carry = carry + y
+            carry = carry + ffn_mod.swiglu(
+                lp["ffn"], rmsnorm(carry, lp["ln2"], cfg.norm_eps), policy)
+            return shard(carry, "batch", "seq", "embed")
+
+        def hbody(carry, lp):
+            carry = rec_fwd(lp["rec0"], carry)
+            carry = rec_fwd(lp["rec1"], carry)
+            carry = dense_layer_fwd(lp["attn"], carry, cfg, policy,
+                                    window=cfg.window)
+            return carry, None
+        x, _ = jax.lax.scan(_maybe_remat(hbody, cfg), x, params["blocks"])
+        if "tail_blocks" in params:
+            def tbody(carry, lp):
+                return rec_fwd(lp, carry), None
+            x, _ = jax.lax.scan(_maybe_remat(tbody, cfg), x,
+                                params["tail_blocks"])
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = linear(x, head, policy=policy)
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux_total
+
+
+def lm_loss(params, batch, cfg: ArchConfig, policy=None,
+            aux_weight: float = 0.01):
+    """Next-token cross-entropy (+ MoE balance aux)."""
+    logits, aux = forward_lm(params, batch["tokens"], cfg, policy)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold).mean()
+    return nll + aux_weight * aux
+
+
+# --------------------------------------------------------------------------
+# decode (serve_step)
+# --------------------------------------------------------------------------
+
+def cache_spec(cfg: ArchConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> tuple[dict, dict]:
+    """(shapes, logical_axes) for the decode cache pytree.
+
+    KV caches are sharded ("batch", "kv_seq", ...) -> seq over the model
+    axis: the flash-decoding layout (DESIGN.md §4). Recurrent states are
+    batch-sharded only.
+    """
+    fam = cfg.family
+    hkv, hd = cfg.kv_heads, cfg.head_dim
+    if fam in ("dense", "moe"):
+        n_l = cfg.n_layers
+        shapes = {"k": ((n_l, batch, seq_len, hkv, hd), dtype),
+                  "v": ((n_l, batch, seq_len, hkv, hd), dtype)}
+        axes = {"k": ("p_layers", "batch", "kv_seq", None, None),
+                "v": ("p_layers", "batch", "kv_seq", None, None)}
+    elif fam == "ssm":
+        st = ssm_mod.ssd_state_shape(cfg, batch)
+        n_l = cfg.n_layers
+        shapes = {"h": ((n_l,) + st["h"], jnp.float32),
+                  "conv": ((n_l,) + st["conv"], dtype)}
+        axes = {"h": ("p_layers", "batch", None, None, None),
+                "conv": ("p_layers", "batch", None, None)}
+    elif fam == "hybrid":
+        nsb = cfg.n_layers // 3
+        rem = cfg.n_layers - 3 * nsb
+        w = min(cfg.window or seq_len, seq_len)
+        rst = rglru_mod.rglru_state_shape(cfg, batch)
+        shapes = {
+            "rec_h": ((nsb, 2) + rst["h"], jnp.float32),
+            "rec_conv": ((nsb, 2) + rst["conv"], dtype),
+            "attn_k": ((nsb, batch, w, hkv, hd), dtype),
+            "attn_v": ((nsb, batch, w, hkv, hd), dtype),
+        }
+        axes = {"rec_h": ("p_layers", None, "batch", "mlp"),
+                "rec_conv": ("p_layers", None, "batch", None, "mlp"),
+                "attn_k": ("p_layers", "batch", "kv_seq", None, None),
+                "attn_v": ("p_layers", "batch", "kv_seq", None, None)}
+        if rem:
+            shapes["tail_h"] = ((rem,) + rst["h"], jnp.float32)
+            shapes["tail_conv"] = ((rem,) + rst["conv"], dtype)
+            axes["tail_h"] = ("p_layers", "batch", "mlp")
+            axes["tail_conv"] = ("p_layers", "batch", None, "mlp")
+    else:
+        raise ValueError(fam)
+    return shapes, axes
+
+
+def decode_step(params: dict, cache: dict, tokens: jnp.ndarray, pos,
+                cfg: ArchConfig, policy: ExecPolicy | None = None):
+    """One decode step. tokens (B, 1) int32, pos scalar int32 (current
+    position = number of tokens already in cache). Returns (logits (B, V),
+    new_cache)."""
+    policy = policy or ExecPolicy.from_cfg(cfg, training=False)
+    x = embedding_lookup(params["embed"], tokens)
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        def body(carry, xs):
+            if fam == "moe":
+                lp, ck, cv, is_moe = xs
+            else:
+                lp, ck, cv = xs
+            h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
+            o, ck, cv = attn_decode(lp["attn"], h, ck, cv, pos, cfg, policy)
+            carry = carry + o
+            h2 = rmsnorm(carry, lp["ln2"], cfg.norm_eps)
+            if fam == "moe":
+                y, _ = moe_mod.moe_ffn(lp["moe"], h2, top_k=cfg.top_k,
+                                       capacity_factor=cfg.capacity_factor,
+                                       groups=cfg.moe_groups, policy=policy,
+                                       local_combine=cfg.moe_local_combine)
+            else:
+                y = ffn_mod.swiglu(lp["ffn"], h2, policy)
+            return carry + y, (ck, cv)
+
+        if fam == "moe" and cfg.first_dense_layers:
+            nd = cfg.first_dense_layers
+            kd, vd = cache["k"][:nd], cache["v"][:nd]
+
+            def dbody(carry, xs):
+                lp, ck, cv = xs
+                h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
+                o, ck, cv = attn_decode(lp["attn"], h, ck, cv, pos, cfg, policy)
+                carry = carry + o
+                y = ffn_mod.swiglu(lp["ffn"],
+                                   rmsnorm(carry, lp["ln2"], cfg.norm_eps),
+                                   policy)
+                return carry + y, (ck, cv)
+            x, (kd2, vd2) = jax.lax.scan(dbody, x,
+                                         (params["dense_blocks"], kd, vd))
+            km, vm = cache["k"][nd:], cache["v"][nd:]
+
+            def mbody(carry, xs):
+                lp, ck, cv = xs
+                h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
+                o, ck, cv = attn_decode(lp["attn"], h, ck, cv, pos, cfg, policy)
+                carry = carry + o
+                y, _ = moe_mod.moe_ffn(lp["moe"],
+                                       rmsnorm(carry, lp["ln2"], cfg.norm_eps),
+                                       top_k=cfg.top_k,
+                                       capacity_factor=cfg.capacity_factor,
+                                       groups=cfg.moe_groups, policy=policy,
+                                       local_combine=cfg.moe_local_combine)
+                return carry + y, (ck, cv)
+            x, (km2, vm2) = jax.lax.scan(mbody, x, (params["blocks"], km, vm))
+            new_cache = {"k": jnp.concatenate([kd2, km2]),
+                         "v": jnp.concatenate([vd2, vm2])}
+        else:
+            def ubody(carry, xs):
+                lp, ck, cv = xs
+                h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
+                o, ck, cv = attn_decode(lp["attn"], h, ck, cv, pos, cfg, policy)
+                carry = carry + o
+                h2 = rmsnorm(carry, lp["ln2"], cfg.norm_eps)
+                if fam == "moe":
+                    y, _ = moe_mod.moe_ffn(lp["moe"], h2, top_k=cfg.top_k,
+                                           capacity_factor=cfg.capacity_factor,
+                                           policy=policy,
+                                           local_combine=cfg.moe_local_combine)
+                else:
+                    y = ffn_mod.swiglu(lp["ffn"], h2, policy)
+                return carry + y, (ck, cv)
+            x, (k2, v2) = jax.lax.scan(ubody, x,
+                                       (params["blocks"], cache["k"],
+                                        cache["v"]))
+            new_cache = {"k": k2, "v": v2}
+
+    elif fam == "ssm":
+        def sbody(carry, xs):
+            lp, hs, cs = xs
+            y, st = ssm_mod.ssd_decode_step(
+                lp["ssd"], rmsnorm(carry, lp["ln"], cfg.norm_eps),
+                {"h": hs, "conv": cs}, cfg, policy)
+            return carry + y, (st["h"], st["conv"])
+        x, (h2, c2) = jax.lax.scan(sbody, x,
+                                   (params["blocks"], cache["h"],
+                                    cache["conv"]))
+        new_cache = {"h": h2, "conv": c2}
+
+    elif fam == "hybrid":
+        def rec_step(lp, carry, hs, cs):
+            y, st = rglru_mod.rglru_decode_step(
+                lp["rec"], rmsnorm(carry, lp["ln1"], cfg.norm_eps),
+                {"h": hs, "conv": cs}, cfg, policy)
+            carry = carry + y
+            carry = carry + ffn_mod.swiglu(
+                lp["ffn"], rmsnorm(carry, lp["ln2"], cfg.norm_eps), policy)
+            return carry, st["h"], st["conv"]
+
+        def hbody(carry, xs):
+            lp, rh, rc, ak, av = xs
+            carry, h0, c0 = rec_step(lp["rec0"], carry, rh[0], rc[0])
+            carry, h1, c1 = rec_step(lp["rec1"], carry, rh[1], rc[1])
+            h = rmsnorm(carry, lp["attn"]["ln1"], cfg.norm_eps)
+            o, ak, av = attn_decode(lp["attn"]["attn"], h, ak, av, pos, cfg,
+                                    policy, window=cfg.window)
+            carry = carry + o
+            carry = carry + ffn_mod.swiglu(
+                lp["attn"]["ffn"],
+                rmsnorm(carry, lp["attn"]["ln2"], cfg.norm_eps), policy)
+            return carry, (jnp.stack([h0, h1]), jnp.stack([c0, c1]), ak, av)
+
+        x, (rh2, rc2, ak2, av2) = jax.lax.scan(
+            hbody, x, (params["blocks"], cache["rec_h"], cache["rec_conv"],
+                       cache["attn_k"], cache["attn_v"]))
+        new_cache = {"rec_h": rh2, "rec_conv": rc2,
+                     "attn_k": ak2, "attn_v": av2}
+        if "tail_blocks" in params:
+            def tbody(carry, xs):
+                lp, hs, cs = xs
+                carry, h, c = rec_step(lp, carry, hs, cs)
+                return carry, (h, c)
+            x, (th2, tc2) = jax.lax.scan(
+                tbody, x, (params["tail_blocks"], cache["tail_h"],
+                           cache["tail_conv"]))
+            new_cache["tail_h"] = th2
+            new_cache["tail_conv"] = tc2
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = linear(x, head, policy=policy)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,167 @@
+"""Vision Transformer backbone + Opto-ViT integration (the paper's model).
+
+Standard ViT (Dosovitskiy et al.) with the paper's co-design hooks:
+  * every matmul routes through ``linear`` -> 8-bit QAT or the photonic
+    w8a8 simulator (ArchConfig.quant_bits / .photonic),
+  * optional Eq. 2 decomposed attention dataflow (attn_impl="decomposed"),
+  * optional MGNet RoI pruning: patches are scored by MGNet and only the
+    top-k (static budget = ceil(keep_ratio * N)) enter encoder block 0 —
+    all downstream compute scales linearly with kept patches (the paper's
+    central energy lever). The [cls] token is always kept.
+
+Variants (paper Table I): Tiny/Small/Base/Large at 96x96 and 224x224 are
+built by ``configs.opto_vit``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import mgnet as mgnet_mod
+from repro.core.decomposed_attention import mhsa_decomposed, mhsa_standard
+from repro.core.mgnet import MGNetConfig, mgnet_scores, patchify
+from repro.distributed.sharding import shard
+from repro.models import ffn as ffn_mod
+from repro.models.layers import ExecPolicy, he_init, layernorm, linear
+
+__all__ = ["init_vit", "vit_logical_axes", "forward_vit", "vit_matmul_shapes"]
+
+
+def _n_patches(cfg):
+    return (cfg.img_size // cfg.patch) ** 2
+
+
+def init_vit(key, cfg: ArchConfig, n_classes: int = 1000,
+             dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    n_in = 3 * cfg.patch ** 2
+    ks = jax.random.split(key, 6)
+
+    def layer(k):
+        kk = jax.random.split(k, 5)
+        return {
+            "ln1_g": jnp.ones((d,), dtype), "ln1_b": jnp.zeros((d,), dtype),
+            "attn": {"wq": he_init(kk[0], (d, d), dtype),
+                     "wk": he_init(kk[1], (d, d), dtype),
+                     "wv": he_init(kk[2], (d, d), dtype),
+                     "wo": he_init(kk[3], (d, d), dtype)},
+            "ln2_g": jnp.ones((d,), dtype), "ln2_b": jnp.zeros((d,), dtype),
+            "ffn": ffn_mod.init_mlp(kk[4], d, cfg.d_ff, dtype),
+        }
+
+    params = {
+        "patch_embed": {"w": he_init(ks[0], (n_in, d), dtype),
+                        "b": jnp.zeros((d,), dtype)},
+        "cls": (jax.random.normal(ks[1], (1, 1, d), jnp.float32) * 0.02
+                ).astype(dtype),
+        "pos": (jax.random.normal(ks[2], (1, _n_patches(cfg) + 1, d),
+                                  jnp.float32) * 0.02).astype(dtype),
+        "blocks": jax.vmap(layer)(jax.random.split(ks[3], cfg.n_layers)),
+        "final_ln_g": jnp.ones((d,), dtype),
+        "final_ln_b": jnp.zeros((d,), dtype),
+        "head": he_init(ks[4], (d, n_classes), dtype),
+    }
+    if cfg.mgnet:
+        mcfg = MGNetConfig(patch=cfg.patch, img_size=cfg.img_size,
+                           embed=cfg.mgnet_embed, heads=cfg.mgnet_heads)
+        params["mgnet"] = mgnet_mod.init_mgnet(ks[5], mcfg)
+    return params
+
+
+def vit_logical_axes(cfg: ArchConfig) -> dict:
+    from repro.models.transformer import _tree_prepend_axis
+    layer = {"ln1_g": (None,), "ln1_b": (None,),
+             "attn": {"wq": ("p_embed", "p_heads"), "wk": ("p_embed", None),
+                      "wv": ("p_embed", None), "wo": ("p_heads", "p_embed")},
+             "ln2_g": (None,), "ln2_b": (None,),
+             "ffn": ffn_mod.mlp_logical_axes()}
+    ax = {"patch_embed": {"w": (None, "p_embed"), "b": ("p_embed",)},
+          "cls": (None, None, None), "pos": (None, None, None),
+          "blocks": _tree_prepend_axis(layer),
+          "final_ln_g": (None,), "final_ln_b": (None,),
+          "head": ("p_embed", None)}
+    if cfg.mgnet:
+        ax["mgnet"] = jax.tree_util.tree_map(lambda _: None, {})
+    return ax
+
+
+def forward_vit(params: dict, images: jnp.ndarray, cfg: ArchConfig,
+                policy: ExecPolicy | None = None):
+    """images (B, H, W, 3) -> (logits (B, n_classes), kept_patches int).
+
+    With cfg.mgnet, MGNet scores patches and a static top-k budget of
+    ceil(keep_ratio * N) enters the encoder — paper's masked inference.
+    """
+    policy = policy or ExecPolicy.from_cfg(cfg)
+    b = images.shape[0]
+    d = cfg.d_model
+    pt = patchify(images, cfg.patch)                      # (B, N, p*p*3)
+    x = linear(pt, params["patch_embed"]["w"], params["patch_embed"]["b"],
+               policy)
+    n = x.shape[1]
+    x = x + params["pos"][:, 1: n + 1]
+
+    kept = n
+    if cfg.mgnet and cfg.mgnet_keep_ratio < 1.0:
+        mcfg = MGNetConfig(patch=cfg.patch, img_size=cfg.img_size,
+                           embed=cfg.mgnet_embed, heads=cfg.mgnet_heads)
+        scores = mgnet_scores(params["mgnet"], images, mcfg)   # (B, N)
+        kept = max(1, int(cfg.mgnet_keep_ratio * n))
+        x, _ = mgnet_mod.select_topk_patches(scores, x, kept)
+
+    cls = jnp.broadcast_to(params["cls"], (b, 1, d)) + params["pos"][:, :1]
+    x = jnp.concatenate([cls.astype(x.dtype), x], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+
+    def body(carry, lp):
+        h = layernorm(carry, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+        if cfg.attn_impl == "decomposed":
+            o = mhsa_decomposed(h, lp["attn"], cfg.n_heads)
+        else:
+            o = mhsa_standard(h, lp["attn"], cfg.n_heads)
+        carry = carry + o.astype(carry.dtype)
+        h2 = layernorm(carry, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
+        carry = carry + ffn_mod.mlp(lp["ffn"], h2, policy)
+        return carry, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["blocks"])
+    x = layernorm(x, params["final_ln_g"], params["final_ln_b"], cfg.norm_eps)
+    logits = linear(x[:, 0], params["head"], policy=policy)
+    return logits, kept
+
+
+def vit_matmul_shapes(cfg: ArchConfig, kept_patches: int | None = None,
+                      include_mgnet: bool = False) -> list[tuple[int, int, int]]:
+    """(M, K, N) list of every MatMul in one ViT forward — feeds the
+    optical-core energy/latency model (benchmarks/fig8..11).
+
+    kept_patches: post-MGNet token count (None = all patches).
+    """
+    n = (kept_patches if kept_patches is not None else _n_patches(cfg)) + 1
+    d, dff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    n_in = 3 * cfg.patch ** 2
+    shapes = [( _n_patches(cfg) if kept_patches is None else kept_patches,
+               n_in, d)]                                    # patch embed
+    per_layer = [
+        (n, d, d), (n, d, d), (n, d, d),                    # q, k, v
+        (n, d, n),                                          # scores (per-head agg)
+        (n, n, d),                                          # attn @ v
+        (n, d, d),                                          # out proj
+        (n, d, dff), (n, dff, d),                           # mlp
+    ]
+    shapes += per_layer * L
+    if include_mgnet:
+        mcfg = MGNetConfig(patch=cfg.patch, img_size=cfg.img_size,
+                           embed=cfg.mgnet_embed, heads=cfg.mgnet_heads)
+        nm = mcfg.n_patches + 1
+        dm = mcfg.embed
+        shapes += [
+            (mcfg.n_patches, 3 * mcfg.patch ** 2, dm),      # mgnet patch embed
+            (nm, dm, 3 * dm), (nm, dm, nm), (nm, nm, dm), (nm, dm, dm),
+            (nm, dm, 4 * dm), (nm, 4 * dm, dm),
+            (1, dm, dm), (mcfg.n_patches, dm, mcfg.n_patches),  # scoring
+        ]
+    return shapes

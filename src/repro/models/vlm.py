@@ -1,0 +1,181 @@
+"""Vision-language decoder (Llama-3.2-Vision-style backbone).
+
+The vision tower is a STUB per the assignment: ``input_specs`` supplies
+precomputed image patch embeddings (B, n_img_tokens, d_frontend). The text
+decoder inserts a gated image cross-attention layer every ``cross_every``
+layers (Flamingo/Llama-3.2 pattern); layers scan over super-blocks of
+``cross_every`` layers, the last of which carries the cross-attention.
+
+This is also where the paper's MGNet applies naturally outside pure ViTs:
+``mgnet_keep_ratio < 1`` prunes image tokens by MGNet-style scores before
+the cross-attention K/V are formed (token-budget top-k, static shapes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import ffn as ffn_mod
+from repro.models.attention import full_attention
+from repro.models.layers import (ExecPolicy, embedding_lookup, he_init,
+                                 linear, rmsnorm)
+from repro.models.transformer import (attention_logical_axes, attn_decode,
+                                      attn_forward, dense_layer_axes,
+                                      dense_layer_fwd, init_attention,
+                                      init_dense_layer, _tree_prepend_axis)
+
+__all__ = ["init_vlm", "vlm_logical_axes", "forward_vlm", "vlm_cache_spec",
+           "decode_step_vlm", "prune_image_tokens"]
+
+
+def init_vlm(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    dfr = cfg.d_frontend or d
+    ks = jax.random.split(key, 8)
+    p_sb = cfg.cross_every                 # layers per super-block
+    n_sb = cfg.n_layers // p_sb
+    assert cfg.n_layers % p_sb == 0, (cfg.n_layers, p_sb)
+
+    def super_block(k):
+        kk = jax.random.split(k, p_sb + 1)
+        return {
+            "selfs": jax.vmap(lambda q: init_dense_layer(q, cfg, dtype))(
+                kk[: p_sb]),
+            "lnx": jnp.ones((d,), dtype),
+            "xattn": init_attention(kk[p_sb], cfg, dtype),
+            "xgate": jnp.zeros((), jnp.float32),     # tanh-gated (Flamingo)
+        }
+
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32)
+                  * 0.02).astype(dtype),
+        "img_proj": he_init(ks[1], (dfr, d), dtype),
+        "img_score": he_init(ks[2], (d, 1), dtype),   # MGNet-style relevance
+        "blocks": jax.vmap(super_block)(jax.random.split(ks[3], n_sb)),
+        "final_ln": jnp.ones((d,), dtype),
+        "lm_head": he_init(ks[4], (d, cfg.vocab), dtype),
+    }
+
+
+def vlm_logical_axes(cfg: ArchConfig) -> dict:
+    sb = {"selfs": _tree_prepend_axis(dense_layer_axes(cfg)),
+          "lnx": (None,),
+          "xattn": attention_logical_axes(cfg),
+          "xgate": ()}
+    return {"embed": ("p_vocab", "p_embed"),
+            "img_proj": (None, "p_embed"),
+            "img_score": ("p_embed", None),
+            "blocks": _tree_prepend_axis(sb),
+            "final_ln": (None,),
+            "lm_head": ("p_embed", "p_vocab")}
+
+
+def prune_image_tokens(params, img_tokens: jnp.ndarray, keep_ratio: float):
+    """MGNet-style static-budget pruning of image tokens (paper RoI idea
+    applied to the VLM frontend). keep = ceil(ratio * n)."""
+    n = img_tokens.shape[1]
+    keep = max(1, int(keep_ratio * n))
+    if keep >= n:
+        return img_tokens
+    scores = (img_tokens.astype(jnp.float32)
+              @ params["img_score"].astype(jnp.float32))[..., 0]   # (B, N)
+    _, idx = jax.lax.top_k(scores, keep)
+    return jnp.take_along_axis(img_tokens, idx[..., None], axis=1)
+
+
+def _img_kv(p, img, cfg, policy):
+    b, t, _ = img.shape
+    hkv, hd = cfg.kv_heads, cfg.head_dim
+    k = linear(img, p["wk"], p.get("bk"), policy).reshape(b, t, hkv, hd)
+    v = linear(img, p["wv"], p.get("bv"), policy).reshape(b, t, hkv, hd)
+    return k, v
+
+
+def _cross(p, gate, x, kv, cfg, policy):
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = linear(x, p["wq"], p.get("bq"), policy).reshape(b, s, h, hd)
+    o = full_attention(q, kv[0], kv[1], causal=False)
+    o = linear(o.reshape(b, s, h * hd), p["wo"], policy=policy)
+    return jnp.tanh(gate) * o.astype(jnp.float32)
+
+
+def forward_vlm(params: dict, tokens: jnp.ndarray, img_embeds: jnp.ndarray,
+                cfg: ArchConfig, policy: ExecPolicy | None = None):
+    """tokens (B, S); img_embeds (B, N_img, d_frontend) -> (logits, aux)."""
+    policy = policy or ExecPolicy.from_cfg(cfg)
+    img = linear(img_embeds, params["img_proj"], policy=policy)
+    if cfg.mgnet and cfg.mgnet_keep_ratio < 1.0:
+        img = prune_image_tokens(params, img, cfg.mgnet_keep_ratio)
+    img = shard(img, "batch", None, "embed")
+    x = embedding_lookup(params["embed"], tokens)
+    x = shard(x, "batch", "seq", "embed")
+    p_sb = cfg.cross_every
+
+    def body(carry, sb):
+        def self_body(c, lp):
+            return dense_layer_fwd(lp, c, cfg, policy), None
+        fn = jax.checkpoint(self_body) if cfg.remat else self_body
+        carry, _ = jax.lax.scan(fn, carry, sb["selfs"])
+        kv = _img_kv(sb["xattn"], img, cfg, policy)
+        hx = rmsnorm(carry, sb["lnx"], cfg.norm_eps)
+        carry = carry + _cross(sb["xattn"], sb["xgate"], hx, kv, cfg,
+                               policy).astype(carry.dtype)
+        return shard(carry, "batch", "seq", "embed"), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = linear(x, params["lm_head"], policy=policy)
+    return shard(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def vlm_cache_spec(cfg: ArchConfig, batch: int, seq_len: int,
+                   dtype=jnp.bfloat16):
+    hkv, hd = cfg.kv_heads, cfg.head_dim
+    n_sb = cfg.n_layers // cfg.cross_every
+    p_sb = cfg.cross_every
+    n_img = (int(cfg.mgnet_keep_ratio * cfg.n_img_tokens)
+             if cfg.mgnet and cfg.mgnet_keep_ratio < 1.0 else cfg.n_img_tokens)
+    shapes = {"k": ((n_sb, p_sb, batch, seq_len, hkv, hd), dtype),
+              "v": ((n_sb, p_sb, batch, seq_len, hkv, hd), dtype),
+              "xk": ((n_sb, batch, n_img, hkv, hd), dtype),
+              "xv": ((n_sb, batch, n_img, hkv, hd), dtype)}
+    axes = {"k": ("p_layers", None, "batch", "kv_seq", None, None),
+            "v": ("p_layers", None, "batch", "kv_seq", None, None),
+            "xk": ("p_layers", "batch", None, None, None),
+            "xv": ("p_layers", "batch", None, None, None)}
+    return shapes, axes
+
+
+def decode_step_vlm(params: dict, cache: dict, tokens: jnp.ndarray, pos,
+                    cfg: ArchConfig, policy: ExecPolicy | None = None):
+    """One text-token step; image cross-KV precomputed in the cache."""
+    policy = policy or ExecPolicy.from_cfg(cfg, training=False)
+    x = embedding_lookup(params["embed"], tokens)
+
+    def body(carry, xs):
+        sb, ck, cv, xk, xv = xs
+
+        def self_body(c, lxs):
+            lp, k1, v1 = lxs
+            h = rmsnorm(c, lp["ln1"], cfg.norm_eps)
+            o, k1, v1 = attn_decode(lp["attn"], h, k1, v1, pos, cfg, policy)
+            c = c + o
+            c = c + ffn_mod.swiglu(lp["ffn"],
+                                   rmsnorm(c, lp["ln2"], cfg.norm_eps), policy)
+            return c, (k1, v1)
+
+        carry, (ck, cv) = jax.lax.scan(self_body, carry, (sb["selfs"], ck, cv))
+        hx = rmsnorm(carry, sb["lnx"], cfg.norm_eps)
+        carry = carry + _cross(sb["xattn"], sb["xgate"], hx, (xk, xv), cfg,
+                               policy).astype(carry.dtype)
+        return carry, (ck, cv)
+
+    x, (k2, v2) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                         cache["v"], cache["xk"], cache["xv"]))
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = linear(x, params["lm_head"], policy=policy)[:, 0]
+    return logits, {"k": k2, "v": v2, "xk": cache["xk"], "xv": cache["xv"]}

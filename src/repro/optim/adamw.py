@@ -1,0 +1,109 @@
+"""AdamW + SGD optimizers (pure-function, pytree state) + LR schedules.
+
+Built from scratch (no optax in this environment). Two state-precision
+modes:
+  * fp32 (default): m, v in f32 — standard.
+  * bf16 ("low_mem"): m, v stored bf16 — the 405B-scale memory trick
+    (4 bytes/param optimizer state instead of 8; DESIGN.md §4). Update
+    math still runs in f32; only storage is rounded.
+
+Optimizer state inherits each parameter's sharding automatically under
+jit (states are elementwise images of params).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "sgd_init",
+           "sgd_update", "warmup_cosine", "clip_by_global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    low_mem: bool = False          # bf16 m/v storage
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    dt = jnp.bfloat16 if cfg.low_mem else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 lr_scale: jnp.ndarray | float = 1.0):
+    """Returns (new_params, new_state). All math f32; storage per cfg."""
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+    store_dt = jnp.bfloat16 if cfg.low_mem else jnp.float32
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mhat = mf / b1c
+        vhat = vf / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), mf.astype(store_dt), vf.astype(store_dt)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def sgd_init(params, momentum: float = 0.9):
+    return {"mom": jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def sgd_update(grads, state, params, lr: float, momentum: float = 0.9):
+    def upd(g, mo, p):
+        mo = momentum * mo + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * mo).astype(p.dtype), mo
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["mom"])
+    out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+    return (tdef.unflatten([o[0] for o in out]),
+            {"mom": tdef.unflatten([o[1] for o in out])})
+
+
+def warmup_cosine(step, *, peak_lr_scale: float = 1.0, warmup: int = 100,
+                  total: int = 10000, floor: float = 0.1):
+    """LR multiplier: linear warmup then cosine decay to floor*peak."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr_scale * jnp.where(s < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float = 1.0):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn

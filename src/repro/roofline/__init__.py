@@ -1,0 +1,1 @@
+"""Roofline analysis: optimized-HLO parsing + per-cell term derivation."""

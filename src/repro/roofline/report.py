@@ -1,0 +1,106 @@
+"""Roofline terms + report rows from analyzed dry-run artifacts.
+
+Hardware constants (TPU v5e-class, per chip — pinned by the assignment):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: ~50 GB/s per link
+
+Terms (seconds, per device — HLO shapes are already per-shard):
+    compute    = hlo_flops / 197e12
+    memory     = hlo_bytes / 819e9
+    collective = wire_bytes / 50e9
+
+MODEL_FLOPS (the "useful work" yardstick):
+    train  : 6 * N * D     (fwd 2ND + bwd 4ND), N = params (active for MoE)
+    prefill: 2 * N * D
+    decode : 2 * N * B     (one token per sequence in the batch)
+with D = tokens processed globally; reported per-device for the ratio
+against per-device HLO FLOPs. ratio < 1 flags remat/redundant compute;
+the gap is the re-computation + attention/vocab FLOPs the 6ND yardstick
+ignores.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.roofline.hlo_analysis import Cost
+
+__all__ = ["HW", "roofline_terms", "model_flops", "make_row", "render_table"]
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12          # bf16 / chip
+    hbm_bw: float = 819e9               # B/s / chip
+    link_bw: float = 50e9               # B/s / link
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Global ideal FLOPs for one step of this cell."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token / seq
+
+
+def roofline_terms(cost: Cost, cfg: ArchConfig, shape: ShapeConfig,
+                   n_devices: int, hw: HW = HW()) -> dict:
+    # int8 dots (the paper's w8a8 execution mode) run at 2x MXU peak
+    t_c = ((cost.flops - cost.int8_flops) / hw.peak_flops
+           + cost.int8_flops / (2.0 * hw.peak_flops))
+    t_m = cost.bytes / hw.hbm_bw
+    t_x = cost.coll_bytes / hw.link_bw
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops(cfg, shape) / n_devices
+    bound = max(t_c, t_m, t_x)
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": cost.flops,
+        "useful_ratio": (mf / cost.flops) if cost.flops else 0.0,
+        # fraction of roofline-limited time that is the useful-compute
+        # floor: (mf/peak) / max-term — the score we hillclimb.
+        "roofline_frac": (mf / hw.peak_flops) / bound if bound else 0.0,
+        "step_s_lower_bound": bound,
+    }
+
+
+def make_row(arch: str, shape: str, mesh: str, cost: Cost, terms: dict,
+             bytes_per_dev: float | None = None) -> dict:
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh,
+        "flops": cost.flops, "bytes": cost.bytes,
+        "coll_bytes": cost.coll_bytes, "coll_by_op": cost.coll_by_op,
+        "mem_per_dev_bytes": bytes_per_dev,
+        **terms,
+    }
+
+
+_COLS = [
+    ("arch", 22), ("shape", 12), ("compute_s", 11), ("memory_s", 11),
+    ("collective_s", 13), ("dominant", 10), ("useful_ratio", 12),
+    ("roofline_frac", 13),
+]
+
+
+def _fmt(v, w):
+    if isinstance(v, float):
+        s = f"{v:.4g}"
+    else:
+        s = str(v)
+    return s.ljust(w)
+
+
+def render_table(rows: list[dict]) -> str:
+    head = "".join(_fmt(c, w) for c, w in _COLS)
+    lines = [head, "-" * len(head)]
+    for r in rows:
+        lines.append("".join(_fmt(r.get(c, ""), w) for c, w in _COLS))
+    return "\n".join(lines)

@@ -1,0 +1,60 @@
+"""Perf-knob numerics: bf16 operand paths must stay close to the f32
+reference (these knobs are §Perf optimizations — correctness gates)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (blockwise_attention, decode_attention,
+                                    full_attention)
+
+
+def _qkv(seed, b, s, h, hkv, d, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(k1, (b, s, h, d), dtype),
+            jax.random.normal(k2, (b, s, hkv, d), dtype),
+            jax.random.normal(k3, (b, s, hkv, d), dtype))
+
+
+@pytest.mark.parametrize("knob", [dict(p_bf16=True), dict(qk_bf16=True),
+                                  dict(p_bf16=True, qk_bf16=True)])
+@pytest.mark.parametrize("block_skip", [False, True])
+def test_bf16_flash_paths_close_to_f32(knob, block_skip):
+    q, k, v = _qkv(0, 1, 256, 4, 2, 32)
+    ref = blockwise_attention(q, k, v, causal=True, block_q=64, block_kv=64,
+                              block_skip=block_skip)
+    out = blockwise_attention(q, k, v, causal=True, block_q=64, block_kv=64,
+                              block_skip=block_skip, **knob)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+    # correlation essentially 1 (bf16 rounding only)
+    c = np.corrcoef(np.asarray(out).ravel(), np.asarray(ref).ravel())[0, 1]
+    assert c > 0.999
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([8, 17, 32]))
+def test_bf16_decode_close_to_f32(seed, length):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (2, 1, 4, 16))
+    kc = jax.random.normal(k2, (2, 32, 2, 16), jnp.bfloat16)
+    vc = jax.random.normal(k3, (2, 32, 2, 16), jnp.bfloat16)
+    a = decode_attention(q, kc, vc, length)
+    b = decode_attention(q, kc, vc, length, bf16_compute=True)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_bf16_decode_window():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(k1, (1, 1, 2, 8))
+    kc = jax.random.normal(k2, (1, 64, 2, 8), jnp.bfloat16)
+    vc = jax.random.normal(k3, (1, 64, 2, 8), jnp.bfloat16)
+    a = decode_attention(q, kc, vc, 50, window=16)
+    b = decode_attention(q, kc, vc, 50, window=16, bf16_compute=True)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=3e-2, atol=3e-2)

@@ -1,0 +1,119 @@
+"""Checkpointing: roundtrip, atomicity/corruption, retention, async."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (CheckpointManager, async_save,
+                                         latest_step, restore, save)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(6, dtype=jnp.int32),
+                       "c": jnp.float32(3.5)},
+            "opt": {"m": jnp.zeros((4, 8), jnp.bfloat16)}}
+
+
+def _assert_tree_equal(a, b):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path / "ck"), t, step=7)
+    t2, step = restore(str(tmp_path / "ck"), t)
+    assert step == 7
+    _assert_tree_equal(t, t2)
+
+
+def test_restore_preserves_dtype(tmp_path):
+    t = _tree()
+    save(str(tmp_path / "ck"), t)
+    t2, _ = restore(str(tmp_path / "ck"), t)
+    assert t2["opt"]["m"].dtype == jnp.bfloat16
+
+
+def test_checksum_detects_corruption(tmp_path):
+    t = _tree()
+    path = str(tmp_path / "ck")
+    save(path, t, step=1)
+    # corrupt one leaf file
+    fn = [f for f in os.listdir(path) if f.endswith(".npy")][0]
+    arr = np.load(os.path.join(path, fn))
+    np.save(os.path.join(path, fn), arr + 1)
+    with pytest.raises(IOError, match="checksum"):
+        restore(path, t)
+
+
+def test_atomic_overwrite(tmp_path):
+    path = str(tmp_path / "ck")
+    save(path, _tree(0), step=1)
+    save(path, _tree(1), step=2)
+    t2, step = restore(path, _tree(0))
+    assert step == 2
+    _assert_tree_equal(t2, _tree(1))
+
+
+def test_async_save_joinable(tmp_path):
+    t = _tree()
+    th = async_save(str(tmp_path / "ck"), t, step=3)
+    th.join()
+    t2, step = restore(str(tmp_path / "ck"), t)
+    assert step == 3
+    _assert_tree_equal(t, t2)
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.maybe_save(s, t)
+    mgr.wait()
+    mgr._gc()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]
+    assert latest_step(str(tmp_path)) == 4
+
+
+def test_manager_respects_interval(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=10, keep=5)
+    t = _tree()
+    for s in range(1, 25):
+        mgr.maybe_save(s, t)
+    mgr.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [10, 20]
+
+
+def test_restore_latest_none(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    restored, step = mgr.restore_latest(_tree())
+    assert restored is None and step == 0
+
+
+def test_elastic_remesh_restore(tmp_path):
+    """Restore with a ShardingCtx re-places leaves under new rules — the
+    elastic re-mesh path (single host device degenerates to placement,
+    but exercises the full code path)."""
+    from repro.distributed.sharding import ShardingCtx, DEFAULT_RULES
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ctx = ShardingCtx(mesh, DEFAULT_RULES)
+    t = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 4))}
+    axes = {"w": ("p_embed", "p_mlp")}
+    save(str(tmp_path / "ck"), t, step=5)
+    t2, step = restore(str(tmp_path / "ck"), t, ctx, axes)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(t2["w"]), np.asarray(t["w"]))
+    assert t2["w"].committed          # explicitly placed by device_put

@@ -1,0 +1,89 @@
+"""Pallas photonic-matmul kernel vs pure-jnp oracle (interpret mode).
+
+Contract: integer accumulate must match kernels/ref.py bit-for-bit; the
+f32 dequant epilogue may differ only by reassociation ulps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.core.photonic import photonic_matmul_exact
+from repro.kernels.ops import photonic_matmul
+from repro.kernels.photonic_matmul import photonic_matmul_int8
+from repro.kernels.ref import photonic_matmul_ref
+
+
+def _rand_int8(key, shape):
+    return jax.random.randint(key, shape, -127, 128, jnp.int32).astype(
+        jnp.int8)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128),
+    (256, 128, 128),
+    (128, 256, 384),
+    (384, 384, 128),
+])
+def test_int8_kernel_exact_vs_ref(m, k, n):
+    kx, kw, ks = jax.random.split(jax.random.PRNGKey(m + k + n), 3)
+    xq = _rand_int8(kx, (m, k))
+    wq = _rand_int8(kw, (k, n))
+    sx = jnp.float32(0.01)
+    sw = jax.random.uniform(ks, (n,), jnp.float32, 0.001, 0.1)
+    out = photonic_matmul_int8(xq, wq, sx, sw)
+    ref = photonic_matmul_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(128, 128, 128), (128, 256, 128),
+                                      (256, 128, 256)])
+def test_block_shape_invariance(bm, bn, bk):
+    """Grid/block decomposition must not change the integer result."""
+    m, k, n = 256, 256, 256
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    xq = _rand_int8(kx, (m, k))
+    wq = _rand_int8(kw, (k, n))
+    sx = jnp.float32(0.02)
+    sw = jnp.full((n,), 0.05, jnp.float32)
+    out = photonic_matmul_int8(xq, wq, sx, sw, bm=bm, bn=bn, bk=bk)
+    ref = photonic_matmul_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 300), st.integers(1, 200),
+       st.integers(0, 2**31 - 1))
+def test_float_api_matches_core_sim(m, k, n, seed):
+    """ops.photonic_matmul (pad + int8 kernel + dequant) == the behavioural
+    simulator's numerics for arbitrary (non-aligned) shapes."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    out = photonic_matmul(x, w)
+    ref = photonic_matmul_exact(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_float_api_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 96)).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (96, 48)).astype(dtype)
+    out = photonic_matmul(x, w)
+    assert out.shape == (64, 48)
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_leading_batch_dims():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 40))
+    w = jax.random.normal(jax.random.PRNGKey(1), (40, 24))
+    out = photonic_matmul(x, w)
+    assert out.shape == (2, 3, 24)
+    ref = photonic_matmul_exact(x.reshape(-1, 40), w).reshape(2, 3, 24)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)

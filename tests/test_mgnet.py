@@ -1,0 +1,98 @@
+"""MGNet RoI mask-generation tests (paper Eq. 3 + §IV RoI Selection)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mgnet import (MGNetConfig, bce_loss, init_mgnet, mask_iou,
+                              mgnet_mask, mgnet_scores, patchify,
+                              select_topk_patches)
+from repro.data.pipeline import ImageStream
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return MGNetConfig(patch=8, embed=32, heads=2, img_size=32)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_mgnet(jax.random.PRNGKey(0), cfg)
+
+
+def test_patchify_roundtrip_shape(cfg):
+    imgs = jnp.arange(2 * 32 * 32 * 3, dtype=jnp.float32).reshape(
+        2, 32, 32, 3)
+    p = patchify(imgs, cfg.patch)
+    assert p.shape == (2, 16, 8 * 8 * 3)
+    # first patch = top-left 8x8 block
+    np.testing.assert_array_equal(
+        np.asarray(p[0, 0].reshape(8, 8, 3)), np.asarray(imgs[0, :8, :8]))
+
+
+def test_scores_shape(params, cfg):
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (3, 32, 32, 3))
+    s = mgnet_scores(params, imgs, cfg)
+    assert s.shape == (3, cfg.n_patches)
+    assert not bool(jnp.isnan(s).any())
+
+
+def test_mask_binary(params, cfg):
+    imgs = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 32, 3))
+    m = mgnet_mask(params, imgs, cfg)
+    vals = set(np.unique(np.asarray(m)).tolist())
+    assert vals <= {0.0, 1.0}
+
+
+def test_topk_selects_highest(cfg):
+    scores = jnp.asarray([[0.1, 0.9, 0.5, 0.7]])
+    tokens = jnp.arange(4, dtype=jnp.float32)[None, :, None] + 10
+    pruned, idx = select_topk_patches(scores, tokens, keep=2)
+    assert pruned.shape == (1, 2, 1)
+    assert set(np.asarray(idx[0]).tolist()) == {1, 3}
+
+
+def test_mask_iou_properties():
+    a = jnp.asarray([[1.0, 1, 0, 0]])
+    assert float(mask_iou(a, a)) == pytest.approx(1.0)
+    b = jnp.asarray([[0.0, 0, 1, 1]])
+    assert float(mask_iou(a, b)) == pytest.approx(0.0)
+    c = jnp.asarray([[1.0, 0, 1, 0]])
+    assert float(mask_iou(a, c)) == pytest.approx(1 / 3, abs=1e-6)
+
+
+def test_bce_loss_direction():
+    logits = jnp.asarray([10.0, -10.0])
+    good = bce_loss(logits, jnp.asarray([1.0, 0.0]))
+    bad = bce_loss(logits, jnp.asarray([0.0, 1.0]))
+    assert float(good) < 0.01 < float(bad)
+
+
+def test_mgnet_learns_synthetic_boxes(cfg, params):
+    """Train MGNet on the planted-box ImageStream: mIoU must improve
+    substantially over the untrained net (mechanism-level reproduction of
+    the paper's BCE-against-box-labels training)."""
+    stream = ImageStream(img_size=32, global_batch=16, patch=8, seed=3)
+
+    def loss_fn(p, batch):
+        s = mgnet_scores(p, batch["images"], cfg)
+        return bce_loss(s, batch["patch_mask"])
+
+    @jax.jit
+    def step(p, batch):
+        l, g = jax.value_and_grad(loss_fn)(p, batch)
+        return jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g), l
+
+    def miou(p):
+        batch = stream.batch_at(999)
+        pred = (jax.nn.sigmoid(mgnet_scores(p, batch["images"], cfg))
+                > cfg.t_reg).astype(jnp.float32)
+        return float(mask_iou(pred, batch["patch_mask"]))
+
+    m0 = miou(params)
+    p = params
+    for i in range(200):
+        p, _ = step(p, stream.batch_at(i))
+    m1 = miou(p)
+    assert m1 > max(m0 + 0.15, 0.4), (m0, m1)

@@ -1,0 +1,99 @@
+"""MoE routing/dispatch tests (sort-based capacity dispatch, GShard-style)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import _combine_group, _dispatch_group, init_moe, moe_ffn
+
+
+def test_dispatch_combine_identity():
+    """With identity experts and ample capacity, combine(dispatch(x)) == x
+    (gates normalized to sum 1 per token)."""
+    t, d, e, k = 16, 8, 4, 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (t, d))
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(1), (t, e)), -1)
+    cap = t * k                                   # no drops possible
+    disp, info = _dispatch_group(x, probs, k, cap)
+    y = _combine_group(disp, info, t, k, x.dtype)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_capacity_drops_zero_contribution():
+    """cap=1: each expert processes at most one slot; dropped tokens
+    contribute zero (GShard over-capacity semantics)."""
+    t, d, e, k = 8, 4, 2, 1
+    x = jnp.ones((t, d))
+    probs = jnp.tile(jnp.asarray([[0.9, 0.1]]), (t, 1))   # all want expert 0
+    disp, info = _dispatch_group(x, probs, k, cap=1)
+    y = _combine_group(disp, info, t, k, x.dtype)
+    kept_rows = int((np.abs(np.asarray(y)).sum(-1) > 0).sum())
+    assert kept_rows == 1                                  # only one survived
+
+
+def test_moe_ffn_shapes_and_aux():
+    p = init_moe(jax.random.PRNGKey(0), 16, 32, 8, shared_experts=1,
+                 dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    y, aux = moe_ffn(p, x, top_k=2, capacity_factor=2.0)
+    assert y.shape == x.shape
+    assert not bool(jnp.isnan(y).any())
+    # Switch aux loss: e * sum(me * load) ~= 1 for uniform routing, >= 1 else
+    assert 0.5 < float(aux) < 8.0
+
+
+def test_moe_groups_consistency():
+    """Group count changes dispatch locality, not semantics: with ample
+    capacity the outputs must agree across group counts."""
+    p = init_moe(jax.random.PRNGKey(0), 16, 32, 4, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16))
+    y1, _ = moe_ffn(p, x, top_k=2, capacity_factor=8.0, groups=1)
+    y2, _ = moe_ffn(p, x, top_k=2, capacity_factor=8.0, groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_shard_map_path_matches_gspmd():
+    """Explicit-EP shard_map MoE == GSPMD MoE on the host mesh (the
+    256-chip equivalence is structural: same math, manual collectives)."""
+    import numpy as np
+    from repro.distributed.sharding import use_sharding
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.moe import moe_ffn_shard_map
+    p = init_moe(jax.random.PRNGKey(0), 16, 32, 8, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16))
+    mesh = make_host_mesh(1, 1)
+    with mesh, use_sharding(mesh):
+        y1, a1 = moe_ffn(p, x, top_k=2, capacity_factor=2.0, groups=1)
+        y2, a2 = jax.jit(lambda p, x: moe_ffn_shard_map(
+            p, x, top_k=2, capacity_factor=2.0))(p, x)
+        g = jax.grad(lambda p: moe_ffn_shard_map(p, x, top_k=2)[0].sum())(p)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+    assert float(a1) == pytest.approx(float(a2), rel=1e-5)
+    gn = sum(float(jnp.abs(l).sum()) for l in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_shard_map_falls_back_without_ctx():
+    from repro.models.moe import moe_ffn_shard_map
+    p = init_moe(jax.random.PRNGKey(0), 8, 16, 4, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 8))
+    y, aux = moe_ffn_shard_map(p, x, top_k=2)     # no mesh installed
+    assert y.shape == x.shape
+
+
+def test_moe_grad_flows():
+    p = init_moe(jax.random.PRNGKey(0), 8, 16, 4, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 8))
+
+    def loss(p):
+        y, aux = moe_ffn(p, x, top_k=2)
+        return (y ** 2).mean() + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    gn = sum(float(jnp.abs(l).sum()) for l in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0

@@ -1,0 +1,78 @@
+"""Optical-core simulator tests (paper Figs 4/6 chunked MatMul)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.photonic import (OpticalCoreConfig, matmul_stats,
+                                 photonic_matmul_exact, photonic_matmul_sim)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 4), st.integers(1, 3),
+       st.integers(0, 2**31 - 1))
+def test_sim_matches_exact(mm, kk, nn, seed):
+    """The tile-walking simulator == the one-shot integer-exact matmul
+    (both w8a8): the chunk-accumulate order must not change the result."""
+    m, k, n = mm * 7, kk * 33, nn * 65       # deliberately non-multiples
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    a = photonic_matmul_sim(x, w)
+    b = photonic_matmul_exact(x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantization_error_bounded():
+    """w8a8 photonic matmul vs float matmul: error scales with the
+    quantization steps of x and w."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 32))
+    exact = x @ w
+    phot = photonic_matmul_exact(x, w)
+    rel = float(jnp.abs(phot - exact).max() / jnp.abs(exact).max())
+    assert rel < 0.05, rel                     # 8-bit: ~1% typical
+
+
+def test_noise_injection_increases_error():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (32, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    clean = photonic_matmul_sim(x, w)
+    noisy = photonic_matmul_sim(
+        x, w, OpticalCoreConfig(apply_noise=True, fpv_sigma=0.05),
+        noise_key=jax.random.PRNGKey(2))
+    assert float(jnp.abs(noisy - clean).max()) > 0
+
+
+class TestMatmulStats:
+    def test_single_tile(self):
+        cfg = OpticalCoreConfig()
+        s = matmul_stats(1, 32, 64, cfg)
+        assert s.mr_tunings == 32 * 64            # one full tile tuned
+        assert s.adc_conversions == 64            # one output row
+        assert s.electronic_adds == 0             # single K chunk
+
+    def test_k_chunking(self):
+        cfg = OpticalCoreConfig()
+        s = matmul_stats(1, 64, 64, cfg)          # 2 wavelength chunks
+        assert s.mr_tunings == 2 * 32 * 64
+        assert s.electronic_adds == 1 * 1 * 64    # (kc-1) partial merges
+
+    def test_event_counts_scale_with_m(self):
+        cfg = OpticalCoreConfig()
+        s1 = matmul_stats(8, 128, 128, cfg)
+        s2 = matmul_stats(16, 128, 128, cfg)
+        assert s2.vcsel_cycles == 2 * s1.vcsel_cycles
+        assert s2.adc_conversions == 2 * s1.adc_conversions
+        assert s2.mr_tunings == s1.mr_tunings     # tuning is M-independent
+
+    def test_core_parallelism_reduces_cycles(self):
+        s1 = matmul_stats(64, 256, 256, OpticalCoreConfig(n_cores=1))
+        s5 = matmul_stats(64, 256, 256, OpticalCoreConfig(n_cores=5))
+        assert s5.cycles < s1.cycles
+        assert s5.cycles >= s1.cycles // 5

@@ -1,0 +1,90 @@
+"""Sharding rules + context tests (single-device degenerate mesh; the
+512-device production meshes are exercised by launch/dryrun.py only)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (DEFAULT_RULES, MULTIPOD_RULES,
+                                        ShardingCtx, current_ctx,
+                                        logical_spec, named_sharding, shard,
+                                        use_sharding)
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    return ShardingCtx(mesh, DEFAULT_RULES)
+
+
+def test_shard_noop_without_ctx():
+    x = jnp.ones((4, 8))
+    y = shard(x, "batch", "embed")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert current_ctx() is None
+
+
+def test_ctx_installs_and_restores():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert current_ctx() is None
+    with use_sharding(mesh):
+        assert current_ctx() is not None
+        with use_sharding(None):
+            assert current_ctx() is None
+        assert current_ctx() is not None
+    assert current_ctx() is None
+
+
+def test_spec_mapping(ctx):
+    assert ctx.spec("batch", "seq", "embed") == P("data", None, None)
+    assert ctx.spec("batch", None, "mlp") == P("data", None, "model")
+    assert ctx.spec("p_embed", "p_mlp") == P("data", "model")
+
+
+def test_multipod_rules_add_pod_axis():
+    assert MULTIPOD_RULES["batch"] == ("pod", "data")
+    assert MULTIPOD_RULES["p_embed"] == ("pod", "data")
+    assert MULTIPOD_RULES["p_mlp"] == "model"       # TP unchanged
+
+
+def test_logical_spec_divisibility_fallback():
+    """Rules whose axis size does not divide the dim drop to replicated —
+    e.g. GQA kv_heads=8 on model=16, odd vocabs, batch=1 decode."""
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    fctx = ShardingCtx(FakeMesh(), DEFAULT_RULES)
+    # 50280 % 16 != 0 -> vocab dim replicated
+    spec = logical_spec((32, 50280), ("batch", "vocab"), fctx)
+    assert spec == P("data", None)
+    # batch=1 under data=16 -> replicated
+    spec = logical_spec((1, 128), ("batch", "seq"), fctx)
+    assert spec == P(None, None)
+    # clean divisible case keeps both
+    spec = logical_spec((32, 4096), ("batch", "mlp"), fctx)
+    assert spec == P("data", "model")
+
+
+def test_shard_applies_constraint_under_jit(ctx):
+    with use_sharding(ctx.mesh, ctx.rules):
+        @jax.jit
+        def f(x):
+            return shard(x, "batch", "embed") * 2
+
+        y = f(jnp.ones((4, 8)))
+    np.testing.assert_array_equal(np.asarray(y), 2.0)
+
+
+def test_shard_rank_mismatch_raises(ctx):
+    with use_sharding(ctx.mesh, ctx.rules):
+        with pytest.raises(ValueError, match="rank"):
+            shard(jnp.ones((4, 8)), "batch")
+
+
+def test_named_sharding_roundtrip(ctx):
+    ns = named_sharding((8, 16), ("batch", "mlp"), ctx)
+    assert ns.spec == P("data", "model")

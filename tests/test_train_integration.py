@@ -1,0 +1,106 @@
+"""System integration: train loop + checkpoint resume + serve generate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs.base import ShapeConfig, smoke_variant
+from repro.configs.registry import get_config
+from repro.distributed.sharding import use_sharding
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import generate, init_cache
+from repro.launch.train import init_state, make_stream, train_loop
+from repro.models import api as model_api
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh(1, 1)
+
+
+SHAPE = ShapeConfig("itest", seq_len=32, global_batch=4, kind="train")
+
+
+def test_train_loss_decreases(mesh):
+    cfg = smoke_variant(get_config("qwen2-1.5b")).with_(n_layers=2,
+                                                        lr_warmup=5)
+    shape = ShapeConfig("loss", seq_len=32, global_batch=8, kind="train")
+    with mesh, use_sharding(mesh):
+        _, losses, _ = train_loop(cfg, shape, 100, log_every=1000)
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.3, (first, last)
+
+
+def test_checkpoint_resume_bit_identical(mesh, tmp_path):
+    """Train 10 steps straight vs 5 + resume + 5: identical final loss
+    (deterministic data + state restore)."""
+    cfg = smoke_variant(get_config("qwen2-1.5b")).with_(n_layers=2)
+    with mesh, use_sharding(mesh):
+        _, losses_straight, _ = train_loop(cfg, SHAPE, 10, log_every=1000)
+
+        mgr = CheckpointManager(str(tmp_path), every=5, keep=2)
+        train_loop(cfg, SHAPE, 5, ckpt=mgr, log_every=1000)
+        _, losses_resumed, _ = train_loop(cfg, SHAPE, 10, ckpt=mgr,
+                                          log_every=1000)
+    np.testing.assert_allclose(losses_straight[5:], losses_resumed,
+                               rtol=1e-5)
+
+
+def test_microbatch_equivalence(mesh):
+    """Gradient accumulation (k=2) must match the single-shot step within
+    fp tolerance on the first step's loss and produce finite updates."""
+    base = smoke_variant(get_config("qwen2-1.5b")).with_(n_layers=2)
+    from repro.launch.steps import make_train_fn
+    batch_at = None
+    with mesh, use_sharding(mesh):
+        state1 = init_state(base, seed=0)
+        state2 = init_state(base.with_(microbatch_steps=2), seed=0)
+        batch = make_stream(base, SHAPE, seed=0)(0)
+        s1, m1 = jax.jit(make_train_fn(base))(state1, batch)
+        s2, m2 = jax.jit(make_train_fn(
+            base.with_(microbatch_steps=2)))(state2, batch)
+    # same data, same params -> same mean loss; grads averaged vs summed
+    # per-microbatch may differ slightly in clip norm
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-2)
+
+
+def test_serve_generates_tokens(mesh):
+    cfg = smoke_variant(get_config("qwen2-1.5b")).with_(n_layers=2)
+    with mesh, use_sharding(mesh):
+        params = model_api.init_model(jax.random.PRNGKey(0), cfg)
+        cache = init_cache(cfg, batch=2, seq_len=64)
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                    cfg.vocab, jnp.int32)
+        toks, tps = generate(params, cache, prompt, 6, cfg)
+    assert toks.shape == (2, 6)
+    assert int(toks.min()) >= 0 and int(toks.max()) < cfg.vocab
+    assert tps > 0
+
+
+def test_ssm_serve(mesh):
+    """Decode works for the recurrent-state family too (no KV cache)."""
+    cfg = smoke_variant(get_config("mamba2-780m")).with_(n_layers=2)
+    with mesh, use_sharding(mesh):
+        params = model_api.init_model(jax.random.PRNGKey(0), cfg)
+        cache = init_cache(cfg, batch=2, seq_len=64)
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                    cfg.vocab, jnp.int32)
+        toks, _ = generate(params, cache, prompt, 4, cfg)
+    assert toks.shape == (2, 4)
+
+
+def test_fault_injection_resume(mesh, tmp_path):
+    """Injected fault mid-run + run_with_restarts-style retry via the
+    train_loop checkpoint path."""
+    cfg = smoke_variant(get_config("qwen2-1.5b")).with_(n_layers=2)
+    mgr = CheckpointManager(str(tmp_path), every=3, keep=3)
+    with mesh, use_sharding(mesh):
+        with pytest.raises(RuntimeError, match="injected"):
+            train_loop(cfg, SHAPE, 10, ckpt=mgr, log_every=1000,
+                       inject_fault_at=7)
+        # resume: restores from step 6 checkpoint and completes
+        _, losses, _ = train_loop(cfg, SHAPE, 10, ckpt=mgr, log_every=1000)
+    assert len(losses) == 4            # steps 6..9 re-run
