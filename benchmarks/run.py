@@ -12,8 +12,9 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (fig8_energy, fig9_latency, fig10_11_mgnet,
-                        roofline_table, table1_qat, table4_kfps)
+from benchmarks import (bench_backend_cache, fig8_energy, fig9_latency,
+                        fig10_11_mgnet, roofline_table, table1_qat,
+                        table4_kfps)
 
 ALL = {
     "fig8": fig8_energy.run,
@@ -22,6 +23,7 @@ ALL = {
     "table1": table1_qat.run,
     "table4": table4_kfps.run,
     "roofline": roofline_table.run,
+    "cache": bench_backend_cache.run,
 }
 
 

@@ -11,6 +11,8 @@ from __future__ import annotations
 from benchmarks.common import frame_report
 from repro.core.energy import kfps_per_watt
 
+SERVING_BACKENDS = ("photonic_sim", "photonic_pallas")
+
 PAPER_TABLE = {          # KFPS/W as reported in Table IV
     "LightBulb [34]": 57.75,
     "HolyLight [33]": 3.3,
@@ -23,8 +25,33 @@ PAPER_TABLE = {          # KFPS/W as reported in Table IV
 }
 
 
+def _validate_serving_backends() -> None:
+    """The KFPS/W headline models the photonic serving path; gate it on the
+    two photonic execution backends (oracle + Pallas kernel) agreeing on a
+    live forward with the quantize-once weight cache (core/backend.py)."""
+    import jax
+    import numpy as np
+
+    from repro.configs.base import smoke_variant
+    from repro.configs.opto_vit import get_config
+    from repro.core.backend import prepare_params
+    from repro.models.vit import forward_vit, init_vit
+
+    cfg = smoke_variant(get_config("tiny", img_size=96))
+    params = prepare_params(init_vit(jax.random.PRNGKey(0), cfg, n_classes=8))
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.img_size,
+                                                     cfg.img_size, 3))
+    logits = [forward_vit(params, imgs, cfg.with_(matmul_backend=b))[0]
+              for b in SERVING_BACKENDS]
+    np.testing.assert_allclose(np.asarray(logits[0]), np.asarray(logits[1]),
+                               rtol=1e-5, atol=1e-5)
+    print(f"  serving backends {SERVING_BACKENDS} agree "
+          "(cached-weight forward)")
+
+
 def run() -> list[dict]:
     print("\n== Table IV: KFPS/W comparison ==")
+    _validate_serving_backends()
     rep = frame_report("tiny", 96)
     ours = kfps_per_watt(rep)
     rows = [{"design": "Opto-ViT (this work, model)", "kfps_w": ours}]

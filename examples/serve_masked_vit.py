@@ -25,6 +25,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.common import frame_report
 from repro.configs.base import smoke_variant
 from repro.configs.opto_vit import get_config
+from repro.core.backend import (ExecPolicy, available_backends,
+                                prepare_params)
 from repro.core.energy import kfps_per_watt
 from repro.data.pipeline import ImageStream
 from repro.models.vit import forward_vit, init_vit
@@ -37,13 +39,27 @@ def main():
     ap.add_argument("--keep", type=float, default=0.4,
                     help="MGNet keep ratio (1.0 = no pruning)")
     ap.add_argument("--photonic", action="store_true", default=True)
+    ap.add_argument("--backend", default="photonic_sim",
+                    help=f"matmul backend: {', '.join(available_backends())}")
     args = ap.parse_args()
+    if args.backend and args.backend not in available_backends():
+        raise SystemExit(f"unknown backend {args.backend!r}; "
+                         f"choose from {available_backends()}")
 
     cfg = smoke_variant(get_config("tiny")).with_(
-        photonic=args.photonic, mgnet=True, mgnet_keep_ratio=args.keep)
+        photonic=args.photonic, matmul_backend=args.backend,
+        mgnet=True, mgnet_keep_ratio=args.keep)
     base_cfg = cfg.with_(mgnet=False, mgnet_keep_ratio=1.0)
+    policy = ExecPolicy.from_cfg(cfg, training=False)
 
     params = init_vit(jax.random.PRNGKey(0), cfg, n_classes=8)
+    if policy.is_photonic():
+        # MR tuning happens once, before any request arrives: every matmul
+        # weight (backbone + MGNet) is pre-quantized; the per-request path
+        # quantizes only activations.
+        params = prepare_params(params, bits=cfg.quant_bits or 8)
+        print(f"[serve] backend={policy.resolve_backend()} "
+              "(quantize-once weight cache active)")
     stream = ImageStream(img_size=cfg.img_size, global_batch=args.batch,
                          n_classes=8, patch=cfg.patch, seed=0)
 

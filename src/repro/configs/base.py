@@ -87,6 +87,11 @@ class ArchConfig:
     # paper technique knobs
     quant_bits: int = 0                  # 0 = off; 8 = paper's QAT/photonic
     photonic: bool = False
+    matmul_backend: str = ""             # "" = resolve from the flags above;
+    #                                      explicit: bf16 | qat | photonic_sim
+    #                                      | photonic_pallas (core/backend.py)
+    pallas_interpret: bool = True        # run Pallas kernels in interpreter
+    #                                      mode (CPU hosts); False on TPU
 
     # perf-hillclimb knobs (EXPERIMENTS.md §Perf; all default to the
     # paper-faithful baseline behaviour)

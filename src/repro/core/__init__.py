@@ -1,6 +1,7 @@
 """Opto-ViT core: the paper's contributions as composable JAX modules.
 
   quant                 - symmetric 8-bit QAT with STE (paper S.IV Accuracy)
+  backend               - matmul backend registry + quantize-once weight cache
   noise                 - MR crosstalk/resolution device model (paper S.IV MR)
   photonic              - optical-core WDM chunked MatMul simulator (Figs 4/6)
   mgnet                 - RoI mask generation network + patch pruning (Eq. 3)
@@ -9,8 +10,8 @@
   schedule              - 5-core pipeline occupancy model (Fig. 5)
 """
 
-from repro.core import (decomposed_attention, energy, mgnet, noise, photonic,
-                        quant, schedule)
+from repro.core import (backend, decomposed_attention, energy, mgnet, noise,
+                        photonic, quant, schedule)
 
-__all__ = ["quant", "noise", "photonic", "mgnet", "decomposed_attention",
-           "energy", "schedule"]
+__all__ = ["quant", "backend", "noise", "photonic", "mgnet",
+           "decomposed_attention", "energy", "schedule"]

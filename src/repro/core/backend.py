@@ -1,0 +1,404 @@
+"""Unified matmul execution backend: registry + quantize-once weight cache.
+
+The paper's optical core tunes each MR weight tile *once* and then streams
+activations through it (Fig. 6); re-deriving weight quantization scales on
+every forward call has no hardware analogue and wastes the dominant dataflow
+lever (Lightening-Transformer makes the same observation for DPTC arrays).
+This module is the software analogue of that design point:
+
+  * ``ExecPolicy``        - execution-mode knobs threaded from ArchConfig
+    into every layer (moved here from models/layers.py so core modules can
+    route through the same dispatch without a models dependency),
+  * a **backend registry** of interchangeable matmul implementations::
+
+        bf16            plain MXU dot (f32 accumulate), the LM default
+        qat             fake-quant w8a8 (STE in training) - paper SIV
+        photonic_sim    chunk-walking w8a8 integer oracle (Fig. 6 schedule)
+        photonic_pallas int8 Pallas MXU kernel (kernels/photonic_matmul.py)
+
+    All photonic backends share one numerics contract: their int32
+    accumulates are bit-identical to ``photonic_matmul_exact`` (enforced by
+    tests/test_backend_parity.py),
+  * ``QuantizedWeight`` + ``prepare_params``: the **quantize-once cache**.
+    ``prepare_params`` walks a param pytree and replaces every matmul weight
+    with its pre-computed int8 codes + per-output-channel scale (the MR
+    tuning step). The per-call photonic path then does only activation
+    quantization + integer matmul + dequant.
+
+``linear`` is the single entry point every model matmul funnels through.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+__all__ = [
+    "ExecPolicy",
+    "QuantizedWeight",
+    "quantize_weight",
+    "prepare_params",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "matmul",
+    "linear",
+    "int_accumulate_exact",
+    "int_accumulate_sim",
+    "int_accumulate_pallas",
+]
+
+# photonic K-chunk width (32 WDM wavelength channels, paper Fig. 3b)
+_WAVELENGTHS = 32
+
+
+class ExecPolicy:
+    """Execution-mode knobs threaded from ArchConfig into every layer.
+
+    ``backend`` names a registry entry explicitly; when empty the legacy
+    flags resolve it: photonic -> photonic_sim, quant_bits -> qat, else bf16.
+    ``interpret`` runs Pallas kernels in interpreter mode (CPU hosts); set
+    False on a real TPU deployment.
+    """
+
+    __slots__ = ("quant_bits", "photonic", "training", "dot_out_native",
+                 "backend", "interpret")
+
+    def __init__(self, quant_bits: int = 0, photonic: bool = False,
+                 training: bool = True, dot_out_native: bool = False,
+                 backend: str = "", interpret: bool = True):
+        self.quant_bits = quant_bits
+        self.photonic = photonic
+        self.training = training
+        self.dot_out_native = dot_out_native
+        self.backend = backend
+        self.interpret = interpret
+
+    @staticmethod
+    def from_cfg(cfg, training: bool = True) -> "ExecPolicy":
+        return ExecPolicy(getattr(cfg, "quant_bits", 0),
+                          getattr(cfg, "photonic", False), training,
+                          getattr(cfg, "dot_out_native", False),
+                          getattr(cfg, "matmul_backend", "") or "",
+                          getattr(cfg, "pallas_interpret", True))
+
+    def resolve_backend(self) -> str:
+        if self.backend:
+            return self.backend
+        if self.photonic:
+            return "photonic_sim"
+        if self.quant_bits:
+            return "qat"
+        return "bf16"
+
+    def is_photonic(self) -> bool:
+        return self.resolve_backend().startswith("photonic")
+
+    def __repr__(self):
+        return (f"ExecPolicy(backend={self.resolve_backend()!r}, "
+                f"bits={self.quant_bits}, training={self.training})")
+
+
+_DEFAULT = ExecPolicy()
+
+
+# --------------------------------------------------------------------------
+# quantize-once weight cache
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedWeight:
+    """A matmul weight after MR tuning: int8 codes + per-out-channel scale.
+
+    ``wq``: (..., K, N) int8 codes; ``scale``: (..., 1, N) f32. Leading dims
+    carry scan-stacked layers — ``jax.lax.scan`` slices both leaves in step,
+    so an in-scan slice is exactly the (K, N)/(1, N) pair the 2-D backends
+    consume. Registered as a pytree so prepared params flow through jit/scan
+    unchanged.
+    """
+
+    def __init__(self, wq: jax.Array, scale: jax.Array, bits: int = 8):
+        self.wq = wq
+        self.scale = scale
+        self.bits = bits
+
+    @property
+    def shape(self):
+        return self.wq.shape
+
+    @property
+    def ndim(self):
+        return self.wq.ndim
+
+    def dequantize(self) -> jax.Array:
+        return self.wq.astype(jnp.float32) * self.scale
+
+    def tree_flatten(self):
+        return (self.wq, self.scale), (self.bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, bits=aux[0])
+
+    def __repr__(self):
+        return f"QuantizedWeight(shape={self.wq.shape}, bits={self.bits})"
+
+
+def quantize_weight(w: jax.Array, bits: int = 8) -> QuantizedWeight:
+    """Pre-compute int8 codes + scale for one weight (the MR tuning step).
+
+    The scale reduces only the contraction axis (-2), i.e. per output
+    channel *per layer* for scan-stacked (L, K, N) weights — numerically
+    identical to the per-call ``absmax_scale(w2d, axis=0)`` of the dynamic
+    photonic path, which is what makes cached and uncached execution
+    bit-identical.
+    """
+    w32 = w.astype(jnp.float32)
+    scale = quant.absmax_scale(w32, bits=bits, axis=-2)     # (..., 1, N)
+    return QuantizedWeight(quant.quantize(w32, scale, bits=bits), scale, bits)
+
+
+# param-tree keys whose leaves must stay raw arrays even when they look like
+# matmul weights: class tokens / position tables (added, never contracted),
+# embedding tables (gathered), depthwise-conv kernels (indexed), and the MoE
+# expert subtree (einsum dispatch, not routed through ``linear``).
+NON_MATMUL_KEYS = frozenset({
+    "cls", "pos", "cls_token", "pos_embed", "embed", "embedding", "tok_embed",
+    "wte", "conv_w", "moe",
+    "w_a", "w_x",   # RG-LRU recurrence gates: consumed raw in the f32 scan
+})
+
+# leaf keys that name a ``linear`` weight without the conventional "w"
+# prefix (w / w1 / wq / wqkv / w_gate / ... are matched by prefix).
+MATMUL_WEIGHT_EXTRA = frozenset({
+    "head", "head_w", "in_proj", "out_proj", "gate_proj",
+})
+
+
+def _is_matmul_weight_key(name: str) -> bool:
+    return name.startswith("w") or name in MATMUL_WEIGHT_EXTRA
+
+
+def _path_key(entry) -> str:
+    # DictKey(key=...) / GetAttrKey(name=...) / SequenceKey(idx=...)
+    return str(getattr(entry, "key", getattr(entry, "name", "")))
+
+
+def prepare_params(params, bits: int = 8, min_size: int = 128,
+                   exclude: frozenset = NON_MATMUL_KEYS):
+    """Quantize every matmul weight of a param pytree once (MR tuning pass).
+
+    A leaf is tuned iff its key names a ``linear`` weight (``w*`` prefix or
+    ``MATMUL_WEIGHT_EXTRA``), no path component is in ``exclude``, and it is
+    a float tensor of ndim >= 2 with at least ``min_size`` elements. Biases,
+    norm scales, cls/pos tables and embeddings stay full precision —
+    mirroring the paper's choice of quantizing only the optical-core
+    operands. Key-based selection (rather than shape-based) is what keeps
+    scan-stacked 1-D leaves like a (L, d) ``ln_g`` out of the cache.
+    Idempotent: already-quantized leaves pass through.
+    """
+
+    def _prep(path, leaf):
+        if isinstance(leaf, QuantizedWeight):
+            return leaf
+        if not _is_matmul_weight_key(_path_key(path[-1])):
+            return leaf
+        if any(_path_key(e) in exclude for e in path):
+            return leaf
+        if leaf.ndim < 2 or leaf.size < min_size:
+            return leaf
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        return quantize_weight(leaf, bits=bits)
+
+    return jax.tree_util.tree_map_with_path(
+        _prep, params, is_leaf=lambda x: isinstance(x, QuantizedWeight))
+
+
+def _resolve_wq(w, bits: int):
+    """(int8 codes (K, N), scale (1, N) f32) from raw or cached weight."""
+    if isinstance(w, QuantizedWeight):
+        return w.wq, w.scale
+    w32 = w.astype(jnp.float32)
+    sw = quant.absmax_scale(w32, bits=bits, axis=-2)
+    return quant.quantize(w32, sw, bits=bits), sw
+
+
+def _weight_bits(w, p: ExecPolicy) -> int:
+    if isinstance(w, QuantizedWeight):
+        return w.bits
+    return p.quant_bits or 8
+
+
+def _out_dim(w) -> int:
+    return w.shape[-1]
+
+
+# --------------------------------------------------------------------------
+# integer-accumulate primitives (the cross-backend numerics contract)
+# --------------------------------------------------------------------------
+
+def int_accumulate_exact(xq: jax.Array, wq: jax.Array) -> jax.Array:
+    """One-shot int32 accumulate — photonic_matmul_exact's inner product."""
+    return jax.lax.dot_general(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def int_accumulate_sim(xq: jax.Array, wq: jax.Array,
+                       chunk: int = _WAVELENGTHS) -> jax.Array:
+    """Chunk-walking int32 accumulate over K in ``chunk``-wide wavelength
+    groups (Fig. 6 schedule). Integer addition is associative, so this is
+    bit-identical to ``int_accumulate_exact`` — the oracle the Pallas
+    kernel's K-grid walk must also match."""
+    m, k = xq.shape
+    n = wq.shape[1]
+    rem = (-k) % chunk
+    if rem:
+        xq = jnp.pad(xq, ((0, 0), (0, rem)))
+        wq = jnp.pad(wq, ((0, rem), (0, 0)))
+    nk = xq.shape[1] // chunk
+    x_chunks = xq.astype(jnp.int32).reshape(m, nk, chunk).transpose(1, 0, 2)
+    w_chunks = wq.astype(jnp.int32).reshape(nk, chunk, n)
+
+    def step(acc, xw):
+        xc, wc = xw
+        acc = acc + jax.lax.dot_general(xc, wc, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.int32)
+        return acc, None
+
+    acc, _ = jax.lax.scan(step, jnp.zeros((m, n), jnp.int32),
+                          (x_chunks, w_chunks))
+    return acc
+
+
+def int_accumulate_pallas(xq: jax.Array, wq: jax.Array,
+                          interpret: bool = True) -> jax.Array:
+    """Int32 accumulate through the Pallas kernel (unit scales make the f32
+    output the raw accumulate; exact for |acc| < 2^24, i.e. K <= 1040 at
+    8 bits — every ViT shape in this repo)."""
+    from repro.kernels.ops import pad_to
+    from repro.kernels.photonic_matmul import photonic_matmul_int8
+
+    m, k = xq.shape
+    n = wq.shape[1]
+    xp = pad_to(pad_to(xq, 128, 0), 128, 1)
+    wp = pad_to(pad_to(wq, 128, 0), 128, 1)
+    out = photonic_matmul_int8(xp, wp, jnp.float32(1.0),
+                               jnp.ones((wp.shape[1],), jnp.float32),
+                               interpret=interpret)
+    return out[:m, :n].astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# backend registry
+# --------------------------------------------------------------------------
+
+BACKENDS: dict[str, Callable] = {}
+
+
+def register_backend(name: str):
+    def deco(fn):
+        BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def get_backend(name: str) -> Callable:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown matmul backend {name!r}; "
+                       f"available: {available_backends()}") from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(BACKENDS))
+
+
+@register_backend("bf16")
+def _bf16_matmul(x, w, p: ExecPolicy):
+    """Plain MXU dot: f32 accumulate (or operand-dtype out, §Perf knob)."""
+    if isinstance(w, QuantizedWeight):
+        w = w.dequantize().astype(x.dtype)
+    if p.dot_out_native:
+        return jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())))
+    return jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32
+                               ).astype(x.dtype)
+
+
+@register_backend("qat")
+def _qat_matmul(x, w, p: ExecPolicy):
+    """QAT fake-quant: weights per-out-channel + activations per-tensor,
+    STE in training so gradients flow (paper §IV Accuracy Analysis)."""
+    bits = p.quant_bits or 8
+    fq = quant.fake_quant_ste if p.training else quant.fake_quant
+    if isinstance(w, QuantizedWeight):
+        wq = w.dequantize().astype(x.dtype)     # cache already quantized it
+    else:
+        wq = fq(w, bits=bits, axis=tuple(range(w.ndim - 1)))
+    xq = fq(x, bits=bits, axis=None)
+    return jax.lax.dot_general(xq, wq, (((x.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32
+                               ).astype(x.dtype)
+
+
+def _photonic_prologue(x, w, p: ExecPolicy):
+    bits = _weight_bits(w, p)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    sx = quant.absmax_scale(x2, bits=bits)
+    xq = quant.quantize(x2, sx, bits=bits)
+    wq, sw = _resolve_wq(w, bits)
+    return lead, xq, wq, sx, sw
+
+
+@register_backend("photonic_sim")
+def _photonic_sim_matmul(x, w, p: ExecPolicy):
+    """Chunk-walking w8a8 oracle: integer accumulate over 32-wavelength
+    K-chunks, then the dequant epilogue (ADC + scale restore)."""
+    lead, xq, wq, sx, sw = _photonic_prologue(x, w, p)
+    acc = int_accumulate_sim(xq, wq)
+    y = acc.astype(jnp.float32) * sx * sw.reshape(1, -1)
+    return y.reshape(*lead, _out_dim(w)).astype(x.dtype)
+
+
+@register_backend("photonic_pallas")
+def _photonic_pallas_matmul(x, w, p: ExecPolicy):
+    """Int8 Pallas MXU kernel (interpret=True on CPU hosts). With a cached
+    ``QuantizedWeight`` only the activations are quantized per call."""
+    from repro.kernels import ops as kernel_ops   # lazy: pulls in pallas
+
+    bits = _weight_bits(w, p)
+    wq, sw = _resolve_wq(w, bits)
+    y = kernel_ops.photonic_matmul_prequant(
+        x.astype(jnp.float32), wq, sw.reshape(-1), bits=bits,
+        interpret=p.interpret)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# the single matmul entry point
+# --------------------------------------------------------------------------
+
+def matmul(x: jnp.ndarray, w, policy: ExecPolicy | None = None) -> jnp.ndarray:
+    """y = x @ w under the active execution policy.
+
+    x: (..., d_in); w: (d_in, d_out) array or cached ``QuantizedWeight``.
+    """
+    p = policy or _DEFAULT
+    return get_backend(p.resolve_backend())(x, w, p)
+
+
+def linear(x: jnp.ndarray, w, b: jnp.ndarray | None = None,
+           policy: ExecPolicy | None = None) -> jnp.ndarray:
+    """y = x @ w (+ b) under the active execution policy (see ``matmul``)."""
+    y = matmul(x, w, policy)
+    if b is not None:
+        y = y + b
+    return y

@@ -34,8 +34,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import ExecPolicy, QuantizedWeight, linear
+
 __all__ = ["attention_scores_standard", "attention_scores_decomposed",
            "mhsa_standard", "mhsa_decomposed", "decomposition_flops"]
+
+
+def _as_array(w) -> jnp.ndarray:
+    """Raw float weight from either representation. The decomposed path
+    re-derives W_K^T slices (a *re-tuning* on hardware), so a cached
+    QuantizedWeight is dequantized first."""
+    return w.dequantize() if isinstance(w, QuantizedWeight) else w
 
 
 def attention_scores_standard(x: jnp.ndarray, wq: jnp.ndarray, wk: jnp.ndarray,
@@ -63,42 +72,59 @@ def _heads_split(t: jnp.ndarray, h: int) -> jnp.ndarray:
     return t.reshape(*lead, n, h, d // h).swapaxes(-2, -3)  # (..., h, n, dh)
 
 
-def mhsa_standard(x: jnp.ndarray, params: dict, heads: int) -> jnp.ndarray:
+def mhsa_standard(x: jnp.ndarray, params: dict, heads: int,
+                  policy: ExecPolicy | None = None) -> jnp.ndarray:
     """Multi-head self-attention, standard dataflow.
 
-    params: wq/wk/wv (dm, dm), wo (dm, dm) — per-head splits taken internally.
+    params: wq/wk/wv (dm, dm), wo (dm, dm) — per-head splits taken
+    internally. The four weight projections route through the backend
+    dispatch (``linear``); the score and PV matmuls are activation-
+    activation (dynamically tuned cores on hardware) and stay in float.
     """
     dm = x.shape[-1]
     dh = dm // heads
     scale = 1.0 / jnp.sqrt(dh)
-    q = _heads_split(x @ params["wq"], heads)
-    k = _heads_split(x @ params["wk"], heads)
-    v = _heads_split(x @ params["wv"], heads)
+    q = _heads_split(linear(x, params["wq"], policy=policy), heads)
+    k = _heads_split(linear(x, params["wk"], policy=policy), heads)
+    v = _heads_split(linear(x, params["wv"], policy=policy), heads)
     s = jax.nn.softmax((q @ k.swapaxes(-1, -2)) * scale, axis=-1)
     o = s @ v                                     # (..., h, n, dh)
     o = o.swapaxes(-2, -3).reshape(*x.shape[:-1], dm)
-    return o @ params["wo"]
+    return linear(o, params["wo"], policy=policy)
 
 
-def mhsa_decomposed(x: jnp.ndarray, params: dict, heads: int) -> jnp.ndarray:
+def mhsa_decomposed(x: jnp.ndarray, params: dict, heads: int,
+                    policy: ExecPolicy | None = None) -> jnp.ndarray:
     """Multi-head self-attention with Eq. 2 score dataflow (per head).
 
     Per head h: S_h = (X Wq_h) (Wk_h^T/sqrt(dh)) X^T. Mathematically equal to
-    the standard path; only the association order differs.
+    the standard path; only the association order differs. The Q/V/O
+    projections and the per-head (Q_h @ Wk_h^T) weight matmul all route
+    through the backend dispatch — W_K^T/sqrt(dh) is tuned as its own weight
+    (the paper folds the scale into the MR bank directly), so it is passed
+    raw and quantized at that fold point rather than reusing W_K's cache.
     """
     dm = x.shape[-1]
     dh = dm // heads
     scale = 1.0 / jnp.sqrt(dh)
-    wq = params["wq"].reshape(dm, heads, dh)
-    wk = params["wk"].reshape(dm, heads, dh)
-    q = jnp.einsum("...nd,dhk->...hnk", x, wq)          # (..., h, n, dh)
-    # (Q_h @ Wk_h^T) * scale : (..., h, n, dm)
-    qwk = jnp.einsum("...hnk,dhk->...hnd", q, wk) * scale
+    wk = _as_array(params["wk"]).reshape(dm, heads, dh)
+    q = _heads_split(linear(x, params["wq"], policy=policy), heads)
+    # (Q_h @ (Wk_h^T * scale)) per head: (..., h, n, dm). On quantizing
+    # backends each head's transposed-scaled W_K slice is a distinct tuned
+    # weight, so it routes through ``linear`` head-by-head; on the plain
+    # float path a single fused einsum is numerically identical and avoids
+    # `heads` separate dots.
+    if (policy or ExecPolicy()).resolve_backend() == "bf16":
+        qwk = jnp.einsum("...hnk,dhk->...hnd", q, wk) * scale
+    else:
+        qwk = jnp.stack(
+            [linear(q[..., h, :, :], wk[:, h, :].T * scale, policy=policy)
+             for h in range(heads)], axis=-3)
     s = jnp.einsum("...hnd,...md->...hnm", qwk, x)      # (..., h, n, n)
     s = jax.nn.softmax(s, axis=-1)
-    v = _heads_split(x @ params["wv"], heads)
+    v = _heads_split(linear(x, params["wv"], policy=policy), heads)
     o = (s @ v).swapaxes(-2, -3).reshape(*x.shape[:-1], dm)
-    return o @ params["wo"]
+    return linear(o, params["wo"], policy=policy)
 
 
 def decomposition_flops(n: int, dm: int, dk: int) -> dict:

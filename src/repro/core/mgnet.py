@@ -32,8 +32,10 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-__all__ = ["MGNetConfig", "init_mgnet", "mgnet_scores", "mgnet_mask",
-           "select_topk_patches", "mask_iou", "bce_loss"]
+from repro.core.backend import ExecPolicy, linear
+
+__all__ = ["MGNetConfig", "init_mgnet", "mgnet_logical_axes", "mgnet_scores",
+           "mgnet_mask", "select_topk_patches", "mask_iou", "bce_loss"]
 
 
 @dataclass(frozen=True)
@@ -84,15 +86,37 @@ def init_mgnet(key: jax.Array, cfg: MGNetConfig) -> dict:
     }
 
 
+def mgnet_logical_axes() -> dict:
+    """Replicated (all-None) sharding-axis tree structurally matching
+    ``init_mgnet``'s params — MGNet is tiny, so it is never partitioned, but
+    the axis tree must still mirror the param pytree for the annotation
+    machinery (models/vit.py::vit_logical_axes)."""
+    return {
+        "patch_embed": {"w": (None, None), "b": (None,)},
+        "cls_token": (None, None, None),
+        "pos_embed": (None, None, None),
+        "block": {
+            "ln1": {"g": (None,), "b": (None,)},
+            "wqkv": (None, None),
+            "wo": (None, None),
+            "ln2": {"g": (None,), "b": (None,)},
+            "w1": (None, None), "b1": (None,),
+            "w2": (None, None), "b2": (None,),
+        },
+        "score": {"wq": (None, None), "wk": (None, None),
+                  "head_w": (None, None), "head_b": (None,)},
+    }
+
+
 def _ln(x, p, eps=1e-6):
     mu = x.mean(-1, keepdims=True)
     var = ((x - mu) ** 2).mean(-1, keepdims=True)
     return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
 
 
-def _mhsa(x, wqkv, wo, heads):
+def _mhsa(x, wqkv, wo, heads, policy=None):
     b, n, d = x.shape
-    qkv = x @ wqkv
+    qkv = linear(x, wqkv, policy=policy)
     q, k, v = jnp.split(qkv, 3, axis=-1)
     dh = d // heads
     q = q.reshape(b, n, heads, dh).transpose(0, 2, 1, 3)
@@ -100,7 +124,7 @@ def _mhsa(x, wqkv, wo, heads):
     v = v.reshape(b, n, heads, dh).transpose(0, 2, 1, 3)
     att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(dh), axis=-1)
     o = (att @ v).transpose(0, 2, 1, 3).reshape(b, n, d)
-    return o @ wo
+    return linear(o, wo, policy=policy)
 
 
 def patchify(images: jnp.ndarray, patch: int) -> jnp.ndarray:
@@ -112,29 +136,40 @@ def patchify(images: jnp.ndarray, patch: int) -> jnp.ndarray:
     return x.reshape(b, gh * gw, patch * patch * c)
 
 
-def mgnet_scores(params: dict, images: jnp.ndarray, cfg: MGNetConfig) -> jnp.ndarray:
-    """Per-patch region scores S_region (pre-sigmoid logits), shape (B, N)."""
-    x = patchify(images, cfg.patch) @ params["patch_embed"]["w"] + params["patch_embed"]["b"]
+def mgnet_scores(params: dict, images: jnp.ndarray, cfg: MGNetConfig,
+                 policy: ExecPolicy | None = None) -> jnp.ndarray:
+    """Per-patch region scores S_region (pre-sigmoid logits), shape (B, N).
+
+    Every weight matmul routes through the shared ``linear`` backend
+    dispatch — on the paper's hardware MGNet runs on the same optical cores
+    as the backbone, so it executes under the same policy (photonic w8a8 at
+    serve time). Only the q.K^T and att.V activation matmuls stay in float.
+    """
+    x = linear(patchify(images, cfg.patch), params["patch_embed"]["w"],
+               params["patch_embed"]["b"], policy)
     b, n, d = x.shape
     cls = jnp.broadcast_to(params["cls_token"], (b, 1, d))
     x = jnp.concatenate([cls, x], axis=1) + params["pos_embed"][:, : n + 1]
 
     blk = params["block"]
-    x = x + _mhsa(_ln(x, blk["ln1"]), blk["wqkv"], blk["wo"], cfg.heads)
-    h = _ln(x, blk["ln2"]) @ blk["w1"] + blk["b1"]
-    x = x + jax.nn.gelu(h) @ blk["w2"] + blk["b2"]
+    x = x + _mhsa(_ln(x, blk["ln1"]), blk["wqkv"], blk["wo"], cfg.heads,
+                  policy)
+    h = linear(_ln(x, blk["ln2"]), blk["w1"], blk["b1"], policy)
+    x = x + linear(jax.nn.gelu(h), blk["w2"], blk["b2"], policy)
 
     # Eq. 3: S_cls_attn = q_cls . K^T / sqrt(d) over patch tokens.
-    q_cls = x[:, :1] @ params["score"]["wq"]           # (B, 1, d)
-    k_pat = x[:, 1:] @ params["score"]["wk"]           # (B, N, d)
-    s_cls = (q_cls @ k_pat.transpose(0, 2, 1))[:, 0] / jnp.sqrt(d)   # (B, N)
+    q_cls = linear(x[:, :1], params["score"]["wq"], policy=policy)  # (B,1,d)
+    k_pat = linear(x[:, 1:], params["score"]["wk"], policy=policy)  # (B,N,d)
+    s_cls = (q_cls @ k_pat.transpose(0, 2, 1))[:, 0] / jnp.sqrt(d)  # (B, N)
     # linear layer with output dim = n_patches -> S_region
-    return s_cls @ params["score"]["head_w"] + params["score"]["head_b"]
+    return linear(s_cls, params["score"]["head_w"],
+                  params["score"]["head_b"], policy)
 
 
-def mgnet_mask(params: dict, images: jnp.ndarray, cfg: MGNetConfig) -> jnp.ndarray:
+def mgnet_mask(params: dict, images: jnp.ndarray, cfg: MGNetConfig,
+               policy: ExecPolicy | None = None) -> jnp.ndarray:
     """Binary patch mask (B, N) in {0., 1.}: sigmoid(S_region) > t_reg."""
-    s = jax.nn.sigmoid(mgnet_scores(params, images, cfg))
+    s = jax.nn.sigmoid(mgnet_scores(params, images, cfg, policy))
     return (s > cfg.t_reg).astype(jnp.float32)
 
 

@@ -52,6 +52,10 @@ class OpticalCoreConfig:
     mr: MRConfig = field(default_factory=MRConfig)
     apply_noise: bool = False     # inject crosstalk/FPV transmission error
     fpv_sigma: float = 0.0
+    adc_quantize_output: bool = False   # re-quantize the accumulated output
+    #                                     to ``bits`` over its own range
+    #                                     (models a range-limited ADC; off =
+    #                                     ideal ADC, integer-exact readout)
 
 
 @dataclass
@@ -146,36 +150,51 @@ def photonic_matmul_sim(x: jnp.ndarray, w: jnp.ndarray,
 
     sx = quant.absmax_scale(x, bits=cfg.bits)
     sw = quant.absmax_scale(w, bits=cfg.bits, axis=0)
-    xq = quant.quantize(x, sx, bits=cfg.bits).astype(jnp.float32)
-    wq = quant.quantize(w, sw, bits=cfg.bits).astype(jnp.float32)
+    xq = quant.quantize(x, sx, bits=cfg.bits)
+    wq = quant.quantize(w, sw, bits=cfg.bits)
 
     if cfg.apply_noise:
+        # Transmission error perturbs the *tuned weight* (the MR bank) —
+        # an analog effect, so this walk runs on float-valued codes. The
+        # noise-free walk below shares the integer chunk schedule with the
+        # photonic_sim backend (core/backend.py).
         if noise_key is None:
             noise_key = jax.random.PRNGKey(0)
-        # Transmission error perturbs the *tuned weight* (the MR bank).
-        wq = wq * transmission_error(noise_key, wq.shape, cfg.mr, cfg.fpv_sigma)
+        wqf = wq.astype(jnp.float32) * transmission_error(
+            noise_key, wq.shape, cfg.mr, cfg.fpv_sigma)
+        xqf = _pad_to(xq.astype(jnp.float32), cfg.n_wavelengths, axis=1)
+        wqf = _pad_to(wqf, cfg.n_wavelengths, axis=0)
+        kw = cfg.n_wavelengths
+        n_kchunks = xqf.shape[1] // kw
 
-    kw = cfg.n_wavelengths
-    xq = _pad_to(xq, kw, axis=1)
-    wq = _pad_to(wq, kw, axis=0)
-    kp = xq.shape[1]
-    n_kchunks = kp // kw
+        # (n_kchunks, M, kw) input chunks; (n_kchunks, kw, N) weight tiles.
+        x_chunks = xqf.reshape(m, n_kchunks, kw).transpose(1, 0, 2)
+        w_chunks = wqf.reshape(n_kchunks, kw, n)
 
-    # (n_kchunks, M, kw) input chunks; (n_kchunks, kw, N) weight tiles.
-    x_chunks = xq.reshape(m, n_kchunks, kw).transpose(1, 0, 2)
-    w_chunks = wq.reshape(n_kchunks, kw, n)
+        def step(acc, xw):
+            xc, wc = xw
+            # One optical cycle per (row, K-chunk): the 32 products per arm
+            # are summed *optically* by the BPD; arms give all N tile cols.
+            acc = acc + xc @ wc
+            return acc, None
 
-    def step(acc, xw):
-        xc, wc = xw
-        # One optical cycle per (row, K-chunk): the 32 products per arm are
-        # summed *optically* by the BPD; arms give all N columns of the tile.
-        acc = acc + xc @ wc
-        return acc, None
+        acc, _ = jax.lax.scan(step, jnp.zeros((m, n), jnp.float32),
+                              (x_chunks, w_chunks))
+    else:
+        from repro.core.backend import int_accumulate_sim
+        acc = int_accumulate_sim(xq, wq,
+                                 chunk=cfg.n_wavelengths).astype(jnp.float32)
 
-    acc0 = jnp.zeros((m, n), jnp.float32)
-    acc, _ = jax.lax.scan(step, acc0, (x_chunks, w_chunks))
-
-    # ADC quantization of the accumulated analog result (per-tensor, 8-bit
-    # on the output range) — the electronic side reads BPD outputs via ADC.
+    # Dequant epilogue: rescale the integer accumulate back to the float
+    # range. By default the ADC is modelled as ideal (the chunk partials are
+    # summed digitally after conversion, so the w8a8 accumulate is read out
+    # integer-exact — this is what keeps the sim bit-faithful to
+    # photonic_matmul_exact). With ``adc_quantize_output`` the readout is
+    # instead re-quantized to ``cfg.bits`` over the output's own dynamic
+    # range, modelling a range-limited ADC on the analog accumulate.
     out = acc * sx * sw
+    if cfg.adc_quantize_output:
+        s_out = quant.absmax_scale(out, bits=cfg.bits)
+        out = quant.dequantize(quant.quantize(out, s_out, bits=cfg.bits),
+                               s_out)
     return out

@@ -46,16 +46,24 @@ def quant_range(bits: int) -> tuple[int, int]:
 
 def absmax_scale(x: jax.Array, bits: int = 8, axis: int | Sequence[int] | None = None,
                  eps: float = 1e-8) -> jax.Array:
-    """Dynamic symmetric scale s = absmax / qmax (per-tensor or per-channel).
+    """Dynamic symmetric scale s = absmax * (1/qmax) (per-tensor or
+    per-channel).
 
     ``axis``: axes to *reduce over*. None reduces over everything
     (per-tensor). For a weight of shape (in, out), ``axis=0`` gives a
     per-output-channel scale of shape (1, out).
+
+    The scale multiplies by a pre-rounded f32 reciprocal instead of
+    dividing by qmax: XLA strength-reduces constant division to
+    reciprocal-multiply under jit but not eagerly, which made the same
+    tensor quantize to different codes inside vs outside jit — fatal for
+    the cross-backend bit-parity contract (core/backend.py).
     """
     _, qmax = quant_range(bits)
+    inv_qmax = jnp.float32(1.0 / qmax)
     amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
     amax = jnp.maximum(amax, eps)
-    return (amax / qmax).astype(jnp.float32)
+    return (amax.astype(jnp.float32) * inv_qmax)
 
 
 def quantize(x: jax.Array, scale: jax.Array, bits: int = 8) -> jax.Array:

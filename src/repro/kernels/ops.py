@@ -21,10 +21,11 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.photonic_matmul import photonic_matmul_int8
 
-__all__ = ["photonic_matmul", "fused_attention", "flash_decode"]
+__all__ = ["photonic_matmul", "photonic_matmul_prequant", "fused_attention",
+           "flash_decode", "pad_to"]
 
 
-def _pad_to(x, mult, axis):
+def pad_to(x, mult, axis):
     r = (-x.shape[axis]) % mult
     if r == 0:
         return x
@@ -35,29 +36,48 @@ def _pad_to(x, mult, axis):
 
 @functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk",
                                              "interpret"))
-def photonic_matmul(x: jax.Array, w: jax.Array, *, bits: int = 8,
-                    bm: int = 128, bn: int = 128, bk: int = 128,
-                    interpret: bool = True) -> jax.Array:
-    """Float API: quantize -> photonic int8 kernel -> dequantize.
+def photonic_matmul_prequant(x: jax.Array, wq: jax.Array, sw: jax.Array, *,
+                             bits: int = 8, bm: int = 128, bn: int = 128,
+                             bk: int = 128, interpret: bool = True
+                             ) -> jax.Array:
+    """Serving path for the quantize-once cache: the weight arrives already
+    tuned (int8 codes + per-out-channel scale from core/backend.py); only
+    the activations are quantized per call.
 
-    x (..., K) any float dtype; w (K, N). Returns (..., N) f32.
+    x (..., K) float; wq (K, N) int8; sw (N,) f32. Returns (..., N) f32.
+    Shapes need not be block multiples — callers' M/K/N are padded to the
+    128-aligned kernel grid and the result is sliced back.
     """
     lead = x.shape[:-1]
-    k, n = w.shape
+    k, n = wq.shape
     x2 = x.reshape(-1, k).astype(jnp.float32)
     m = x2.shape[0]
 
     sx = quant.absmax_scale(x2, bits=bits)
-    sw = quant.absmax_scale(w.astype(jnp.float32), bits=bits, axis=0)[0]
     xq = quant.quantize(x2, sx, bits=bits)
-    wq = quant.quantize(w.astype(jnp.float32), sw[None], bits=bits)
 
-    xq = _pad_to(_pad_to(xq, bm, 0), bk, 1)
-    wq = _pad_to(_pad_to(wq, bk, 0), bn, 1)
-    swp = _pad_to(sw, bn, 0)
-    out = photonic_matmul_int8(xq, wq, sx.reshape(()), swp,
+    xq = pad_to(pad_to(xq, bm, 0), bk, 1)
+    wqp = pad_to(pad_to(wq, bk, 0), bn, 1)
+    swp = pad_to(sw, bn, 0)
+    out = photonic_matmul_int8(xq, wqp, sx.reshape(()), swp,
                                bm=bm, bn=bn, bk=bk, interpret=interpret)
     return out[:m, :n].reshape(*lead, n)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk",
+                                             "interpret"))
+def photonic_matmul(x: jax.Array, w: jax.Array, *, bits: int = 8,
+                    bm: int = 128, bn: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """Float API: quantize both operands -> int8 kernel -> dequantize.
+
+    x (..., K) any float dtype; w (K, N). Returns (..., N) f32.
+    """
+    w32 = w.astype(jnp.float32)
+    sw = quant.absmax_scale(w32, bits=bits, axis=0)[0]
+    wq = quant.quantize(w32, sw[None], bits=bits)
+    return photonic_matmul_prequant(x, wq, sw, bits=bits, bm=bm, bn=bn,
+                                    bk=bk, interpret=interpret)
 
 
 def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

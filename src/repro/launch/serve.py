@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig, smoke_variant
 from repro.configs.registry import get_config
+from repro.core.backend import available_backends, prepare_params
 from repro.distributed.sharding import current_ctx, use_sharding
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_serve_step
@@ -84,18 +85,34 @@ def main():
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--data-par", type=int, default=1)
     ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--backend", default="",
+                    help=f"matmul backend ({', '.join(available_backends())}"
+                         "; empty = resolve from config flags)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+    if args.backend:
+        if args.backend not in available_backends():
+            raise SystemExit(f"unknown backend {args.backend!r}; "
+                             f"choose from {available_backends()}")
+        cfg = cfg.with_(matmul_backend=args.backend)
     if not model_api.supports_decode(cfg):
         raise SystemExit(f"{args.arch} has no decode step")
 
+    policy = ExecPolicy.from_cfg(cfg, training=False)
     mesh = make_host_mesh(args.data_par, args.model_par)
     with mesh, use_sharding(mesh):
         key = jax.random.PRNGKey(0)
         params = model_api.init_model(key, cfg)
+        if policy.is_photonic():
+            # quantize-once weight cache: tune every matmul weight before
+            # serving so the per-token path does only activation quant +
+            # integer matmul + dequant (embeddings/norms stay fp).
+            params = prepare_params(params, bits=cfg.quant_bits or 8)
+            print(f"[serve] backend={policy.resolve_backend()} "
+                  "(weights pre-quantized once)")
         cache = init_cache(cfg, args.batch, args.cache_len)
         prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                     cfg.vocab, jnp.int32)

@@ -1,11 +1,11 @@
 """Shared neural-net building blocks (pure JAX, pytree params).
 
 Every matmul in the framework funnels through ``linear`` so the paper's
-execution modes apply uniformly:
-  * quant_bits=8   -> QAT fake-quant (training) / w8a8 integer path (inference)
-  * photonic=True  -> route through the optical-core simulator (bit-faithful
-    chunked w8a8 MatMul, optional MR noise) — used by the ViT benchmarks.
-Default (0/False) is the plain bf16 TPU path used by the LM dry-runs.
+execution modes apply uniformly. ``linear``/``ExecPolicy`` live in
+core/backend.py (the matmul backend registry + quantize-once weight cache:
+bf16 | qat | photonic_sim | photonic_pallas, selected by
+``ArchConfig.matmul_backend``) and are re-exported here for the model
+layers and all existing importers.
 """
 
 from __future__ import annotations
@@ -13,71 +13,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant
-from repro.core.photonic import OpticalCoreConfig, photonic_matmul_exact
+from repro.core.backend import ExecPolicy, QuantizedWeight, linear, matmul
 from repro.distributed.sharding import shard
 
-__all__ = ["linear", "rmsnorm", "layernorm", "rope", "apply_rope",
+__all__ = ["linear", "matmul", "rmsnorm", "layernorm", "rope", "apply_rope",
            "embedding_lookup", "causal_conv1d", "he_init", "lecun_init",
-           "ExecPolicy"]
-
-
-class ExecPolicy:
-    """Execution-mode knobs threaded from ArchConfig into every layer."""
-
-    __slots__ = ("quant_bits", "photonic", "training", "dot_out_native")
-
-    def __init__(self, quant_bits: int = 0, photonic: bool = False,
-                 training: bool = True, dot_out_native: bool = False):
-        self.quant_bits = quant_bits
-        self.photonic = photonic
-        self.training = training
-        self.dot_out_native = dot_out_native
-
-    @staticmethod
-    def from_cfg(cfg, training: bool = True) -> "ExecPolicy":
-        return ExecPolicy(getattr(cfg, "quant_bits", 0),
-                          getattr(cfg, "photonic", False), training,
-                          getattr(cfg, "dot_out_native", False))
-
-
-_DEFAULT = ExecPolicy()
-
-
-def linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
-           policy: ExecPolicy | None = None) -> jnp.ndarray:
-    """y = x @ w (+ b) under the active execution policy.
-
-    x: (..., d_in), w: (d_in, d_out). Contraction in the input dtype with
-    f32 accumulation via preferred_element_type (MXU semantics).
-    """
-    p = policy or _DEFAULT
-    if p.photonic:
-        lead = x.shape[:-1]
-        x2 = x.reshape(-1, x.shape[-1])
-        y = photonic_matmul_exact(x2.astype(jnp.float32), w.astype(jnp.float32))
-        y = y.reshape(*lead, w.shape[-1]).astype(x.dtype)
-    elif p.quant_bits:
-        # QAT: fake-quant weights per-out-channel + activations per-tensor,
-        # STE in training so gradients flow (paper §IV Accuracy Analysis).
-        fq = quant.fake_quant_ste if p.training else quant.fake_quant
-        wq = fq(w, bits=p.quant_bits, axis=tuple(range(w.ndim - 1)))
-        xq = fq(x, bits=p.quant_bits, axis=None)
-        y = jax.lax.dot_general(xq, wq, (((x.ndim - 1,), (0,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        y = y.astype(x.dtype)
-    elif p.dot_out_native:
-        # operand-dtype output: the MXU still accumulates f32 internally
-        # for bf16 operands, but no f32 result materializes in HBM and the
-        # TP all-reduce (when this matmul is row-parallel) moves bf16 —
-        # §Perf hillclimb knob (halves dominant activation-AR wire bytes).
-        y = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())))
-    else:
-        y = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
-                                preferred_element_type=jnp.float32).astype(x.dtype)
-    if b is not None:
-        y = y + b
-    return y
+           "ExecPolicy", "QuantizedWeight"]
 
 
 def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:

@@ -103,7 +103,10 @@ def _decomposed_attn(p, x, q, v, cfg):
     d = x.shape[-1]
     hkv = cfg.kv_heads
     g = h // hkv
-    wk = p["wk"].reshape(d, hkv, hd)
+    wk = p["wk"]
+    if hasattr(wk, "dequantize"):      # cached weight: re-tune W_K^T raw
+        wk = wk.dequantize()
+    wk = wk.reshape(d, hkv, hd)
     scale = 1.0 / math.sqrt(hd)
     # re-project q without rope: Eq.2 path recomputes raw Q
     q_raw = linear(x, p["wq"], p.get("bq")).reshape(b, s, hkv, g, hd)

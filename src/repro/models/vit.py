@@ -1,8 +1,11 @@
 """Vision Transformer backbone + Opto-ViT integration (the paper's model).
 
 Standard ViT (Dosovitskiy et al.) with the paper's co-design hooks:
-  * every matmul routes through ``linear`` -> 8-bit QAT or the photonic
-    w8a8 simulator (ArchConfig.quant_bits / .photonic),
+  * every matmul (backbone, attention projections, FFN and MGNet) routes
+    through ``linear`` -> the backend registry of core/backend.py
+    (bf16 | qat | photonic_sim | photonic_pallas, selected by
+    ArchConfig.matmul_backend / .quant_bits / .photonic); serve-time params
+    can be pre-tuned once with ``core.backend.prepare_params``,
   * optional Eq. 2 decomposed attention dataflow (attn_impl="decomposed"),
   * optional MGNet RoI pruning: patches are scored by MGNet and only the
     top-k (static budget = ceil(keep_ratio * N)) enter encoder block 0 —
@@ -83,7 +86,9 @@ def vit_logical_axes(cfg: ArchConfig) -> dict:
           "final_ln_g": (None,), "final_ln_b": (None,),
           "head": ("p_embed", None)}
     if cfg.mgnet:
-        ax["mgnet"] = jax.tree_util.tree_map(lambda _: None, {})
+        # structure-matching all-None (replicated) tree — an empty pytree
+        # here would break annotation tree_maps against the real params.
+        ax["mgnet"] = mgnet_mod.mgnet_logical_axes()
     return ax
 
 
@@ -107,7 +112,8 @@ def forward_vit(params: dict, images: jnp.ndarray, cfg: ArchConfig,
     if cfg.mgnet and cfg.mgnet_keep_ratio < 1.0:
         mcfg = MGNetConfig(patch=cfg.patch, img_size=cfg.img_size,
                            embed=cfg.mgnet_embed, heads=cfg.mgnet_heads)
-        scores = mgnet_scores(params["mgnet"], images, mcfg)   # (B, N)
+        # MGNet shares the optical cores with the backbone: same policy.
+        scores = mgnet_scores(params["mgnet"], images, mcfg, policy)  # (B, N)
         kept = max(1, int(cfg.mgnet_keep_ratio * n))
         x, _ = mgnet_mod.select_topk_patches(scores, x, kept)
 
@@ -118,9 +124,9 @@ def forward_vit(params: dict, images: jnp.ndarray, cfg: ArchConfig,
     def body(carry, lp):
         h = layernorm(carry, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
         if cfg.attn_impl == "decomposed":
-            o = mhsa_decomposed(h, lp["attn"], cfg.n_heads)
+            o = mhsa_decomposed(h, lp["attn"], cfg.n_heads, policy)
         else:
-            o = mhsa_standard(h, lp["attn"], cfg.n_heads)
+            o = mhsa_standard(h, lp["attn"], cfg.n_heads, policy)
         carry = carry + o.astype(carry.dtype)
         h2 = layernorm(carry, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
         carry = carry + ffn_mod.mlp(lp["ffn"], h2, policy)

@@ -1,0 +1,86 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The seed container doesn't ship hypothesis (requirements-test.txt installs
+it in CI, where the full shrinking/property engine runs). To keep the suite
+collectable and *green* without it, this module re-implements the tiny
+strategy surface the tests use — integers / floats / lists / sampled_from —
+and a ``given`` that runs the test body over a fixed-seed sample sweep.
+No shrinking, no database; just deterministic example generation.
+
+Usage in test modules::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_DEFAULT_EXAMPLES = 10
+_SEED = 0xA11CE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, allow_nan: bool = True,
+               allow_infinity: bool = True, width: int = 64) -> _Strategy:
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int | None = None) -> _Strategy:
+        def draw(r):
+            hi = max_size if max_size is not None else min_size + 10
+            return [elements.draw(r) for _ in range(r.randint(min_size, hi))]
+        return _Strategy(draw)
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rnd = random.Random(_SEED)
+            for _ in range(wrapper._max_examples):
+                drawn = [s.draw(rnd) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+        # hide the strategy-filled (trailing) parameters from pytest's
+        # fixture resolution — like hypothesis, only leading params (if
+        # any) remain visible as fixtures.
+        params = list(inspect.signature(fn).parameters.values())
+        wrapper.__signature__ = inspect.Signature(
+            params[: len(params) - len(strategies)])
+        del wrapper.__wrapped__
+        wrapper._max_examples = _DEFAULT_EXAMPLES
+        wrapper._fallback_given = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int | None = None, **_ignored):
+    def deco(fn):
+        if max_examples and getattr(fn, "_fallback_given", False):
+            fn._max_examples = max_examples
+        return fn
+    return deco

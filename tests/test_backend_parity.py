@@ -1,0 +1,299 @@
+"""Cross-backend parity contract for the unified matmul execution backend.
+
+core/backend.py promises that the three photonic execution paths —
+``photonic_matmul_exact`` (one-shot), ``photonic_sim`` (Fig. 6 chunk walk)
+and ``photonic_pallas`` (int8 MXU kernel, interpret mode) — produce
+bit-identical int32 accumulates, and that the quantize-once weight cache
+(``prepare_params``) changes nothing about the numbers, only when weight
+quantization happens."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import smoke_variant
+from repro.configs.opto_vit import get_config
+from repro.core import backend as be
+from repro.core.backend import (ExecPolicy, QuantizedWeight, linear,
+                                prepare_params, quantize_weight)
+from repro.core.mgnet import mgnet_logical_axes, mgnet_scores, MGNetConfig
+from repro.core.photonic import OpticalCoreConfig, photonic_matmul_exact, \
+    photonic_matmul_sim
+from repro.models.vit import forward_vit, init_vit, vit_logical_axes
+
+TINY96 = get_config("tiny", img_size=96)
+
+
+def _rand_int8(key, shape):
+    return jax.random.randint(key, shape, -127, 128, jnp.int32).astype(
+        jnp.int8)
+
+
+# --------------------------------------------------------------------------
+# integer-accumulate contract (acceptance: bit-identical across backends)
+# --------------------------------------------------------------------------
+
+def _tiny96_weight_shapes():
+    """The distinct (M, K, N) weight matmuls of one Tiny-96 forward:
+    patch embed, per-layer q/k/v/o projections, the two FFN matmuls, and
+    the classifier head."""
+    n = (96 // 16) ** 2 + 1                      # 37 tokens incl. [cls]
+    d, dff = TINY96.d_model, TINY96.d_ff
+    return [(n - 1, 3 * 16 * 16, d),             # patch embed
+            (n, d, d),                           # q/k/v/o projections
+            (n, d, dff), (n, dff, d),            # FFN
+            (1, d, 1000)]                        # head
+
+
+@pytest.mark.parametrize("m,k,n", _tiny96_weight_shapes())
+def test_int_accumulates_bit_identical_tiny96(m, k, n):
+    kx, kw = jax.random.split(jax.random.PRNGKey(m * 31 + k * 7 + n))
+    xq = _rand_int8(kx, (m, k))
+    wq = _rand_int8(kw, (k, n))
+    exact = np.asarray(be.int_accumulate_exact(xq, wq))
+    sim = np.asarray(be.int_accumulate_sim(xq, wq))
+    pallas = np.asarray(be.int_accumulate_pallas(xq, wq))
+    np.testing.assert_array_equal(exact, sim)
+    np.testing.assert_array_equal(exact, pallas)
+
+
+def test_linear_matches_photonic_matmul_exact():
+    """Every photonic backend's full float path == the exact oracle."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(kx, (37, 192))
+    w = jax.random.normal(kw, (192, 768))
+    ref = np.asarray(photonic_matmul_exact(x, w))
+    for name in ("photonic_sim", "photonic_pallas"):
+        out = linear(x, w, policy=ExecPolicy(backend=name))
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-6,
+                                   atol=1e-6, err_msg=name)
+
+
+# --------------------------------------------------------------------------
+# non-multiple-of-128 padding path through the Pallas kernel (ViT-Tiny
+# shapes: none of M=37, K=768, N=192 is a block multiple)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(37, 768, 192), (37, 192, 192),
+                                   (1, 192, 1000), (130, 33, 65)])
+def test_pallas_padding_path_parity(m, k, n):
+    from repro.kernels.ops import photonic_matmul
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(m + k + n))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    out = np.asarray(photonic_matmul(x, w))
+    ref = np.asarray(photonic_matmul_exact(x, w))
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-6)
+
+
+def test_prequant_padding_parity():
+    """Cached-weight kernel entry point on unaligned ViT-Tiny shapes."""
+    from repro.kernels.ops import photonic_matmul_prequant
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(9))
+    x = jax.random.normal(kx, (37, 768))
+    w = jax.random.normal(kw, (768, 192))
+    qw = quantize_weight(w)
+    out = photonic_matmul_prequant(x, qw.wq, qw.scale.reshape(-1))
+    ref = photonic_matmul_exact(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# quantize-once cache
+# --------------------------------------------------------------------------
+
+def test_prepare_params_wraps_only_matmul_weights():
+    cfg = smoke_variant(TINY96).with_(mgnet=True)
+    params = init_vit(jax.random.PRNGKey(0), cfg, n_classes=8)
+    prep = prepare_params(params)
+    assert isinstance(prep["patch_embed"]["w"], QuantizedWeight)
+    assert isinstance(prep["blocks"]["attn"]["wq"], QuantizedWeight)
+    assert isinstance(prep["blocks"]["ffn"]["w1"], QuantizedWeight)
+    assert isinstance(prep["mgnet"]["block"]["wqkv"], QuantizedWeight)
+    # non-matmul leaves stay raw
+    for leaf in (prep["cls"], prep["pos"], prep["patch_embed"]["b"],
+                 prep["final_ln_g"], prep["mgnet"]["cls_token"],
+                 prep["mgnet"]["pos_embed"]):
+        assert isinstance(leaf, jax.Array)
+    # idempotent
+    again = prepare_params(prep)
+    assert again["patch_embed"]["w"] is prep["patch_embed"]["w"]
+
+
+def test_stacked_weight_cache_matches_per_layer_quant():
+    """A scan-stacked (L, K, N) weight must carry per-layer scales equal to
+    quantizing each (K, N) slice on its own — the bit-parity precondition."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 16, 24))
+    qw = quantize_weight(w)
+    assert qw.wq.shape == (3, 16, 24) and qw.scale.shape == (3, 1, 24)
+    for l in range(3):
+        per = quantize_weight(w[l])
+        np.testing.assert_array_equal(np.asarray(qw.wq[l]),
+                                      np.asarray(per.wq))
+        np.testing.assert_array_equal(np.asarray(qw.scale[l]),
+                                      np.asarray(per.scale))
+
+
+@pytest.mark.parametrize("backend", ["photonic_sim", "photonic_pallas"])
+def test_cached_linear_bit_identical_to_dynamic(backend):
+    """Out of jit, the cache changes *when* weight quantization happens,
+    not a single bit of what ``linear`` returns."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(11))
+    x = jax.random.normal(kx, (2, 9, 192))
+    w = jax.random.normal(kw, (192, 768))
+    pol = ExecPolicy(backend=backend)
+    y_raw = linear(x, w, policy=pol)
+    y_cached = linear(x, quantize_weight(w), policy=pol)
+    np.testing.assert_array_equal(np.asarray(y_raw), np.asarray(y_cached))
+
+
+@pytest.mark.parametrize("backend", ["photonic_sim", "photonic_pallas"])
+def test_cached_forward_matches_uncached(backend):
+    """Through the whole forward the integer accumulates are unchanged; the
+    logits may differ only by XLA's reassociation of the f32 dequant
+    epilogue inside the compiled layer scan (the raw graph carries weight-
+    quant ops the cached graph doesn't, so fusion choices differ)."""
+    cfg = smoke_variant(TINY96).with_(matmul_backend=backend)
+    params = init_vit(jax.random.PRNGKey(0), cfg, n_classes=8)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.img_size,
+                                                     cfg.img_size, 3))
+    lg_raw, _ = forward_vit(params, imgs, cfg)
+    lg_cached, _ = forward_vit(prepare_params(params), imgs, cfg)
+    np.testing.assert_allclose(np.asarray(lg_raw), np.asarray(lg_cached),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# cross-backend forward parity (acceptance criterion)
+# --------------------------------------------------------------------------
+
+def test_forward_vit_parity_across_photonic_backends():
+    """photonic_sim and photonic_pallas agree on the full Tiny-derived
+    forward (cached weights); both correlate with bf16 up to 8-bit error."""
+    cfg = smoke_variant(TINY96)
+    params = init_vit(jax.random.PRNGKey(0), cfg, n_classes=8)
+    prepared = prepare_params(params)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.img_size,
+                                                     cfg.img_size, 3))
+    lg_sim, _ = forward_vit(prepared, imgs,
+                            cfg.with_(matmul_backend="photonic_sim"))
+    lg_pal, _ = forward_vit(prepared, imgs,
+                            cfg.with_(matmul_backend="photonic_pallas"))
+    np.testing.assert_allclose(np.asarray(lg_sim), np.asarray(lg_pal),
+                               rtol=1e-5, atol=1e-5)
+    lg_fp, _ = forward_vit(params, imgs, cfg.with_(matmul_backend="bf16"))
+    corr = np.corrcoef(np.asarray(lg_fp).ravel(),
+                       np.asarray(lg_sim).ravel())[0, 1]
+    assert corr > 0.99, corr
+
+
+def test_decomposed_attention_under_photonic_backend():
+    cfg = smoke_variant(TINY96).with_(matmul_backend="photonic_sim")
+    params = init_vit(jax.random.PRNGKey(0), cfg, n_classes=8)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.img_size,
+                                                     cfg.img_size, 3))
+    lg_std, _ = forward_vit(params, imgs, cfg)
+    lg_dec, _ = forward_vit(params, imgs,
+                            cfg.with_(attn_impl="decomposed"))
+    # Eq. 2 changes the association order *and* where quantization applies;
+    # agreement is close but not bitwise.
+    corr = np.corrcoef(np.asarray(lg_std).ravel(),
+                       np.asarray(lg_dec).ravel())[0, 1]
+    assert corr > 0.99, corr
+
+
+def test_backend_registry_contents():
+    assert set(be.available_backends()) >= {"bf16", "qat", "photonic_sim",
+                                            "photonic_pallas"}
+    with pytest.raises(KeyError, match="unknown matmul backend"):
+        be.get_backend("does-not-exist")
+    assert ExecPolicy(photonic=True).resolve_backend() == "photonic_sim"
+    assert ExecPolicy(quant_bits=8).resolve_backend() == "qat"
+    assert ExecPolicy().resolve_backend() == "bf16"
+    assert ExecPolicy(backend="photonic_pallas",
+                      quant_bits=8).resolve_backend() == "photonic_pallas"
+
+
+# --------------------------------------------------------------------------
+# MGNet under the shared dispatch (acceptance: no raw weight matmuls)
+# --------------------------------------------------------------------------
+
+def test_mgnet_routes_through_backend_dispatch():
+    mcfg = MGNetConfig(patch=8, embed=32, heads=2, img_size=32)
+    from repro.core.mgnet import init_mgnet
+    params = init_mgnet(jax.random.PRNGKey(0), mcfg)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    s_fp = mgnet_scores(params, imgs, mcfg)
+    s_ph = mgnet_scores(params, imgs, mcfg,
+                        ExecPolicy(backend="photonic_sim"))
+    # photonic execution quantizes => different bits, same scores overall
+    assert not np.array_equal(np.asarray(s_fp), np.asarray(s_ph))
+    corr = np.corrcoef(np.asarray(s_fp).ravel(),
+                       np.asarray(s_ph).ravel())[0, 1]
+    assert corr > 0.99, corr
+    # cached MGNet weights are bit-identical to dynamic quantization
+    s_cached = mgnet_scores(prepare_params(params), imgs, mcfg,
+                            ExecPolicy(backend="photonic_sim"))
+    np.testing.assert_array_equal(np.asarray(s_ph), np.asarray(s_cached))
+
+
+def test_no_raw_weight_matmuls_left_in_mgnet():
+    """Source-level guard for the acceptance criterion: the only ``@``
+    products left in core/mgnet.py are activation-activation (q.K^T,
+    att.V, q_cls.K^T), never against a params[...] weight."""
+    import inspect
+
+    from repro.core import mgnet as mgnet_mod
+    src = inspect.getsource(mgnet_mod)
+    assert "@ params" not in src and "@ blk" not in src
+    matmul_lines = [ln.strip() for ln in src.splitlines()
+                    if " @ " in ln and not ln.strip().startswith("#")]
+    allowed = ("q @ k.transpose", "att @ v", "q_cls @ k_pat.transpose")
+    for ln in matmul_lines:
+        assert any(a in ln for a in allowed), ln
+
+
+# --------------------------------------------------------------------------
+# satellites: logical axes + ADC model
+# --------------------------------------------------------------------------
+
+def test_vit_logical_axes_matches_param_structure_with_mgnet():
+    cfg = smoke_variant(TINY96).with_(mgnet=True)
+    params = init_vit(jax.random.PRNGKey(0), cfg, n_classes=8)
+    axes = vit_logical_axes(cfg)
+    # tree_map across (params, axes) must not raise a structure mismatch;
+    # every axis entry has one name per tensor dim (stacked layers add one).
+    def check(p, ax):
+        assert isinstance(ax, tuple), (p.shape, ax)
+        assert p.ndim in (len(ax), len(ax) + 1), (p.shape, ax)
+        return 0
+
+    jax.tree_util.tree_map(check, params, axes)
+    assert "mgnet" in axes
+    mg_leaves = jax.tree_util.tree_leaves(
+        axes["mgnet"], is_leaf=lambda x: isinstance(x, tuple))
+    assert mg_leaves and all(all(a is None for a in t) for t in mg_leaves)
+    assert mgnet_logical_axes().keys() == params["mgnet"].keys()
+
+
+def test_adc_output_quantization_option():
+    kx, kw = jax.random.split(jax.random.PRNGKey(5))
+    x = jax.random.normal(kx, (16, 64))
+    w = jax.random.normal(kw, (64, 32))
+    ideal = photonic_matmul_sim(x, w)
+    adc = photonic_matmul_sim(x, w,
+                              OpticalCoreConfig(adc_quantize_output=True))
+    # ideal ADC == exact integer readout; range-limited ADC perturbs it
+    np.testing.assert_allclose(np.asarray(ideal),
+                               np.asarray(photonic_matmul_exact(x, w)),
+                               rtol=1e-5, atol=1e-5)
+    err = np.abs(np.asarray(adc) - np.asarray(ideal)).max()
+    assert 0 < err, "ADC quantization should alter the readout"
+    # but only by at most one ADC step (absmax/127 of the output range)
+    step = np.abs(np.asarray(ideal)).max() / 127
+    assert err <= step / 2 + 1e-6, (err, step)

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # seed container: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import quant
 from repro.core.photonic import photonic_matmul_exact

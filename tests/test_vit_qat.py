@@ -47,14 +47,24 @@ def test_mgnet_pruning_reduces_tokens(images):
 
 
 def test_decomposed_attention_mode(images):
-    """attn_impl='decomposed' (paper Eq. 2) must match standard."""
-    cfg_std = _smoke_vit()
-    params = init_vit(jax.random.PRNGKey(1), cfg_std, n_classes=8)
-    lg_std, _ = forward_vit(params, images, cfg_std)
+    """attn_impl='decomposed' (paper Eq. 2) must match standard: tightly in
+    full precision; under 8-bit execution only up to quantization noise —
+    the two dataflows quantize at different points (W_K^T/sqrt(d) is tuned
+    as its own weight), so exact agreement is not expected there."""
+    cfg_fp = _smoke_vit(quant_bits=0)
+    params = init_vit(jax.random.PRNGKey(1), cfg_fp, n_classes=8)
+    lg_std, _ = forward_vit(params, images, cfg_fp)
     lg_dec, _ = forward_vit(params, images,
-                            cfg_std.with_(attn_impl="decomposed"))
+                            cfg_fp.with_(attn_impl="decomposed"))
     np.testing.assert_allclose(np.asarray(lg_std), np.asarray(lg_dec),
                                rtol=5e-3, atol=5e-3)
+
+    cfg_q = _smoke_vit()                       # quant_bits=8 (paper default)
+    lg_qs, _ = forward_vit(params, images, cfg_q)
+    lg_qd, _ = forward_vit(params, images, cfg_q.with_(attn_impl="decomposed"))
+    corr = np.corrcoef(np.asarray(lg_qs).ravel(),
+                       np.asarray(lg_qd).ravel())[0, 1]
+    assert corr > 0.99, corr
 
 
 def test_matmul_shapes_scale_with_pruning():
