@@ -13,8 +13,8 @@ import sys
 import time
 
 from benchmarks import (bench_backend_cache, fig8_energy, fig9_latency,
-                        fig10_11_mgnet, roofline_table, table1_qat,
-                        table4_kfps)
+                        fig10_11_mgnet, roofline_table, serving_bench,
+                        table1_qat, table4_kfps)
 
 ALL = {
     "fig8": fig8_energy.run,
@@ -24,6 +24,7 @@ ALL = {
     "table4": table4_kfps.run,
     "roofline": roofline_table.run,
     "cache": bench_backend_cache.run,
+    "serving": serving_bench.run,
 }
 
 

@@ -1,0 +1,114 @@
+"""Streaming serving engine benchmark (repro.serving) — the paper's
+near-sensor scenario as a perf trajectory.
+
+Two measurements:
+
+  1. **natural routing** (tiny-96, photonic-model accounting): stream the
+     synthetic video with MGNet-derived budgets and record frames/s, model
+     KFPS/W, the bucket-hit histogram and the mask-reuse rate — written to
+     ``BENCH_serving.json`` so the perf trajectory records every run;
+
+  2. **bucketed vs mask-mode dense** (tiny-224, pinned 50% skip): identical
+     gating, one path encodes top-k-gathered tokens at the k = N/2 bucket,
+     the other encodes all N patches with the RoI mask on the attention key
+     axis. Gate: the bucketed path must be >= 1.5x frames/s — the shape-
+     static compute reduction the serving subsystem exists to deliver.
+
+Timing statistic: best-of-TRIALS wall per path (background load on a shared
+host only ever adds time).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs.opto_vit import get_config
+from repro.data.pipeline import VideoStream
+from repro.serving.engine import ServingConfig, ServingEngine
+
+TRIALS = 3
+FRAMES = 96
+SPEEDUP_GATE = 1.5
+OUT_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+
+
+def _best_runs(engine, stream, frames):
+    """(best bucketed StreamResult, best dense StreamResult) over TRIALS."""
+    engine.run(stream, n_frames=32)            # compile + warm every bucket
+    engine.run_dense(stream, n_frames=32)
+    best_b = best_d = None
+    for t in range(TRIALS):
+        b = engine.run(stream, n_frames=frames, start=1000 + t)
+        d = engine.run_dense(stream, n_frames=frames, start=1000 + t)
+        if best_b is None or b.wall_s < best_b.wall_s:
+            best_b = b
+        if best_d is None or d.wall_s < best_d.wall_s:
+            best_d = d
+    return best_b, best_d
+
+
+def run() -> dict:
+    print("\n== streaming serving engine: RoI-gated bucketed encode ==")
+
+    # -- 1) natural bucket routing + accelerator-model accounting ----------
+    cfg96 = get_config("tiny", img_size=96, mgnet=True).with_(
+        matmul_backend="bf16")
+    eng96 = ServingEngine(cfg96, ServingConfig(microbatch=8, chunk=8),
+                          n_classes=10)
+    stream96 = VideoStream(img_size=96, patch=16, cut_every=32)
+    eng96.run(stream96, n_frames=16)                       # warm
+    nat = eng96.run(stream96, n_frames=FRAMES, start=500)
+    print(f"  natural routing (tiny-96): {nat.fps:7.1f} frames/s  "
+          f"{nat.kfps_per_watt:7.1f} KFPS/W  "
+          f"(dense model: {nat.dense_kfps_per_watt:.1f})")
+    print(f"  bucket hits: {nat.bucket_hits}   mgnet scored "
+          f"{nat.scored_frames}/{nat.frames}")
+
+    # -- 2) bucketed top-k vs mask-mode dense at pinned 50% skip -----------
+    cfg224 = get_config("tiny", img_size=224, mgnet=True).with_(
+        matmul_backend="bf16")
+    sc = ServingConfig(microbatch=16, chunk=16, force_bucket=0.5)
+    eng224 = ServingEngine(cfg224, sc, n_classes=10)
+    stream224 = VideoStream(img_size=224, patch=16, cut_every=32)
+    bucketed, dense = _best_runs(eng224, stream224, FRAMES)
+    speedup = bucketed.fps / dense.fps
+    print(f"  50% skip (tiny-224): bucketed {bucketed.fps:6.1f} frames/s vs "
+          f"mask-mode dense {dense.fps:6.1f} frames/s -> {speedup:.2f}x")
+    print(f"  model energy: {bucketed.mean_frame_uj:.2f} uJ/frame bucketed "
+          f"vs {dense.mean_frame_uj:.2f} dense "
+          f"({bucketed.kfps_per_watt:.1f} vs {dense.kfps_per_watt:.1f} KFPS/W)")
+
+    payload = {
+        "natural": {
+            "config": "tiny-96", "frames": nat.frames, "fps": nat.fps,
+            "kfps_per_watt": nat.kfps_per_watt,
+            "mean_frame_uj": nat.mean_frame_uj,
+            "bucket_hits": nat.bucket_hits,
+            "scored_frames": nat.scored_frames,
+            "reused_frames": nat.reused_frames,
+        },
+        "skip50": {
+            "config": "tiny-224", "frames": bucketed.frames,
+            "bucketed_fps": bucketed.fps, "dense_fps": dense.fps,
+            "speedup": speedup,
+            "bucketed_kfps_per_watt": bucketed.kfps_per_watt,
+            "dense_kfps_per_watt": dense.kfps_per_watt,
+        },
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"  wrote {OUT_JSON}")
+
+    assert speedup >= SPEEDUP_GATE, (
+        f"bucketed top-k must beat mask-mode dense by >= {SPEEDUP_GATE}x "
+        f"frames/s at 50% skip; measured {speedup:.2f}x")
+    # the model-level claim of the whole subsystem: skipping patches saves
+    # energy, so the gated stream's KFPS/W beats the dense baseline's
+    assert nat.kfps_per_watt > nat.dense_kfps_per_watt, (
+        nat.kfps_per_watt, nat.dense_kfps_per_watt)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Streaming video serving demo: the paper's near-sensor deployment loop.
+
+A synthetic camera stream (moving object, periodic scene cuts) flows through
+the serving engine's full pipeline —
+
+    ingest (double-buffered) -> MGNet RoI gate (temporal mask reuse)
+    -> token-budget bucket routing -> micro-batched top-k encode
+    -> per-flush energy accounting
+
+— and the run reports live frames/s, the accelerator model's KFPS/W
+(paper Table IV metric), the bucket-hit histogram and how rarely MGNet
+actually had to run (static scenes reuse the cached mask; cuts re-score).
+
+    PYTHONPATH=src python examples/serve_video_stream.py \\
+        --frames 128 --backend photonic_sim
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import smoke_variant
+from repro.configs.opto_vit import get_config
+from repro.core.backend import available_backends
+from repro.data.pipeline import VideoStream
+from repro.serving.engine import ServingConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=128)
+    ap.add_argument("--backend", default="photonic_sim",
+                    help=f"matmul backend: {', '.join(available_backends())}")
+    ap.add_argument("--mask-refresh", type=int, default=16)
+    ap.add_argument("--cut-every", type=int, default=48)
+    args = ap.parse_args()
+    if args.backend not in available_backends():
+        raise SystemExit(f"unknown backend {args.backend!r}; "
+                         f"choose from {available_backends()}")
+
+    cfg = smoke_variant(get_config("tiny")).with_(
+        mgnet=True, mgnet_embed=32, mgnet_heads=2,
+        matmul_backend=args.backend)
+    serve_cfg = ServingConfig(bucket_fractions=(0.25, 0.5, 0.75, 1.0),
+                              microbatch=4, chunk=8,
+                              mask_refresh=args.mask_refresh)
+    engine = ServingEngine(cfg, serve_cfg, n_classes=8)
+    print(f"[video] backend={engine.policy.resolve_backend()} "
+          f"ladder={list(engine.ladder.sizes)} of {engine.n_patches} patches, "
+          f"mask refresh every {args.mask_refresh} frames or on scene change")
+
+    stream = VideoStream(img_size=cfg.img_size, patch=cfg.patch,
+                         cut_every=args.cut_every)
+    res = engine.run(stream, n_frames=args.frames, verbose=True)
+    print("[video]", res.summary())
+    print(f"[video] MGNet ran on {res.scored_frames} of {res.frames} frames "
+          f"({1 - res.scored_frames / res.frames:.0%} mask reuse) — "
+          "static scenes make the RoI gate nearly free")
+
+
+if __name__ == "__main__":
+    main()

@@ -72,14 +72,31 @@ def _heads_split(t: jnp.ndarray, h: int) -> jnp.ndarray:
     return t.reshape(*lead, n, h, d // h).swapaxes(-2, -3)  # (..., h, n, dh)
 
 
+def _key_mask_bias(mask: jnp.ndarray | None, dtype) -> jnp.ndarray | None:
+    """(..., n) keep-mask {0,1} -> additive key-axis bias (..., 1, 1, n).
+
+    Excluded tokens get a large negative score so softmax assigns them
+    exactly-zero probability weight (exp underflows); kept rows then compute
+    identical values whether dropped tokens are present (mask mode) or
+    physically gathered out (top-k mode) — the serving parity contract.
+    """
+    if mask is None:
+        return None
+    return ((mask.astype(jnp.float32) - 1.0) * 1e9
+            ).astype(dtype)[..., None, None, :]
+
+
 def mhsa_standard(x: jnp.ndarray, params: dict, heads: int,
-                  policy: ExecPolicy | None = None) -> jnp.ndarray:
+                  policy: ExecPolicy | None = None,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """Multi-head self-attention, standard dataflow.
 
     params: wq/wk/wv (dm, dm), wo (dm, dm) — per-head splits taken
     internally. The four weight projections route through the backend
     dispatch (``linear``); the score and PV matmuls are activation-
     activation (dynamically tuned cores on hardware) and stay in float.
+    ``mask`` (..., n) keep-mask removes tokens from the key axis (RoI mask
+    mode: shapes stay static, dropped patches contribute nothing).
     """
     dm = x.shape[-1]
     dh = dm // heads
@@ -87,14 +104,19 @@ def mhsa_standard(x: jnp.ndarray, params: dict, heads: int,
     q = _heads_split(linear(x, params["wq"], policy=policy), heads)
     k = _heads_split(linear(x, params["wk"], policy=policy), heads)
     v = _heads_split(linear(x, params["wv"], policy=policy), heads)
-    s = jax.nn.softmax((q @ k.swapaxes(-1, -2)) * scale, axis=-1)
+    s = (q @ k.swapaxes(-1, -2)) * scale
+    bias = _key_mask_bias(mask, s.dtype)
+    if bias is not None:
+        s = s + bias
+    s = jax.nn.softmax(s, axis=-1)
     o = s @ v                                     # (..., h, n, dh)
     o = o.swapaxes(-2, -3).reshape(*x.shape[:-1], dm)
     return linear(o, params["wo"], policy=policy)
 
 
 def mhsa_decomposed(x: jnp.ndarray, params: dict, heads: int,
-                    policy: ExecPolicy | None = None) -> jnp.ndarray:
+                    policy: ExecPolicy | None = None,
+                    mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """Multi-head self-attention with Eq. 2 score dataflow (per head).
 
     Per head h: S_h = (X Wq_h) (Wk_h^T/sqrt(dh)) X^T. Mathematically equal to
@@ -121,6 +143,9 @@ def mhsa_decomposed(x: jnp.ndarray, params: dict, heads: int,
             [linear(q[..., h, :, :], wk[:, h, :].T * scale, policy=policy)
              for h in range(heads)], axis=-3)
     s = jnp.einsum("...hnd,...md->...hnm", qwk, x)      # (..., h, n, n)
+    bias = _key_mask_bias(mask, s.dtype)
+    if bias is not None:
+        s = s + bias
     s = jax.nn.softmax(s, axis=-1)
     v = _heads_split(linear(x, params["wv"], policy=policy), heads)
     o = (s @ v).swapaxes(-2, -3).reshape(*x.shape[:-1], dm)

@@ -17,13 +17,13 @@ headline pins E_frame ~= 9.96 uJ for the reference (Tiny, 96x96) workload.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 
 from repro.core.photonic import OpticalCoreConfig, PhotonicOpStats, matmul_stats
 
 __all__ = ["EnergyConstants", "LatencyConstants", "EnergyReport",
            "energy_of_stats", "latency_of_stats", "accumulate_matmuls",
-           "kfps_per_watt"]
+           "kfps_per_watt", "aggregate_reports"]
 
 
 @dataclass(frozen=True)
@@ -101,6 +101,26 @@ class EnergyReport:
                 ("tuning_uj", "vcsel_uj", "bpd_uj", "adc_uj", "dac_uj",
                  "memory_uj", "epu_uj")} if t > 0 else {}
 
+    # -- streaming aggregation (serving engine accounting) -----------------
+    @property
+    def _FIELDS(self) -> tuple:
+        # derived, not hand-listed: a future component field joins the
+        # aggregation automatically instead of being silently dropped
+        return tuple(f.name for f in fields(self))
+
+    def __add__(self, other: "EnergyReport") -> "EnergyReport":
+        return EnergyReport(**{f: getattr(self, f) + getattr(other, f)
+                               for f in self._FIELDS})
+
+    def __iadd__(self, other: "EnergyReport") -> "EnergyReport":
+        for f in self._FIELDS:
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        return self
+
+    def scaled(self, n: float) -> "EnergyReport":
+        """Report for ``n`` identical frames (per-batch accounting)."""
+        return EnergyReport(**{f: getattr(self, f) * n for f in self._FIELDS})
+
 
 def energy_of_stats(stats: PhotonicOpStats, nonlin_elems: int = 0,
                     c: EnergyConstants | None = None) -> EnergyReport:
@@ -162,3 +182,16 @@ def kfps_per_watt(report: EnergyReport) -> float:
     """KFPS/W = frames-per-joule / 1000 = 1 / (E_frame[mJ])."""
     e_mj = report.total_uj / 1000.0
     return 1.0 / e_mj if e_mj > 0 else float("inf")
+
+
+def aggregate_reports(reports) -> EnergyReport:
+    """Sum an iterable of EnergyReports into one aggregate report.
+
+    ``kfps_per_watt(aggregate.scaled(1 / n_frames))`` is then the stream's
+    Table-4 metric: KFPS/W of a pipelined accelerator depends only on the
+    mean energy per frame, not on host wall time.
+    """
+    total = EnergyReport()
+    for r in reports:
+        total += r
+    return total

@@ -31,11 +31,13 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.backend import ExecPolicy, linear
 
 __all__ = ["MGNetConfig", "init_mgnet", "mgnet_logical_axes", "mgnet_scores",
-           "mgnet_mask", "select_topk_patches", "mask_iou", "bce_loss"]
+           "mgnet_mask", "select_topk_patches", "mask_iou", "bce_loss",
+           "mask_budget", "frame_delta"]
 
 
 @dataclass(frozen=True)
@@ -178,10 +180,45 @@ def select_topk_patches(scores: jnp.ndarray, tokens: jnp.ndarray, keep: int):
 
     scores: (B, N) region logits; tokens: (B, N, D) patch embeddings.
     Returns (pruned_tokens (B, keep, D), kept_idx (B, keep)).
+
+    Tie-breaking is deterministic: among equal scores the lowest patch index
+    wins (stable descending argsort rather than ``lax.top_k``, whose tie
+    order is backend-defined). The serving bucket router keys on the kept
+    set, so reproducible routing requires reproducible selection.
     """
-    _, idx = jax.lax.top_k(scores, keep)
+    idx = jnp.argsort(scores, axis=-1, stable=True, descending=True)
+    idx = idx[..., :keep]
     pruned = jnp.take_along_axis(tokens, idx[..., None], axis=1)
     return pruned, idx
+
+
+def mask_budget(scores, t_reg: float = 0.5):
+    """Per-frame kept-patch count implied by the binary mask, shape (B,).
+
+    This is the *token budget* a frame requests from the serving bucket
+    ladder: the number of patches whose sigmoid score clears ``t_reg``.
+    Accepts numpy or jax scores and stays in that domain — the serving
+    engine's routing decision runs on host-resident cached scores, and a
+    device round-trip per chunk would cost more than the count itself.
+    """
+    if isinstance(scores, np.ndarray):
+        keep = 1.0 / (1.0 + np.exp(-scores.astype(np.float64))) > t_reg
+        return keep.sum(axis=-1).astype(np.int32)
+    return (jax.nn.sigmoid(scores) > t_reg).sum(axis=-1).astype(jnp.int32)
+
+
+def frame_delta(frames, ref):
+    """Cheap per-frame change signal vs a reference frame, shape (B,).
+
+    Mean absolute pixel difference — the near-sensor trigger for re-running
+    MGNet: below a threshold the cached RoI mask is reused (static scene),
+    above it (motion / scene cut) the frame is re-scored. O(HW) adds per
+    frame, i.e. negligible next to even one MGNet patch-embed matmul.
+    Numpy in, numpy out (host-side gating walk); jax in, jax out.
+    """
+    xp = np if isinstance(frames, np.ndarray) else jnp
+    d = xp.abs(frames.astype(xp.float32) - ref.astype(xp.float32))
+    return d.mean(axis=tuple(range(1, frames.ndim)))
 
 
 def mask_iou(pred: jnp.ndarray, gt: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:

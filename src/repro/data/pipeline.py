@@ -20,7 +20,8 @@ import numpy as np
 
 from repro.distributed.sharding import ShardingCtx, named_sharding
 
-__all__ = ["TokenStream", "ImageStream", "FrameStream", "lm_batch_specs"]
+__all__ = ["TokenStream", "ImageStream", "FrameStream", "VideoStream",
+           "prefetch_to_device", "lm_batch_specs"]
 
 
 def _host_rng(seed: int, step: int) -> np.random.Generator:
@@ -120,6 +121,111 @@ class FrameStream:
         rng = _host_rng(self.seed, step)
         x = rng.normal(size=(self.global_batch, self.n_frames, self.dim))
         return {"frames": jnp.asarray(x.astype(np.float32))}
+
+
+@dataclass
+class VideoStream:
+    """Temporally-coherent synthetic video: one bright object drifting over
+    a dark background, with a hard scene cut (new object, new trajectory)
+    every ``cut_every`` frames.
+
+    This is the near-sensor serving workload: consecutive frames are highly
+    correlated (MGNet's RoI mask can be *reused*), while cuts force a
+    re-score — exactly the two regimes the serving engine's temporal mask
+    cache must handle. Every frame is a pure function of (seed, frame_idx):
+    the scene segment ``idx // cut_every`` determines object/trajectory, the
+    in-segment offset moves the box, so the stream is deterministic and
+    resumable like every other pipeline here.
+
+    ``frames_at(start, count)`` returns a chunk of ``count`` consecutive
+    frames {"frames": (count, H, W, 3), "patch_mask": (count, N),
+    "frame_idx": (count,)} — patch_mask is the box-derived ground truth
+    (serving uses MGNet's predictions; tests use this). Chunks are *host*
+    numpy arrays: the serving engine's gating walk is host-side by design,
+    so the sensor hands off host memory and the consumer decides what (and
+    when) to ship to the device — see ``prefetch_to_device``.
+    """
+
+    img_size: int
+    patch: int = 16
+    seed: int = 0
+    cut_every: int = 32
+    noise: float = 0.05
+    speed: float = 1.5          # pixels / frame box drift
+
+    def _segment(self, seg: int):
+        rng = _host_rng(self.seed, seg)
+        h = self.img_size
+        bw = int(rng.integers(h // 4, h // 2))
+        bh = int(rng.integers(h // 4, h // 2))
+        y0 = float(rng.integers(0, h - bh))
+        x0 = float(rng.integers(0, h - bw))
+        ang = float(rng.uniform(0, 2 * np.pi))
+        vy, vx = self.speed * np.sin(ang), self.speed * np.cos(ang)
+        tex = float(rng.integers(0, 5))
+        return bw, bh, y0, x0, vy, vx, tex
+
+    def frame_at(self, idx: int) -> tuple[np.ndarray, np.ndarray]:
+        """(frame (H, W, 3) f32, gt patch mask (N,) f32) for one frame."""
+        h, p = self.img_size, self.patch
+        g = h // p
+        seg, off = divmod(idx, self.cut_every)
+        bw, bh, y0, x0, vy, vx, tex = self._segment(seg)
+        # drift with reflection off the borders (box stays in frame)
+        span_y, span_x = max(h - bh, 1), max(h - bw, 1)
+        y = int(abs((y0 + vy * off + span_y) % (2 * span_y) - span_y))
+        x = int(abs((x0 + vx * off + span_x) % (2 * span_x) - span_x))
+        rng = _host_rng(self.seed, idx + (1 << 20))   # per-frame sensor noise
+        img = rng.normal(0.0, self.noise, size=(h, h, 3)).astype(np.float32)
+        img[y:y + bh, x:x + bw] += 1.0 + 0.2 * tex
+        mask2 = np.zeros((g, g), np.float32)
+        mask2[y // p:(y + bh - 1) // p + 1, x // p:(x + bw - 1) // p + 1] = 1.0
+        return img, mask2.reshape(-1)
+
+    def frames_at(self, start: int, count: int) -> dict:
+        frames = np.empty((count, self.img_size, self.img_size, 3), np.float32)
+        g = self.img_size // self.patch
+        masks = np.empty((count, g * g), np.float32)
+        for i in range(count):
+            frames[i], masks[i] = self.frame_at(start + i)
+        return {"frames": frames, "patch_mask": masks,
+                "frame_idx": np.arange(start, start + count, dtype=np.int32)}
+
+    def chunks(self, chunk: int, start: int = 0) -> Iterator[dict]:
+        while True:
+            yield self.frames_at(start, chunk)
+            start += chunk
+
+
+def prefetch_to_device(it: Iterator[dict], depth: int = 2,
+                       keys: tuple[str, ...] | None = None) -> Iterator[dict]:
+    """Double-buffered host->device ingest: keep ``depth`` batches in flight.
+
+    Expects *host* (numpy) batches. ``device_put`` is async, so the H2D
+    copy of batch t+1 is already in flight while the consumer computes on
+    batch t — the software analogue of the sensor double buffer. The
+    yielded order is unchanged. With ``keys``, only those entries are
+    shipped and the host array is kept alongside as ``<key>_host`` —
+    consumers that walk the data on host (the serving RoI gate) read the
+    host view without a device round-trip, device compute reads the
+    transferred one.
+    """
+    def put(item: dict) -> dict:
+        if keys is None:
+            return {k: jax.device_put(v) for k, v in item.items()}
+        out = dict(item)
+        for k in keys:
+            out[k + "_host"] = item[k]
+            out[k] = jax.device_put(item[k])
+        return out
+
+    buf: list[dict] = []
+    for item in it:
+        buf.append(put(item))
+        if len(buf) >= depth:
+            yield buf.pop(0)
+    while buf:
+        yield buf.pop(0)
 
 
 def quadrant_labels(patch_mask: jnp.ndarray) -> jnp.ndarray:

@@ -14,6 +14,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -37,17 +38,39 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
     return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
 
 
+@functools.lru_cache(maxsize=8)
+def _prefill_scan(cfg: ArchConfig):
+    """One jitted lax.scan over prompt positions via the decode step.
+
+    The previous Python loop dispatched (and on the first call *traced*)
+    ``decode_fn`` once per token — prompt-length many XLA launches that
+    dominated smoke-serve wall time. The scan traces the step once and runs
+    the whole prefill as a single device program; it stays family-agnostic
+    because the body is still ``model_api.decode_fn``.
+    """
+
+    def run(params, cache, prompt):
+        toks = jnp.swapaxes(prompt, 0, 1)[:, :, None]      # (S, B, 1)
+        positions = jnp.arange(prompt.shape[1], dtype=jnp.int32)
+
+        def body(cache, inp):
+            tok, pos = inp
+            logits, cache = model_api.decode_fn(params, cache, tok, pos, cfg)
+            return cache, logits
+
+        cache, logits = jax.lax.scan(body, cache, (toks, positions))
+        return logits[-1], cache
+
+    return jax.jit(run)
+
+
 def prefill_into_cache(params, cache, prompt, cfg: ArchConfig,
                        extras: dict | None = None):
-    """Sequential prefill via the decode step (correct for every family;
-    a fused prefill that emits the cache in one pass is the production
-    path — the decode-step loop keeps this driver family-agnostic)."""
-    plen = prompt.shape[1]
-    logits = None
-    for i in range(plen):
-        logits, cache = model_api.decode_fn(params, cache, prompt[:, i:i + 1],
-                                            jnp.int32(i), cfg)
-    return logits, cache
+    """Prefill the prompt into the decode cache (jitted scan; correct for
+    every family — a fused prefill that emits the cache in one pass is the
+    production path, the scanned decode step keeps this driver
+    family-agnostic). Returns (last-position logits, filled cache)."""
+    return _prefill_scan(cfg)(params, cache, prompt)
 
 
 def generate(params, cache, prompt, n_tokens: int, cfg: ArchConfig,

@@ -29,7 +29,9 @@ from repro.distributed.sharding import shard
 from repro.models import ffn as ffn_mod
 from repro.models.layers import ExecPolicy, he_init, layernorm, linear
 
-__all__ = ["init_vit", "vit_logical_axes", "forward_vit", "vit_matmul_shapes"]
+__all__ = ["init_vit", "vit_logical_axes", "forward_vit", "embed_patches",
+           "encode_tokens", "forward_vit_tokens", "forward_vit_masked",
+           "vit_matmul_shapes"]
 
 
 def _n_patches(cfg):
@@ -92,6 +94,62 @@ def vit_logical_axes(cfg: ArchConfig) -> dict:
     return ax
 
 
+def embed_patches(params: dict, images: jnp.ndarray, cfg: ArchConfig,
+                  policy: ExecPolicy | None = None) -> jnp.ndarray:
+    """images (B, H, W, 3) -> position-embedded patch tokens (B, N, d).
+
+    The serving engine calls this once per ingested frame chunk, then
+    gathers per-frame top-k subsets (bucket routing) — positional
+    information must therefore already live in the tokens, which is why the
+    pos table is added *before* any pruning (identical to the fused path).
+    """
+    policy = policy or ExecPolicy.from_cfg(cfg)
+    pt = patchify(images, cfg.patch)                      # (B, N, p*p*3)
+    x = linear(pt, params["patch_embed"]["w"], params["patch_embed"]["b"],
+               policy)
+    return x + params["pos"][:, 1: x.shape[1] + 1]
+
+
+def encode_tokens(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
+                  policy: ExecPolicy | None = None,
+                  patch_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Encoder trunk on pre-embedded patch tokens -> logits (B, n_classes).
+
+    tokens: (B, k, d) position-embedded patch tokens (any k <= N — the
+    serving buckets call this with k in the ladder); the [cls] token is
+    prepended here. ``patch_mask`` (B, k) optionally removes tokens from
+    every attention key axis without changing shapes (RoI mask mode; cls is
+    always kept). Kept-token activations are identical between a masked
+    dense call and a gathered top-k call because attention is the only
+    cross-token operator in the trunk.
+    """
+    policy = policy or ExecPolicy.from_cfg(cfg)
+    b, _, d = tokens.shape
+    cls = jnp.broadcast_to(params["cls"], (b, 1, d)) + params["pos"][:, :1]
+    x = jnp.concatenate([cls.astype(tokens.dtype), tokens], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    mask = None
+    if patch_mask is not None:
+        mask = jnp.concatenate(
+            [jnp.ones((b, 1), patch_mask.dtype), patch_mask], axis=1)
+
+    def body(carry, lp):
+        h = layernorm(carry, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+        if cfg.attn_impl == "decomposed":
+            o = mhsa_decomposed(h, lp["attn"], cfg.n_heads, policy, mask)
+        else:
+            o = mhsa_standard(h, lp["attn"], cfg.n_heads, policy, mask)
+        carry = carry + o.astype(carry.dtype)
+        h2 = layernorm(carry, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
+        carry = carry + ffn_mod.mlp(lp["ffn"], h2, policy)
+        return carry, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["blocks"])
+    x = layernorm(x, params["final_ln_g"], params["final_ln_b"], cfg.norm_eps)
+    return linear(x[:, 0], params["head"], policy=policy)
+
+
 def forward_vit(params: dict, images: jnp.ndarray, cfg: ArchConfig,
                 policy: ExecPolicy | None = None):
     """images (B, H, W, 3) -> (logits (B, n_classes), kept_patches int).
@@ -100,13 +158,8 @@ def forward_vit(params: dict, images: jnp.ndarray, cfg: ArchConfig,
     ceil(keep_ratio * N) enters the encoder — paper's masked inference.
     """
     policy = policy or ExecPolicy.from_cfg(cfg)
-    b = images.shape[0]
-    d = cfg.d_model
-    pt = patchify(images, cfg.patch)                      # (B, N, p*p*3)
-    x = linear(pt, params["patch_embed"]["w"], params["patch_embed"]["b"],
-               policy)
+    x = embed_patches(params, images, cfg, policy)
     n = x.shape[1]
-    x = x + params["pos"][:, 1: n + 1]
 
     kept = n
     if cfg.mgnet and cfg.mgnet_keep_ratio < 1.0:
@@ -117,26 +170,30 @@ def forward_vit(params: dict, images: jnp.ndarray, cfg: ArchConfig,
         kept = max(1, int(cfg.mgnet_keep_ratio * n))
         x, _ = mgnet_mod.select_topk_patches(scores, x, kept)
 
-    cls = jnp.broadcast_to(params["cls"], (b, 1, d)) + params["pos"][:, :1]
-    x = jnp.concatenate([cls.astype(x.dtype), x], axis=1)
-    x = shard(x, "batch", "seq", "embed")
+    return encode_tokens(params, x, cfg, policy), kept
 
-    def body(carry, lp):
-        h = layernorm(carry, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
-        if cfg.attn_impl == "decomposed":
-            o = mhsa_decomposed(h, lp["attn"], cfg.n_heads, policy)
-        else:
-            o = mhsa_standard(h, lp["attn"], cfg.n_heads, policy)
-        carry = carry + o.astype(carry.dtype)
-        h2 = layernorm(carry, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
-        carry = carry + ffn_mod.mlp(lp["ffn"], h2, policy)
-        return carry, None
 
-    fn = jax.checkpoint(body) if cfg.remat else body
-    x, _ = jax.lax.scan(fn, x, params["blocks"])
-    x = layernorm(x, params["final_ln_g"], params["final_ln_b"], cfg.norm_eps)
-    logits = linear(x[:, 0], params["head"], policy=policy)
-    return logits, kept
+def forward_vit_tokens(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
+                       policy: ExecPolicy | None = None):
+    """Pre-gathered token forward: tokens (B, k, d) -> (logits, k).
+
+    The serving engine's bucketed encode path — the gate/gather already
+    happened upstream (possibly against a *cached* RoI mask), so every call
+    at a given bucket size k is shape-static and jit-cache-hits.
+    """
+    return encode_tokens(params, tokens, cfg, policy), tokens.shape[1]
+
+
+def forward_vit_masked(params: dict, images: jnp.ndarray,
+                       patch_mask: jnp.ndarray, cfg: ArchConfig,
+                       policy: ExecPolicy | None = None):
+    """Mask-mode dense forward: all N patches enter the encoder but
+    ``patch_mask`` (B, N) removes dropped ones from every attention key
+    axis. Compute is *not* reduced — this is the accuracy-study / baseline
+    path the bucketed top-k engine is benchmarked against."""
+    policy = policy or ExecPolicy.from_cfg(cfg)
+    x = embed_patches(params, images, cfg, policy)
+    return encode_tokens(params, x, cfg, policy, patch_mask), x.shape[1]
 
 
 def vit_matmul_shapes(cfg: ArchConfig, kept_patches: int | None = None,

@@ -1,0 +1,13 @@
+"""Streaming video serving engine (ingest -> RoI gate -> bucket -> encode
+-> account). See ``repro.serving.engine`` for the pipeline and CLI."""
+
+from repro.serving.accounting import StreamAccounting
+from repro.serving.buckets import BucketHistogram, BucketLadder
+from repro.serving.engine import (ServingConfig, ServingEngine, StreamResult,
+                                  main)
+from repro.serving.mask_cache import TemporalMaskCache
+from repro.serving.scheduler import FrameBatch, MicroBatcher
+
+__all__ = ["ServingEngine", "ServingConfig", "StreamResult", "BucketLadder",
+           "BucketHistogram", "TemporalMaskCache", "MicroBatcher",
+           "FrameBatch", "StreamAccounting", "main"]

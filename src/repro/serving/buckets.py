@@ -1,0 +1,84 @@
+"""Token-budget bucket ladder for shape-static streaming inference.
+
+MGNet gives every frame a different kept-patch count; JIT caches demand a
+small set of static shapes. The ladder quantizes the continuum of budgets
+into a few compiled bucket sizes (e.g. 25/50/75/100% of N): each frame is
+routed to the *smallest* bucket that covers its budget, top-k-gathered to
+exactly that size, and micro-batched with other frames in the same bucket —
+so every ``forward_vit_tokens`` call hits a warm jit cache. This is the
+variable-workload saturation trick dynamically-operated photonic
+accelerators rely on (Lightening-Transformer): the optical core never idles
+waiting for a recompile, it only ever sees the ladder's shapes.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["BucketLadder"]
+
+
+@dataclass(frozen=True)
+class BucketLadder:
+    """Ascending kept-patch budgets; the last entry is the dense fallback."""
+
+    sizes: tuple[int, ...]
+
+    def __post_init__(self):
+        if not self.sizes:
+            raise ValueError("empty bucket ladder")
+        if list(self.sizes) != sorted(set(self.sizes)):
+            raise ValueError(f"ladder must be strictly ascending: {self.sizes}")
+
+    @staticmethod
+    def from_fractions(n_patches: int,
+                       fractions: tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)
+                       ) -> "BucketLadder":
+        sizes = sorted({min(n_patches, max(1, int(round(f * n_patches))))
+                        for f in fractions})
+        return BucketLadder(tuple(sizes))
+
+    @property
+    def cap(self) -> int:
+        return self.sizes[-1]
+
+    def route(self, budget: int) -> int:
+        """Smallest bucket >= budget (clipped to the ladder cap)."""
+        for s in self.sizes:
+            if s >= budget:
+                return s
+        return self.cap
+
+    def route_many(self, budgets) -> np.ndarray:
+        """Vectorized ``route`` over an int array of budgets."""
+        arr = np.asarray(self.sizes)
+        pos = np.searchsorted(arr, np.asarray(budgets), side="left")
+        return arr[np.minimum(pos, len(arr) - 1)]
+
+
+class BucketHistogram:
+    """Frames-per-bucket counter (the bench's bucket-hit histogram)."""
+
+    def __init__(self, ladder: BucketLadder):
+        self.ladder = ladder
+        self._hits: Counter = Counter({k: 0 for k in ladder.sizes})
+
+    def add(self, bucket: int, n: int = 1) -> None:
+        self._hits[bucket] += n
+
+    def as_dict(self) -> dict[int, int]:
+        return {int(k): int(self._hits[k]) for k in self.ladder.sizes}
+
+    @property
+    def total(self) -> int:
+        return sum(self._hits.values())
+
+    def __repr__(self):
+        parts = ", ".join(f"k={k}: {v}" for k, v in self.as_dict().items())
+        return f"BucketHistogram({parts})"
+
+
+__all__.append("BucketHistogram")

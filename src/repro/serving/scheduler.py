@@ -1,0 +1,95 @@
+"""Micro-batch scheduler: group same-bucket frames into one encode launch.
+
+Frames routed to the same bucket size k are queued until ``microbatch`` of
+them are waiting, then flushed as one (microbatch, k, d) ``forward_vit_tokens``
+call — a single warm-jit launch per flush. Frames arrive as *groups* (all
+same-bucket frames of one ingest chunk come in one (m, k, d) gather output),
+and the queue stores groups, so the flush is at most one concatenate — not
+per-frame slicing + stacking, which at serving rates costs more dispatches
+than the encode itself. End-of-stream partials are padded with zero frames
+up to the micro-batch size so the encode shape set stays exactly |ladder|
+(no trailing-shape recompiles); padded rows are discarded and never
+accounted.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+__all__ = ["FrameBatch", "MicroBatcher"]
+
+
+@dataclass
+class FrameBatch:
+    """One flushed encode workload: ``tokens[:n_real]`` are live frames."""
+
+    bucket: int                 # kept-patch count k
+    tokens: jnp.ndarray         # (microbatch, k, d) — zero-padded past n_real
+    frame_idx: list[int]        # len n_real, stream positions of live rows
+    n_real: int
+
+
+class MicroBatcher:
+    """Per-bucket group queues with flush-at-``microbatch`` semantics."""
+
+    def __init__(self, microbatch: int = 4):
+        if microbatch < 1:
+            raise ValueError("microbatch must be >= 1")
+        self.microbatch = microbatch
+        # k -> [(tokens (m, k, d), [frame_idx] * m)]
+        self._queues: dict[int, list] = {}
+        self.flushes = 0
+
+    def push(self, bucket: int, tokens, frame_idx: int) -> list[FrameBatch]:
+        """Queue a single frame (row vector of one group)."""
+        return self.push_many(bucket, tokens[None], [frame_idx])
+
+    def push_many(self, bucket: int, tokens, frame_idx: list[int]
+                  ) -> list[FrameBatch]:
+        """Queue a group of same-bucket frames; returns every FrameBatch
+        that became ready (possibly several if the group overfills)."""
+        if tokens.shape[0] != len(frame_idx):
+            raise ValueError("tokens/frame_idx length mismatch")
+        q = self._queues.setdefault(bucket, [])
+        q.append((tokens, list(frame_idx)))
+        out = []
+        while self._rows(bucket) >= self.microbatch:
+            out.append(self._take(bucket))
+        return out
+
+    def _rows(self, bucket: int) -> int:
+        return sum(t.shape[0] for t, _ in self._queues.get(bucket, ()))
+
+    def _take(self, bucket: int, pad: bool = False) -> FrameBatch:
+        """Pop exactly ``microbatch`` rows (splitting an oversized group back
+        onto the queue); with ``pad`` a short tail is zero-filled."""
+        q = self._queues[bucket]
+        items, idxs, rows = [], [], 0
+        while q and rows < self.microbatch:
+            t, ix = q.pop(0)
+            need = self.microbatch - rows
+            if t.shape[0] > need:
+                q.insert(0, (t[need:], ix[need:]))
+                t, ix = t[:need], ix[:need]
+            items.append(t)
+            idxs.extend(ix)
+            rows += t.shape[0]
+        if not q:
+            self._queues.pop(bucket)
+        n_real = rows
+        if pad and rows < self.microbatch:
+            items.append(jnp.zeros((self.microbatch - rows,)
+                                   + items[0].shape[1:], items[0].dtype))
+        toks = items[0] if len(items) == 1 else jnp.concatenate(items, axis=0)
+        self.flushes += 1
+        return FrameBatch(bucket, toks, idxs, n_real)
+
+    def drain(self) -> list[FrameBatch]:
+        """Flush every partial queue (zero-padded to the micro-batch size)."""
+        return [self._take(k, pad=True) for k in sorted(self._queues)]
+
+    @property
+    def pending(self) -> int:
+        return sum(self._rows(k) for k in self._queues)

@@ -1,0 +1,85 @@
+"""Bucketed-pruning parity: for every bucket size k, ``forward_vit_tokens``
+on top-k-gathered tokens must match mask-mode dense logits with the same k
+patches kept — per backend, including the Pallas kernel in interpret mode.
+
+Why this must hold: LayerNorm and the FFN are per-token, so attention is the
+only cross-token operator in the trunk; the key-axis mask assigns dropped
+tokens exactly-zero probability weight, making every kept token's activation
+independent of whether dropped tokens are physically present. Float paths
+therefore agree to reassociation noise. Quantizing backends agree only to
+quantization noise: the per-tensor activation absmax is taken over a
+different token set in the two modes (dropped rows still flow through the
+masked forward), so the scales — and hence the int8 codes — can differ.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import smoke_variant
+from repro.configs.opto_vit import get_config
+from repro.core.backend import prepare_params
+from repro.core.mgnet import select_topk_patches
+from repro.models.vit import (embed_patches, forward_vit_masked,
+                              forward_vit_tokens, init_vit)
+from repro.serving.buckets import BucketLadder
+
+N_PATCHES = 16
+LADDER = BucketLadder.from_fractions(N_PATCHES)          # (4, 8, 12, 16)
+
+
+@pytest.fixture(scope="module")
+def base_cfg():
+    return smoke_variant(get_config("tiny")).with_(n_layers=2)
+
+
+@pytest.fixture(scope="module")
+def params(base_cfg):
+    return init_vit(jax.random.PRNGKey(1), base_cfg, n_classes=8)
+
+
+@pytest.fixture(scope="module")
+def images():
+    return jax.random.normal(jax.random.PRNGKey(0), (2, 32, 32, 3))
+
+
+@pytest.fixture(scope="module")
+def scores():
+    # includes exact ties so routing hits the deterministic tie-break
+    s = jax.random.normal(jax.random.PRNGKey(2), (2, N_PATCHES))
+    return s.at[:, 5].set(s[:, 3])
+
+
+def _mask_from_idx(idx, n):
+    b = idx.shape[0]
+    return jnp.zeros((b, n)).at[jnp.arange(b)[:, None], idx].set(1.0)
+
+
+@pytest.mark.parametrize("backend", ["bf16", "qat", "photonic_sim",
+                                     "photonic_pallas"])
+@pytest.mark.parametrize("k", LADDER.sizes)
+def test_gathered_topk_matches_masked_dense(base_cfg, params, images, scores,
+                                            backend, k):
+    cfg = base_cfg.with_(matmul_backend=backend,
+                         quant_bits=0 if backend == "bf16" else 8)
+    p = (prepare_params(params, bits=8)
+         if backend.startswith("photonic") else params)
+
+    toks = embed_patches(p, images, cfg)
+    pruned, idx = select_topk_patches(scores, toks, k)
+    lg_topk, kept = forward_vit_tokens(p, pruned, cfg)
+    assert kept == k
+    lg_mask, _ = forward_vit_masked(p, images, _mask_from_idx(idx, N_PATCHES),
+                                    cfg)
+
+    a, b = np.asarray(lg_topk, np.float32), np.asarray(lg_mask, np.float32)
+    if backend == "bf16" or k == N_PATCHES:
+        # float path (or all-ones mask, where both modes quantize the same
+        # token set): reassociation noise only
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    else:
+        # w8a8 paths: per-tensor activation scales differ between the two
+        # token sets -> agreement up to 8-bit quantization noise
+        assert np.corrcoef(a.ravel(), b.ravel())[0, 1] > 0.999
+        np.testing.assert_allclose(a, b, rtol=0.35, atol=0.35)

@@ -53,6 +53,49 @@ def test_topk_selects_highest(cfg):
     assert set(np.asarray(idx[0]).tolist()) == {1, 3}
 
 
+def test_topk_tiebreak_deterministic():
+    """Equal scores must resolve to the *lowest patch index* — stable,
+    backend-independent routing for the serving bucket ladder."""
+    scores = jnp.asarray([[0.5, 0.9, 0.5, 0.5, 0.1]])
+    tokens = jnp.arange(5, dtype=jnp.float32)[None, :, None]
+    _, idx = select_topk_patches(scores, tokens, keep=3)
+    np.testing.assert_array_equal(np.asarray(idx), [[1, 0, 2]])
+    # jit and eager agree, and repeated calls are bit-identical
+    jidx = jax.jit(lambda s, t: select_topk_patches(s, t, 3)[1])(scores,
+                                                                 tokens)
+    np.testing.assert_array_equal(np.asarray(jidx), np.asarray(idx))
+    for _ in range(3):
+        _, again = select_topk_patches(scores, tokens, keep=3)
+        np.testing.assert_array_equal(np.asarray(again), np.asarray(idx))
+
+
+def test_topk_all_equal_scores_keeps_prefix():
+    scores = jnp.zeros((2, 6))
+    tokens = jnp.broadcast_to(jnp.arange(6, dtype=jnp.float32)[None, :, None],
+                              (2, 6, 1))
+    pruned, idx = select_topk_patches(scores, tokens, keep=4)
+    np.testing.assert_array_equal(np.asarray(idx), [[0, 1, 2, 3]] * 2)
+    np.testing.assert_array_equal(np.asarray(pruned[..., 0]),
+                                  [[0, 1, 2, 3]] * 2)
+
+
+def test_mask_budget_counts_threshold_crossers():
+    from repro.core.mgnet import mask_budget
+    scores = jnp.asarray([[10.0, -10.0, 10.0, -10.0],
+                          [10.0, 10.0, 10.0, 10.0]])
+    np.testing.assert_array_equal(np.asarray(mask_budget(scores, 0.5)),
+                                  [2, 4])
+
+
+def test_frame_delta_signal():
+    from repro.core.mgnet import frame_delta
+    a = jnp.zeros((2, 8, 8, 3))
+    b = a.at[1].add(1.0)
+    d = frame_delta(b, jnp.zeros((8, 8, 3)))
+    assert float(d[0]) == pytest.approx(0.0)
+    assert float(d[1]) == pytest.approx(1.0)
+
+
 def test_mask_iou_properties():
     a = jnp.asarray([[1.0, 1, 0, 0]])
     assert float(mask_iou(a, a)) == pytest.approx(1.0)

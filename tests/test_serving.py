@@ -1,0 +1,334 @@
+"""Serving subsystem tests: bucket ladder, temporal mask cache, micro-batch
+scheduler, stream accounting, VideoStream determinism, and the engine end to
+end (incl. the Pallas serving path in interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import smoke_variant
+from repro.configs.opto_vit import get_config
+from repro.core.energy import EnergyReport, aggregate_reports
+from repro.data.pipeline import VideoStream, prefetch_to_device
+from repro.serving.accounting import StreamAccounting
+from repro.serving.buckets import BucketHistogram, BucketLadder
+from repro.serving.engine import ServingConfig, ServingEngine
+from repro.serving.mask_cache import TemporalMaskCache
+from repro.serving.scheduler import MicroBatcher
+
+
+# --------------------------------------------------------------------------
+# bucket ladder
+# --------------------------------------------------------------------------
+
+def test_ladder_from_fractions():
+    lad = BucketLadder.from_fractions(36, (0.25, 0.5, 0.75, 1.0))
+    assert lad.sizes == (9, 18, 27, 36)
+    assert lad.cap == 36
+
+
+def test_ladder_routes_to_smallest_covering_bucket():
+    lad = BucketLadder((9, 18, 27, 36))
+    assert lad.route(0) == 9
+    assert lad.route(9) == 9
+    assert lad.route(10) == 18
+    assert lad.route(28) == 36
+    assert lad.route(99) == 36          # over-budget clips to the cap
+    np.testing.assert_array_equal(
+        lad.route_many([0, 9, 10, 28, 99]), [9, 9, 18, 36, 36])
+
+
+def test_ladder_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        BucketLadder(())
+    with pytest.raises(ValueError):
+        BucketLadder((9, 9, 18))
+    with pytest.raises(ValueError):
+        BucketLadder((18, 9))
+
+
+def test_histogram_counts():
+    lad = BucketLadder((4, 8))
+    h = BucketHistogram(lad)
+    h.add(4)
+    h.add(8, 3)
+    assert h.as_dict() == {4: 1, 8: 3}
+    assert h.total == 4
+
+
+# --------------------------------------------------------------------------
+# temporal mask cache
+# --------------------------------------------------------------------------
+
+def _static_frames(n, h=8, val=0.0):
+    return np.full((n, h, h, 3), val, np.float32)
+
+
+def test_mask_cache_reuses_on_static_scene():
+    cache = TemporalMaskCache(refresh=100, delta_threshold=0.5)
+    calls = []
+
+    def score_fn(f):
+        calls.append(f.shape[0])
+        return np.zeros((f.shape[0], 4), np.float32)
+
+    scores, n = cache.gate(_static_frames(6), np.arange(6), score_fn)
+    assert scores.shape == (6, 4)
+    assert n == 1                        # only the very first frame scored
+    assert cache.reused_frames == 5
+    # identical follow-up chunk: full reuse, no scoring call at all
+    _, n2 = cache.gate(_static_frames(6), np.arange(6, 12), score_fn)
+    assert n2 == 0
+    assert cache.reuse_rate == pytest.approx(11 / 12)
+
+
+def test_mask_cache_refresh_period_bounds_staleness():
+    cache = TemporalMaskCache(refresh=4, delta_threshold=1e9)
+    scored = []
+
+    def score_fn(f):
+        scored.append(f.shape[0])
+        return np.zeros((f.shape[0], 4), np.float32)
+
+    _, n = cache.gate(_static_frames(8), np.arange(8), score_fn)
+    assert n == 2                        # frames 0 and 4 (every 4th)
+
+
+def test_mask_cache_delta_trigger_fires_on_scene_change():
+    cache = TemporalMaskCache(refresh=1000, delta_threshold=0.3)
+
+    def score_fn(f):
+        # score = per-frame mean brightness, so the output tells us which
+        # frame each returned score row came from
+        per_frame = f.mean(axis=(1, 2, 3)).astype(np.float32)
+        return np.repeat(per_frame[:, None], 4, axis=1)
+
+    frames = _static_frames(6)
+    frames[3:] = 1.0                     # scene cut at frame 3
+    scores, n = cache.gate(frames, np.arange(6), score_fn)
+    assert n == 2                        # frame 0 + the cut frame
+    assert scores[2].mean() == pytest.approx(0.0)
+    assert scores[3].mean() == pytest.approx(1.0)
+    assert scores[5].mean() == pytest.approx(1.0)   # reused post-cut mask
+
+
+def test_mask_cache_static_score_shape():
+    """score_fn must always see the full chunk shape (jit-retrace guard)."""
+    cache = TemporalMaskCache(refresh=4, delta_threshold=1e9)
+    shapes = set()
+
+    def score_fn(f):
+        shapes.add(f.shape)
+        return np.zeros((f.shape[0], 4), np.float32)
+
+    for c in range(4):
+        cache.gate(_static_frames(8), np.arange(8 * c, 8 * c + 8), score_fn)
+    assert shapes == {(8, 8, 8, 3)}
+
+
+# --------------------------------------------------------------------------
+# micro-batch scheduler
+# --------------------------------------------------------------------------
+
+def test_microbatcher_flushes_at_capacity():
+    mb = MicroBatcher(microbatch=4)
+    toks = jnp.arange(4 * 2 * 3, dtype=jnp.float32).reshape(4, 2, 3)
+    assert mb.push_many(8, toks[:3], [0, 1, 2]) == []
+    assert mb.pending == 3
+    out = mb.push_many(8, toks[3:], [3])
+    assert len(out) == 1
+    fb = out[0]
+    assert fb.bucket == 8 and fb.n_real == 4 and fb.frame_idx == [0, 1, 2, 3]
+    np.testing.assert_array_equal(np.asarray(fb.tokens), np.asarray(toks))
+    assert mb.pending == 0
+
+
+def test_microbatcher_splits_oversized_groups():
+    mb = MicroBatcher(microbatch=2)
+    toks = jnp.arange(5 * 1 * 1, dtype=jnp.float32).reshape(5, 1, 1)
+    out = mb.push_many(4, toks, [0, 1, 2, 3, 4])
+    assert [f.frame_idx for f in out] == [[0, 1], [2, 3]]
+    assert mb.pending == 1
+    (tail,) = mb.drain()
+    assert tail.frame_idx == [4] and tail.n_real == 1
+    assert tail.tokens.shape == (2, 1, 1)            # zero-padded to mb
+    assert float(tail.tokens[1].sum()) == 0.0
+
+
+def test_microbatcher_keeps_buckets_separate():
+    mb = MicroBatcher(microbatch=2)
+    a = jnp.ones((1, 2, 2))
+    b = jnp.ones((1, 4, 2))
+    assert mb.push(2, a[0], 0) == []
+    assert mb.push(4, b[0], 1) == []
+    out = mb.push(2, a[0], 2)
+    assert len(out) == 1 and out[0].bucket == 2
+    assert mb.pending == 1               # bucket-4 frame still queued
+
+
+# --------------------------------------------------------------------------
+# accounting
+# --------------------------------------------------------------------------
+
+def test_energy_report_aggregation():
+    a = EnergyReport(adc_uj=1.0, optical_us=2.0)
+    b = EnergyReport(adc_uj=3.0, dac_uj=1.0)
+    s = aggregate_reports([a, b])
+    assert s.adc_uj == pytest.approx(4.0)
+    assert s.dac_uj == pytest.approx(1.0)
+    assert s.optical_us == pytest.approx(2.0)
+    half = s.scaled(0.5)
+    assert half.adc_uj == pytest.approx(2.0)
+    a += b
+    assert a.adc_uj == pytest.approx(4.0)
+
+
+def test_stream_accounting_tracks_buckets_and_mgnet():
+    cfg = get_config("tiny", img_size=96, mgnet=True)
+    acct = StreamAccounting(cfg)
+    acct.add_encode(18, 4)
+    acct.add_mgnet(2)
+    assert acct.frames == 4 and acct.scored_frames == 2
+    e_small = acct.mean_frame.total_uj
+    dense = StreamAccounting(cfg)
+    dense.add_encode(36, 4)
+    dense.add_mgnet(2)
+    # fewer kept patches -> strictly less energy -> more KFPS/W
+    assert e_small < dense.mean_frame.total_uj
+    assert acct.kfps_per_watt > dense.kfps_per_watt
+    # a gated stream must beat its own dense baseline
+    assert acct.kfps_per_watt > acct.dense_baseline_kfps_per_watt()
+
+
+# --------------------------------------------------------------------------
+# video stream
+# --------------------------------------------------------------------------
+
+def test_video_stream_deterministic_and_coherent():
+    vs = VideoStream(img_size=32, patch=8, seed=0, cut_every=8)
+    a = vs.frames_at(0, 12)
+    b = vs.frames_at(4, 4)
+    np.testing.assert_array_equal(np.asarray(a["frames"][4:8]),
+                                  np.asarray(b["frames"]))
+    assert a["patch_mask"].shape == (12, 16)
+    assert float(a["patch_mask"].sum(-1).min()) >= 1.0   # box always visible
+    # consecutive frames are closer than frames across a scene cut
+    f = np.asarray(a["frames"])
+    d_in = np.abs(f[1] - f[0]).mean()
+    d_cut = np.abs(f[8] - f[7]).mean()
+    assert d_in < d_cut
+
+
+def test_prefetch_preserves_order():
+    vs = VideoStream(img_size=16, patch=8, seed=1)
+    it = prefetch_to_device(vs.chunks(2), depth=3)
+    seen = [int(next(it)["frame_idx"][0]) for _ in range(4)]
+    assert seen == [0, 2, 4, 6]
+
+
+# --------------------------------------------------------------------------
+# engine end to end
+# --------------------------------------------------------------------------
+
+def _smoke_engine(backend: str, **serve_kw) -> ServingEngine:
+    cfg = smoke_variant(get_config("tiny")).with_(
+        mgnet=True, mgnet_embed=32, mgnet_heads=2, matmul_backend=backend)
+    sc = ServingConfig(microbatch=4, chunk=8, mask_refresh=8, **serve_kw)
+    return ServingEngine(cfg, sc, n_classes=8, seed=0)
+
+
+def test_engine_streams_end_to_end():
+    eng = _smoke_engine("photonic_sim")
+    stream = VideoStream(img_size=32, patch=8, cut_every=16)
+    res = eng.run(stream, n_frames=32)
+    assert res.frames >= 32
+    assert sorted(res.predictions) == list(range(res.frames))
+    assert sum(res.bucket_hits.values()) == res.frames
+    assert 0 < res.scored_frames < res.frames        # mask reuse happened
+    assert res.kfps_per_watt > 0 and res.mean_frame_uj > 0
+    assert res.fps > 0
+
+
+def test_engine_is_deterministic_across_runs():
+    stream = VideoStream(img_size=32, patch=8, cut_every=16)
+    r1 = _smoke_engine("photonic_sim").run(stream, n_frames=24)
+    r2 = _smoke_engine("photonic_sim").run(stream, n_frames=24)
+    assert r1.predictions == r2.predictions
+    assert r1.bucket_hits == r2.bucket_hits
+    assert r1.scored_frames == r2.scored_frames
+
+
+def test_engine_pallas_serving_path():
+    """The acceptance path: streaming on the int8 Pallas kernel backend."""
+    eng = _smoke_engine("photonic_pallas")
+    stream = VideoStream(img_size=32, patch=8, cut_every=16)
+    res = eng.run(stream, n_frames=16)
+    assert res.frames >= 16
+    assert sorted(res.predictions) == list(range(res.frames))
+
+
+def test_engine_force_bucket_pins_routing():
+    eng = _smoke_engine("bf16", force_bucket=0.5)
+    stream = VideoStream(img_size=32, patch=8, cut_every=16)
+    res = eng.run(stream, n_frames=16)
+    n = eng.n_patches
+    pinned = eng.ladder.route(n // 2)
+    assert res.bucket_hits[pinned] == res.frames
+    assert all(v == 0 for k, v in res.bucket_hits.items() if k != pinned)
+
+
+def test_engine_dense_baseline_covers_stream():
+    """The mask-mode dense path serves the same frames with the same gating
+    stats, at strictly higher modeled energy per frame (compute not
+    reduced). Logit-level agreement between the two paths is the bucketed-
+    pruning parity contract — tests/test_bucket_parity.py."""
+    eng = _smoke_engine("bf16")
+    stream = VideoStream(img_size=32, patch=8, cut_every=16)
+    res_b = eng.run(stream, n_frames=16)
+    res_d = eng.run_dense(stream, n_frames=16)
+    assert res_b.frames == res_d.frames
+    assert sorted(res_b.predictions) == sorted(res_d.predictions)  # coverage
+    assert res_b.scored_frames == res_d.scored_frames  # identical gating
+    assert res_b.mean_frame_uj < res_d.mean_frame_uj
+
+
+def test_engine_serves_exact_frame_count():
+    """n_frames that is not a chunk multiple: trailing frames of the last
+    ingest chunk are gated but never routed, encoded or accounted."""
+    eng = _smoke_engine("bf16")
+    stream = VideoStream(img_size=32, patch=8, cut_every=16)
+    res = eng.run(stream, n_frames=13)          # chunk=8 -> partial tail
+    assert res.frames == 13
+    assert sorted(res.predictions) == list(range(13))
+    assert sum(res.bucket_hits.values()) == 13
+    d = eng.run_dense(stream, n_frames=13)
+    assert d.frames == 13
+    assert sorted(d.predictions) == list(range(13))
+    # trailing frames of the last chunk must not be scored or accounted:
+    # a 1-frame run can have scored at most that one frame
+    one = _smoke_engine("bf16").run(stream, n_frames=1)
+    assert one.frames == 1
+    assert one.scored_frames == 1 and one.reused_frames == 0
+
+
+def test_engine_gather_matches_select_topk():
+    """The engine's shared-order gather must select exactly what the public
+    select_topk_patches API selects, for every ladder bucket."""
+    from repro.core.mgnet import select_topk_patches
+    from repro.serving.engine import _gather_topk_rows
+    scores = jax.random.normal(jax.random.PRNGKey(0), (3, 16))
+    scores = scores.at[:, 7].set(scores[:, 2])       # exact tie
+    toks = jax.random.normal(jax.random.PRNGKey(1), (3, 16, 5))
+    order = jnp.argsort(scores, axis=-1, stable=True, descending=True)
+    for k in (4, 8, 12, 16):
+        via_engine = _gather_topk_rows(toks, order, k)
+        via_api, _ = select_topk_patches(scores, toks, k)
+        np.testing.assert_array_equal(np.asarray(via_engine),
+                                      np.asarray(via_api))
+
+
+def test_engine_requires_mgnet():
+    cfg = smoke_variant(get_config("tiny"))          # mgnet=False
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, ServingConfig())
