@@ -1,0 +1,150 @@
+"""Fused RoI-masked attention benchmark (the serving hot path's score core).
+
+forward_vit_masked applies the RoI mask *post hoc*: XLA computes the full
+(Sq, Skv) score matrix and then bias-masks pruned keys — every pruned patch
+still costs its score FLOPs. The fused masked attention op
+(kernels/flash_attention.py) moves the mask inside the streaming-softmax
+update and skips fully-pruned KV blocks, so pruned patches cost nothing:
+``pl.when`` on TPU, static packed-skip slicing in the XLA lowering the CPU
+host runs (the bucketed serving layout — kept keys are a prefix of the
+shared score order, bucket sizes static by construction).
+
+Both paths are the *registered* attention backends, timed exactly as
+``core.backend.attend`` dispatches them — "xla" with the packed prefix as
+a key mask (post hoc) vs "flash" with the static kept-count (packed skip,
+the one-shape serving mode `repro.serving.engine --one-shape` routes
+through per bucket).
+
+Gate (tiny-224, 50% skip, batch = one serving micro-batch): the fused
+masked backend must be >= 1.3x the materialized xla backend, wall clock.
+Also recorded (no gate): the scattered-mask fused path and the Pallas
+kernel under interpret mode — the latter is a correctness emulator, so its
+number documents *why* the CPU lowering exists, not a perf claim.
+
+Results merge into BENCH_serving.json under "attention", next to the
+serving engine numbers they share a hot path with.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.opto_vit import get_config
+from repro.core.backend import ExecPolicy, attend
+from repro.kernels.flash_attention import flash_attention_masked
+
+TRIALS = 9
+BATCH = 16                      # serving_bench's tiny-224 micro-batch
+SKIP = 0.5
+SPEEDUP_GATE = 1.3
+OUT_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+
+
+def _interleaved_best(fns) -> list[float]:
+    """Best-of-TRIALS wall per function, trials interleaved round-robin so
+    transient host load (shared CI runners) penalizes every path equally
+    instead of whichever one it happened to land on."""
+    for fn, args in fns:
+        fn(*args).block_until_ready()      # compile + warm
+    best = [math.inf] * len(fns)
+    for _ in range(TRIALS):
+        for i, (fn, args) in enumerate(fns):
+            t0 = time.perf_counter()
+            fn(*args).block_until_ready()
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
+
+
+_XLA = ExecPolicy()                          # attn_backend "" -> "xla"
+_FLASH = ExecPolicy(attn_backend="flash")
+
+
+def run() -> dict:
+    print("\n== fused RoI-masked attention vs post-hoc XLA masking ==")
+    cfg = get_config("tiny", img_size=224)
+    n_tokens = (cfg.img_size // cfg.patch) ** 2 + 1          # 197 incl [cls]
+    heads, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    kept = int(round((1.0 - SKIP) * n_tokens))
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (BATCH, heads, n_tokens, dh))
+    k = jax.random.normal(ks[1], (BATCH, heads, n_tokens, dh))
+    v = jax.random.normal(ks[2], (BATCH, heads, n_tokens, dh))
+    # serving layout: kept keys are the prefix of the shared score order
+    packed = jnp.broadcast_to(
+        (jnp.arange(n_tokens) < kept).astype(jnp.float32)[None],
+        (BATCH, n_tokens))
+    # scattered RoI (mask-mode dense baseline shape of the same skip rate)
+    scattered = (jax.random.uniform(ks[3], (BATCH, n_tokens))
+                 < 1.0 - SKIP).astype(jnp.float32).at[:, 0].set(1.0)
+
+    xla = jax.jit(lambda q, k, v, m: attend(q, k, v, _XLA, mask=m))
+    fused_packed = jax.jit(
+        lambda q, k, v: attend(q, k, v, _FLASH, kv_len=kept))
+    fused_scat = jax.jit(
+        lambda q, k, v, m: attend(q, k, v, _FLASH, mask=m))
+
+    # numerics first: fused == post-hoc masked reference, documented tols
+    np.testing.assert_allclose(
+        np.asarray(fused_packed(q, k, v)), np.asarray(xla(q, k, v, packed)),
+        rtol=2e-4, atol=2e-4,
+        err_msg="fused packed-skip attention drifted off the masked oracle")
+    np.testing.assert_allclose(
+        np.asarray(fused_scat(q, k, v, scattered)),
+        np.asarray(xla(q, k, v, scattered)), rtol=2e-4, atol=2e-4)
+
+    t_xla, t_fused, t_scat = _interleaved_best([
+        (xla, (q, k, v, packed)),
+        (fused_packed, (q, k, v)),
+        (fused_scat, (q, k, v, scattered)),
+    ])
+    speedup = t_xla / t_fused
+    print(f"  tiny-224, {SKIP:.0%} skip, batch {BATCH}: "
+          f"XLA masked {t_xla * 1e3:7.2f} ms | fused packed "
+          f"{t_fused * 1e3:7.2f} ms -> {speedup:.2f}x")
+    print(f"  fused scattered mask: {t_scat * 1e3:7.2f} ms "
+          f"({t_xla / t_scat:.2f}x; block skip needs the packed layout)")
+
+    # the TPU kernel through the interpret emulator — correctness-only
+    kern = jax.jit(lambda q, k, v: flash_attention_masked(
+        q, k, v, kv_len=kept, bq=256, bkv=128, interpret=True))
+    np.testing.assert_allclose(np.asarray(kern(q, k, v)),
+                               np.asarray(xla(q, k, v, packed)),
+                               rtol=2e-4, atol=2e-4)
+    (t_kern,) = _interleaved_best([(kern, (q, k, v))])
+    print(f"  pallas kernel (interpret emulator, not a perf path): "
+          f"{t_kern * 1e3:7.2f} ms")
+
+    payload = {
+        "config": "tiny-224", "batch": BATCH, "skip": SKIP,
+        "n_tokens": n_tokens, "kept": kept,
+        "xla_masked_ms": t_xla * 1e3,
+        "fused_packed_ms": t_fused * 1e3,
+        "fused_scattered_ms": t_scat * 1e3,
+        "pallas_interpret_ms": t_kern * 1e3,
+        "speedup": speedup,
+    }
+    merged = {}
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            merged = json.load(f)
+    merged["attention"] = payload
+    with open(OUT_JSON, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"  wrote {OUT_JSON} [attention]")
+
+    assert speedup >= SPEEDUP_GATE, (
+        f"fused RoI-masked attention must beat post-hoc XLA masking by "
+        f">= {SPEEDUP_GATE}x at {SKIP:.0%} skip; measured {speedup:.2f}x")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -12,9 +12,9 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (bench_backend_cache, fig8_energy, fig9_latency,
-                        fig10_11_mgnet, roofline_table, serving_bench,
-                        table1_qat, table4_kfps)
+from benchmarks import (attention_bench, bench_backend_cache, fig8_energy,
+                        fig9_latency, fig10_11_mgnet, roofline_table,
+                        serving_bench, table1_qat, table4_kfps)
 
 ALL = {
     "fig8": fig8_energy.run,
@@ -25,6 +25,7 @@ ALL = {
     "roofline": roofline_table.run,
     "cache": bench_backend_cache.run,
     "serving": serving_bench.run,
+    "attention": attention_bench.run,
 }
 
 

@@ -79,7 +79,11 @@ def run() -> dict:
           f"vs {dense.mean_frame_uj:.2f} dense "
           f"({bucketed.kfps_per_watt:.1f} vs {dense.kfps_per_watt:.1f} KFPS/W)")
 
-    payload = {
+    payload = {}
+    if os.path.exists(OUT_JSON):           # merge: attention_bench shares
+        with open(OUT_JSON) as f:          # this file ("attention" key)
+            payload = json.load(f)
+    payload |= {
         "natural": {
             "config": "tiny-96", "frames": nat.frames, "fps": nat.fps,
             "kfps_per_watt": nat.kfps_per_watt,

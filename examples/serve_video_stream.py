@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--frames", type=int, default=128)
     ap.add_argument("--backend", default="photonic_sim",
                     help=f"matmul backend: {', '.join(available_backends())}")
+    ap.add_argument("--attn-backend", default="",
+                    choices=["", "xla", "flash"],
+                    help="attention core: xla (default) or the fused "
+                         "RoI-masked flash dataflow")
     ap.add_argument("--mask-refresh", type=int, default=16)
     ap.add_argument("--cut-every", type=int, default=48)
     args = ap.parse_args()
@@ -42,7 +46,7 @@ def main():
 
     cfg = smoke_variant(get_config("tiny")).with_(
         mgnet=True, mgnet_embed=32, mgnet_heads=2,
-        matmul_backend=args.backend)
+        matmul_backend=args.backend, attn_backend=args.attn_backend)
     serve_cfg = ServingConfig(bucket_fractions=(0.25, 0.5, 0.75, 1.0),
                               microbatch=4, chunk=8,
                               mask_refresh=args.mask_refresh)

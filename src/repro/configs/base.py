@@ -92,6 +92,10 @@ class ArchConfig:
     #                                      | photonic_pallas (core/backend.py)
     pallas_interpret: bool = True        # run Pallas kernels in interpreter
     #                                      mode (CPU hosts); False on TPU
+    attn_backend: str = ""               # attention-core dispatch: "" -> xla
+    #                                      (materialized scores) | flash
+    #                                      (fused RoI-masked Pallas kernel,
+    #                                      core/backend.py ATTN_BACKENDS)
 
     # perf-hillclimb knobs (EXPERIMENTS.md §Perf; all default to the
     # paper-faithful baseline behaviour)

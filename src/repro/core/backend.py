@@ -26,10 +26,26 @@ This module is the software analogue of that design point:
     quantization + integer matmul + dequant.
 
 ``linear`` is the single entry point every model matmul funnels through.
+
+Attention has its own (smaller) registry: the score-softmax-PV core of
+every MHSA dataflow funnels through ``attend``, dispatching between
+
+    xla     materialized (Sq, Skv) scores + additive key-mask bias +
+            jax.nn.softmax — the reference dataflow
+    flash   fused RoI-masked streaming-softmax flash attention
+            (kernels/flash_attention.py): pruned KV blocks are skipped, so
+            masked patches cost zero score FLOPs on the serving hot path.
+            Lowers to the Pallas kernel on TPU and to the XLA twin with
+            static packed-skip on CPU hosts (``ExecPolicy.interpret``)
+
+selected by ``ExecPolicy.attn_backend`` (ArchConfig.attn_backend). The two
+backends agree to streaming-softmax reassociation noise (enforced per
+dataflow by tests/test_differential.py).
 """
 
 from __future__ import annotations
 
+import math
 from typing import Callable
 
 import jax
@@ -45,8 +61,12 @@ __all__ = [
     "register_backend",
     "get_backend",
     "available_backends",
+    "register_attention_backend",
+    "get_attention_backend",
+    "available_attention_backends",
     "matmul",
     "linear",
+    "attend",
     "int_accumulate_exact",
     "int_accumulate_sim",
     "int_accumulate_pallas",
@@ -61,22 +81,25 @@ class ExecPolicy:
 
     ``backend`` names a registry entry explicitly; when empty the legacy
     flags resolve it: photonic -> photonic_sim, quant_bits -> qat, else bf16.
+    ``attn_backend`` names an attention-core registry entry ("" -> xla).
     ``interpret`` runs Pallas kernels in interpreter mode (CPU hosts); set
     False on a real TPU deployment.
     """
 
     __slots__ = ("quant_bits", "photonic", "training", "dot_out_native",
-                 "backend", "interpret")
+                 "backend", "interpret", "attn_backend")
 
     def __init__(self, quant_bits: int = 0, photonic: bool = False,
                  training: bool = True, dot_out_native: bool = False,
-                 backend: str = "", interpret: bool = True):
+                 backend: str = "", interpret: bool = True,
+                 attn_backend: str = ""):
         self.quant_bits = quant_bits
         self.photonic = photonic
         self.training = training
         self.dot_out_native = dot_out_native
         self.backend = backend
         self.interpret = interpret
+        self.attn_backend = attn_backend
 
     @staticmethod
     def from_cfg(cfg, training: bool = True) -> "ExecPolicy":
@@ -84,7 +107,8 @@ class ExecPolicy:
                           getattr(cfg, "photonic", False), training,
                           getattr(cfg, "dot_out_native", False),
                           getattr(cfg, "matmul_backend", "") or "",
-                          getattr(cfg, "pallas_interpret", True))
+                          getattr(cfg, "pallas_interpret", True),
+                          getattr(cfg, "attn_backend", "") or "")
 
     def resolve_backend(self) -> str:
         if self.backend:
@@ -95,11 +119,15 @@ class ExecPolicy:
             return "qat"
         return "bf16"
 
+    def resolve_attn_backend(self) -> str:
+        return self.attn_backend or "xla"
+
     def is_photonic(self) -> bool:
         return self.resolve_backend().startswith("photonic")
 
     def __repr__(self):
         return (f"ExecPolicy(backend={self.resolve_backend()!r}, "
+                f"attn={self.resolve_attn_backend()!r}, "
                 f"bits={self.quant_bits}, training={self.training})")
 
 
@@ -402,3 +430,112 @@ def linear(x: jnp.ndarray, w, b: jnp.ndarray | None = None,
     if b is not None:
         y = y + b
     return y
+
+
+# --------------------------------------------------------------------------
+# attention-core registry (score -> softmax -> PV under one dispatch point)
+# --------------------------------------------------------------------------
+
+ATTN_BACKENDS: dict[str, Callable] = {}
+
+
+def register_attention_backend(name: str):
+    def deco(fn):
+        ATTN_BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def get_attention_backend(name: str) -> Callable:
+    try:
+        return ATTN_BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown attention backend {name!r}; "
+                       f"available: {available_attention_backends()}") from None
+
+
+def available_attention_backends() -> tuple[str, ...]:
+    return tuple(sorted(ATTN_BACKENDS))
+
+
+@register_attention_backend("xla")
+def _attend_xla(q, k, v, p: ExecPolicy, mask, kv_len, scale):
+    """Materialized-score reference dataflow: the full (Sq, Skv) score
+    matrix is computed, masked keys get a large negative additive bias
+    (softmax assigns them exactly-zero weight — the serving parity
+    contract), then softmax @ V. Runs in the operands' dtype, exactly the
+    pre-registry mhsa numerics. A packed ``kv_len`` is expressed as a
+    prefix mask — this backend is the post-hoc reference, it never skips."""
+    from repro.kernels.ref import (expand_kv_heads,   # pure jnp, no pallas
+                                   prefix_key_mask)
+
+    h = q.shape[-3]
+    if kv_len is not None:
+        mask = prefix_key_mask(kv_len, 1, k.shape[-2])[0]
+    s = (q @ jnp.swapaxes(expand_kv_heads(k, h), -1, -2)) * scale
+    if mask is not None:
+        s = s + ((mask.astype(jnp.float32) - 1.0) * 1e9
+                 ).astype(s.dtype)[..., None, None, :]
+    probs = jax.nn.softmax(s, axis=-1)
+    o = probs @ expand_kv_heads(v, h)
+    if mask is not None:
+        # rows with zero live keys output exactly 0, not the uniform
+        # average softmax degenerates to — the flash/oracle contract
+        o = o * (mask.sum(-1) > 0)[..., None, None, None].astype(o.dtype)
+    return o
+
+
+@register_attention_backend("flash")
+def _attend_flash(q, k, v, p: ExecPolicy, mask, kv_len, scale):
+    """Fused RoI-masked flash dataflow: streaming softmax in VMEM, masked
+    keys applied inside the update, fully-pruned KV blocks skipped — on
+    TPU (``interpret=False``) the Pallas kernel; on CPU hosts the XLA
+    lowering of the same contract (kernels/flash_attention.py). A static
+    ``kv_len`` takes the packed-skip path: the dead KV tail costs zero
+    score FLOPs."""
+    from repro.kernels.flash_attention import fused_masked_attention
+
+    lead = q.shape[:-3]
+    b = 1
+    for n in lead:
+        b *= n
+    h, sq, d = q.shape[-3:]
+    qf = q.reshape(b, h, sq, d)
+    kf = k.reshape((b,) + k.shape[-3:])
+    vf = v.reshape((b,) + v.shape[-3:])
+    mf = None
+    if mask is not None:
+        # accept the same lead-dim-elided masks the xla backend broadcasts
+        mf = jnp.broadcast_to(mask, lead + mask.shape[-1:]).reshape(
+            b, mask.shape[-1])
+    out = fused_masked_attention(qf, kf, vf, mf, kv_len=kv_len, scale=scale,
+                                 interpret=p.interpret)
+    return out.reshape(*lead, h, sq, vf.shape[-1])
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           policy: ExecPolicy | None = None, *,
+           mask: jnp.ndarray | None = None,
+           kv_len: int | None = None,
+           scale: float | None = None) -> jnp.ndarray:
+    """softmax(q @ k^T * scale + key-mask bias) @ v under the active policy.
+
+    q (..., H, Sq, D); k (..., Hk, Skv, D); v (..., Hv, Skv, Dv) ->
+    (..., H, Sq, Dv); H a multiple of Hk and Hv. ``mask`` (..., Skv) is a
+    {0,1} keep-mask on the key axis (RoI mask mode); ``kv_len`` is the
+    packed alternative (key j kept iff j < kv_len — the one-shape serving
+    layout; a static int lets the flash backend drop the dead tail before
+    any score FLOP). Give at most one. ``scale`` defaults to 1/sqrt(D) —
+    pass 1.0 when it is already folded into q (Eq. 2). The score and PV
+    products are activation-activation matmuls (dynamically tuned cores on
+    the photonic hardware), so they stay float on every matmul backend;
+    only *which dataflow computes them* is dispatched here.
+    """
+    p = policy or _DEFAULT
+    if mask is not None and kv_len is not None:
+        raise ValueError("give mask or kv_len, not both")
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    return get_attention_backend(p.resolve_attn_backend())(q, k, v, p,
+                                                           mask, kv_len,
+                                                           scale)

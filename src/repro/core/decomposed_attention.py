@@ -26,15 +26,18 @@ On TPU the decomposition is still meaningful:
     memory trade, quantified in benchmarks/fig9_latency.py), not FLOPs.
     Numerics are identical up to fp reassociation (tests assert allclose).
 
-Both orderings are exposed; models pick via ``attn_impl`` config.
+Both orderings are exposed; models pick via ``attn_impl`` config. Whatever
+the ordering, the score-softmax-PV core runs through ``core.backend.attend``
+— one dispatch point over the attention backends (xla materialized scores |
+fused RoI-masked flash Pallas kernel), selected by
+``ArchConfig.attn_backend`` / ``ExecPolicy.attn_backend``.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.backend import ExecPolicy, QuantizedWeight, linear
+from repro.core.backend import ExecPolicy, QuantizedWeight, attend, linear
 
 __all__ = ["attention_scores_standard", "attention_scores_decomposed",
            "mhsa_standard", "mhsa_decomposed", "decomposition_flops"]
@@ -72,51 +75,68 @@ def _heads_split(t: jnp.ndarray, h: int) -> jnp.ndarray:
     return t.reshape(*lead, n, h, d // h).swapaxes(-2, -3)  # (..., h, n, dh)
 
 
-def _key_mask_bias(mask: jnp.ndarray | None, dtype) -> jnp.ndarray | None:
-    """(..., n) keep-mask {0,1} -> additive key-axis bias (..., 1, 1, n).
-
-    Excluded tokens get a large negative score so softmax assigns them
-    exactly-zero probability weight (exp underflows); kept rows then compute
-    identical values whether dropped tokens are present (mask mode) or
-    physically gathered out (top-k mode) — the serving parity contract.
-    """
-    if mask is None:
-        return None
-    return ((mask.astype(jnp.float32) - 1.0) * 1e9
-            ).astype(dtype)[..., None, None, :]
+def _fused_prequant_eligible(params: dict, policy: ExecPolicy | None,
+                             x: jnp.ndarray) -> bool:
+    """True when the whole MHSA block can take the one-jit serving hot
+    path (kernels/ops.py::fused_roi_attention_prequant): int8 Pallas
+    matmul backend + flash attention core + quantize-once cached QKV."""
+    p = policy or ExecPolicy()
+    if not (p.resolve_attn_backend() == "flash"
+            and p.resolve_backend() == "photonic_pallas"
+            and x.ndim == 3
+            and all(isinstance(params[n], QuantizedWeight)
+                    for n in ("wq", "wk", "wv"))):
+        return False
+    # the fused entry decodes all three with one bit width — a mixed-bits
+    # cache must fall back to the per-weight composed dispatch
+    return len({params[n].bits for n in ("wq", "wk", "wv")}) == 1
 
 
 def mhsa_standard(x: jnp.ndarray, params: dict, heads: int,
                   policy: ExecPolicy | None = None,
-                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+                  mask: jnp.ndarray | None = None,
+                  kv_len: int | None = None) -> jnp.ndarray:
     """Multi-head self-attention, standard dataflow.
 
     params: wq/wk/wv (dm, dm), wo (dm, dm) — per-head splits taken
     internally. The four weight projections route through the backend
-    dispatch (``linear``); the score and PV matmuls are activation-
-    activation (dynamically tuned cores on hardware) and stay in float.
-    ``mask`` (..., n) keep-mask removes tokens from the key axis (RoI mask
-    mode: shapes stay static, dropped patches contribute nothing).
+    dispatch (``linear``); the score-softmax-PV core routes through the
+    attention dispatch (``attend``: xla materialized scores or the fused
+    RoI-masked flash kernel). ``mask`` (..., n) keep-mask removes tokens
+    from the key axis (RoI mask mode: shapes stay static, dropped patches
+    contribute nothing — and under the flash backend they cost no score
+    FLOPs either); ``kv_len`` is the packed alternative (one-shape serving
+    mode: keys >= kv_len pruned, static skip on the flash backend). With
+    the int8 Pallas backend + flash attention + cached weights the
+    projections and kernel fuse into a single jit entry point (the serving
+    hot path); it computes the exact same numbers.
     """
     dm = x.shape[-1]
-    dh = dm // heads
-    scale = 1.0 / jnp.sqrt(dh)
+    if _fused_prequant_eligible(params, policy, x):
+        from repro.kernels import ops as kernel_ops   # lazy: pulls in pallas
+        p = policy or ExecPolicy()
+        if mask is not None:
+            # same lead-dim-elided masks the composed dispatch accepts
+            mask = jnp.broadcast_to(mask, x.shape[:2])
+        o = kernel_ops.fused_roi_attention_prequant(
+            x, params["wq"].wq, params["wq"].scale.reshape(-1),
+            params["wk"].wq, params["wk"].scale.reshape(-1),
+            params["wv"].wq, params["wv"].scale.reshape(-1),
+            mask, heads=heads, kv_len=kv_len, bits=params["wq"].bits,
+            interpret=p.interpret)
+        return linear(o, params["wo"], policy=policy)
     q = _heads_split(linear(x, params["wq"], policy=policy), heads)
     k = _heads_split(linear(x, params["wk"], policy=policy), heads)
     v = _heads_split(linear(x, params["wv"], policy=policy), heads)
-    s = (q @ k.swapaxes(-1, -2)) * scale
-    bias = _key_mask_bias(mask, s.dtype)
-    if bias is not None:
-        s = s + bias
-    s = jax.nn.softmax(s, axis=-1)
-    o = s @ v                                     # (..., h, n, dh)
+    o = attend(q, k, v, policy, mask=mask, kv_len=kv_len)  # (..., h, n, dh)
     o = o.swapaxes(-2, -3).reshape(*x.shape[:-1], dm)
     return linear(o, params["wo"], policy=policy)
 
 
 def mhsa_decomposed(x: jnp.ndarray, params: dict, heads: int,
                     policy: ExecPolicy | None = None,
-                    mask: jnp.ndarray | None = None) -> jnp.ndarray:
+                    mask: jnp.ndarray | None = None,
+                    kv_len: int | None = None) -> jnp.ndarray:
     """Multi-head self-attention with Eq. 2 score dataflow (per head).
 
     Per head h: S_h = (X Wq_h) (Wk_h^T/sqrt(dh)) X^T. Mathematically equal to
@@ -125,6 +145,10 @@ def mhsa_decomposed(x: jnp.ndarray, params: dict, heads: int,
     through the backend dispatch — W_K^T/sqrt(dh) is tuned as its own weight
     (the paper folds the scale into the MR bank directly), so it is passed
     raw and quantized at that fold point rather than reusing W_K's cache.
+    The score core routes through ``attend`` with X itself as the
+    (head-shared, MQA-style) key operand and the scale pre-folded — so the
+    Eq. 2 dataflow runs on either attention backend, including the fused
+    RoI-masked flash kernel (which supports D_qk != D_v).
     """
     dm = x.shape[-1]
     dh = dm // heads
@@ -142,13 +166,10 @@ def mhsa_decomposed(x: jnp.ndarray, params: dict, heads: int,
         qwk = jnp.stack(
             [linear(q[..., h, :, :], wk[:, h, :].T * scale, policy=policy)
              for h in range(heads)], axis=-3)
-    s = jnp.einsum("...hnd,...md->...hnm", qwk, x)      # (..., h, n, n)
-    bias = _key_mask_bias(mask, s.dtype)
-    if bias is not None:
-        s = s + bias
-    s = jax.nn.softmax(s, axis=-1)
     v = _heads_split(linear(x, params["wv"], policy=policy), heads)
-    o = (s @ v).swapaxes(-2, -3).reshape(*x.shape[:-1], dm)
+    o = attend(qwk, x[..., None, :, :], v, policy, mask=mask, kv_len=kv_len,
+               scale=1.0)
+    o = o.swapaxes(-2, -3).reshape(*x.shape[:-1], dm)
     return linear(o, params["wo"], policy=policy)
 
 

@@ -17,12 +17,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
-from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import (flash_attention,
+                                           fused_masked_attention)
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.photonic_matmul import photonic_matmul_int8
 
 __all__ = ["photonic_matmul", "photonic_matmul_prequant", "fused_attention",
-           "flash_decode", "pad_to"]
+           "fused_roi_attention_prequant", "flash_decode", "pad_to"]
 
 
 def pad_to(x, mult, axis):
@@ -78,6 +79,48 @@ def photonic_matmul(x: jax.Array, w: jax.Array, *, bits: int = 8,
     wq = quant.quantize(w32, sw[None], bits=bits)
     return photonic_matmul_prequant(x, wq, sw, bits=bits, bm=bm, bn=bn,
                                     bk=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("heads", "kv_len", "bits",
+                                             "bq", "bkv", "interpret"))
+def fused_roi_attention_prequant(x: jax.Array,
+                                 wq: jax.Array, sq_: jax.Array,
+                                 wk: jax.Array, sk_: jax.Array,
+                                 wv: jax.Array, sv_: jax.Array,
+                                 key_mask: jax.Array | None = None, *,
+                                 heads: int, kv_len: int | None = None,
+                                 bits: int = 8,
+                                 bq: int = 128, bkv: int = 128,
+                                 interpret: bool = True) -> jax.Array:
+    """The serving hot path in one jit: int8 cached-weight QKV projections
+    (``photonic_matmul_prequant`` x3 — the quantize-once cache's tuned MR
+    banks) feeding the fused RoI-masked flash kernel.
+
+    x (B, n, dm) float; wq/wk/wv (dm, dm) int8 codes with per-out-channel
+    scales sq_/sk_/sv_ (dm,) f32; key_mask (B, n) keep-mask or None;
+    ``kv_len`` the packed static alternative (one-shape serving mode).
+    Returns the merged head outputs (B, n, dm) in x.dtype — the output
+    projection is the caller's ``linear`` (it is just one more cached
+    weight). Numerically identical to composing ``linear`` projections
+    with ``attend`` under the flash backend; this entry point only removes
+    the per-projection dispatch from the per-frame step graph.
+    """
+    b, n, dm = x.shape
+    dh = dm // heads
+    xf = x.astype(jnp.float32)
+    q = photonic_matmul_prequant(xf, wq, sq_, bits=bits, interpret=interpret)
+    k = photonic_matmul_prequant(xf, wk, sk_, bits=bits, interpret=interpret)
+    v = photonic_matmul_prequant(xf, wv, sv_, bits=bits, interpret=interpret)
+
+    def split(t):
+        # cast to x.dtype first: bit-identical to the composed path, where
+        # ``linear`` hands the attention core x.dtype operands
+        return t.astype(x.dtype).reshape(b, n, heads, dh).transpose(0, 2, 1, 3)
+
+    o = fused_masked_attention(split(q), split(k), split(v), key_mask,
+                               kv_len=kv_len, bq=bq, bkv=bkv,
+                               interpret=interpret)
+    return o.transpose(0, 2, 1, 3).reshape(b, n, dm)
 
 
 def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

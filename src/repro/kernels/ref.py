@@ -7,7 +7,30 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["photonic_matmul_ref", "flash_attention_ref"]
+__all__ = ["photonic_matmul_ref", "flash_attention_ref", "expand_kv_heads",
+           "prefix_key_mask"]
+
+
+def prefix_key_mask(kv_len, b: int, skv: int) -> jax.Array:
+    """Packed kept-count -> (b, skv) prefix keep-mask (key j kept iff
+    j < kv_len; kv_len scalar or (b,)). One definition shared by every
+    attention lowering."""
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    return (jnp.arange(skv, dtype=jnp.int32)[None, :]
+            < lens[:, None]).astype(jnp.float32)
+
+
+def expand_kv_heads(t: jax.Array, h: int) -> jax.Array:
+    """(..., hk, s, d) -> (..., h, s, d): THE head-grouping contract every
+    attention dataflow shares (contiguous GQA repeat; hk == 1 — the Eq. 2
+    shared-X keys — broadcasts). Query head i reads KV head i // (h//hk),
+    matching the Pallas kernels' ``i // g`` BlockSpec index maps."""
+    hk = t.shape[-3]
+    if hk == h:
+        return t
+    if hk == 1:
+        return jnp.broadcast_to(t, t.shape[:-3] + (h,) + t.shape[-2:])
+    return jnp.repeat(t, h // hk, axis=-3)
 
 
 def photonic_matmul_ref(xq: jax.Array, wq: jax.Array, sx: jax.Array,
@@ -22,14 +45,29 @@ def photonic_matmul_ref(xq: jax.Array, wq: jax.Array, sx: jax.Array,
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                        causal: bool = True, window: int = 0) -> jax.Array:
-    """Dense softmax attention oracle. q (B,H,Sq,D); k/v (B,Hkv,Skv,D)."""
+                        causal: bool = True, window: int = 0,
+                        key_mask: jax.Array | None = None,
+                        scale: float | None = None) -> jax.Array:
+    """Dense softmax attention oracle. q (B,H,Sq,D); k (B,Hk,Skv,D);
+    v (B,Hv,Skv,Dv) -> (B,H,Sq,Dv).
+
+    ``key_mask`` (B, Skv) keep-mask prunes keys per batch row with
+    ``NEG_INF`` scores before the softmax — the contract the RoI-masked
+    Pallas kernel (and every masked-vs-gathered parity test) is checked
+    against, so kernel tests share this one reference instead of
+    hand-rolling their own. Query rows whose every visible key is masked
+    return exactly 0, matching the kernel's zero-denominator guard.
+    ``scale`` defaults to 1/sqrt(D); pass 1.0 when it is already folded
+    into Q (Eq. 2 decomposed scores).
+    """
     b, h, sq, d = q.shape
-    _, hkv, skv, _ = k.shape
-    g = h // hkv
-    qf = q.reshape(b, hkv, g, sq, d).astype(jnp.float32) / math.sqrt(d)
-    kf = k.astype(jnp.float32)
-    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+    _, hk, skv, _ = k.shape
+    dv = v.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    kf = expand_kv_heads(k, h).astype(jnp.float32)
+    vf = expand_kv_heads(v, h).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kf)
     q_pos = jnp.arange(sq)[:, None]
     kv_pos = jnp.arange(skv)[None, :]
     mask = jnp.ones((sq, skv), bool)
@@ -37,7 +75,11 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
         mask &= q_pos >= kv_pos
     if window > 0:
         mask &= q_pos - kv_pos < window
-    s = jnp.where(mask[None, None, None], s, -1e30)
+    mask = jnp.broadcast_to(mask[None, None], (b, 1, sq, skv))
+    if key_mask is not None:
+        mask = mask & (key_mask[:, None, None, :] > 0)
+    s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
-    return o.reshape(b, h, sq, d).astype(q.dtype)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    o = jnp.where(mask.any(-1)[..., None], o, 0.0)     # fully-masked rows
+    return o.reshape(b, h, sq, dv).astype(q.dtype)

@@ -6,6 +6,11 @@ Standard ViT (Dosovitskiy et al.) with the paper's co-design hooks:
     (bf16 | qat | photonic_sim | photonic_pallas, selected by
     ArchConfig.matmul_backend / .quant_bits / .photonic); serve-time params
     can be pre-tuned once with ``core.backend.prepare_params``,
+  * every attention core (standard and decomposed, masked and gathered)
+    routes through ``attend`` -> the attention registry (xla materialized
+    scores | fused RoI-masked flash Pallas kernel, selected by
+    ArchConfig.attn_backend); with the int8 Pallas matmul backend + cached
+    weights the whole MHSA block takes the one-jit serving hot path,
   * optional Eq. 2 decomposed attention dataflow (attn_impl="decomposed"),
   * optional MGNet RoI pruning: patches are scored by MGNet and only the
     top-k (static budget = ceil(keep_ratio * N)) enter encoder block 0 —
@@ -112,18 +117,24 @@ def embed_patches(params: dict, images: jnp.ndarray, cfg: ArchConfig,
 
 def encode_tokens(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
                   policy: ExecPolicy | None = None,
-                  patch_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+                  patch_mask: jnp.ndarray | None = None,
+                  kv_len: int | None = None) -> jnp.ndarray:
     """Encoder trunk on pre-embedded patch tokens -> logits (B, n_classes).
 
     tokens: (B, k, d) position-embedded patch tokens (any k <= N — the
     serving buckets call this with k in the ladder); the [cls] token is
     prepended here. ``patch_mask`` (B, k) optionally removes tokens from
     every attention key axis without changing shapes (RoI mask mode; cls is
-    always kept). Kept-token activations are identical between a masked
+    always kept). ``kv_len`` is the packed alternative for score-ordered
+    tokens (one-shape serving mode): only the first ``kv_len`` patch
+    tokens are live, a static count the flash attention backend skips the
+    dead tail for. Kept-token activations are identical between a masked
     dense call and a gathered top-k call because attention is the only
     cross-token operator in the trunk.
     """
     policy = policy or ExecPolicy.from_cfg(cfg)
+    if patch_mask is not None and kv_len is not None:
+        raise ValueError("give patch_mask or kv_len, not both")
     b, _, d = tokens.shape
     cls = jnp.broadcast_to(params["cls"], (b, 1, d)) + params["pos"][:, :1]
     x = jnp.concatenate([cls.astype(tokens.dtype), tokens], axis=1)
@@ -132,13 +143,16 @@ def encode_tokens(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
     if patch_mask is not None:
         mask = jnp.concatenate(
             [jnp.ones((b, 1), patch_mask.dtype), patch_mask], axis=1)
+    attn_kv = None if kv_len is None else int(kv_len) + 1   # + live [cls]
 
     def body(carry, lp):
         h = layernorm(carry, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
         if cfg.attn_impl == "decomposed":
-            o = mhsa_decomposed(h, lp["attn"], cfg.n_heads, policy, mask)
+            o = mhsa_decomposed(h, lp["attn"], cfg.n_heads, policy, mask,
+                                attn_kv)
         else:
-            o = mhsa_standard(h, lp["attn"], cfg.n_heads, policy, mask)
+            o = mhsa_standard(h, lp["attn"], cfg.n_heads, policy, mask,
+                              attn_kv)
         carry = carry + o.astype(carry.dtype)
         h2 = layernorm(carry, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
         carry = carry + ffn_mod.mlp(lp["ffn"], h2, policy)
@@ -174,14 +188,20 @@ def forward_vit(params: dict, images: jnp.ndarray, cfg: ArchConfig,
 
 
 def forward_vit_tokens(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
-                       policy: ExecPolicy | None = None):
-    """Pre-gathered token forward: tokens (B, k, d) -> (logits, k).
+                       policy: ExecPolicy | None = None,
+                       kv_len: int | None = None):
+    """Pre-gathered token forward: tokens (B, k, d) -> (logits, kept).
 
     The serving engine's bucketed encode path — the gate/gather already
     happened upstream (possibly against a *cached* RoI mask), so every call
-    at a given bucket size k is shape-static and jit-cache-hits.
+    at a given bucket size k is shape-static and jit-cache-hits. In
+    one-shape mode the engine instead passes all N score-ordered tokens
+    plus a static ``kv_len``: one compiled token shape, per-bucket
+    kv_len-specialized variants, and the flash attention backend skips the
+    pruned tail's score FLOPs.
     """
-    return encode_tokens(params, tokens, cfg, policy), tokens.shape[1]
+    kept = tokens.shape[1] if kv_len is None else kv_len
+    return encode_tokens(params, tokens, cfg, policy, kv_len=kv_len), kept
 
 
 def forward_vit_masked(params: dict, images: jnp.ndarray,

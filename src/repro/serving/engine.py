@@ -15,7 +15,11 @@ The paper's deployment scenario end to end on the photonic backends:
      same-bucket frames micro-batch (``MicroBatcher``) so every encode is
      shape-static and jit-cache-warm;
   4. **encode** — ``forward_vit_tokens`` on the gathered tokens (compute
-     scales with the bucket, the paper's linear energy lever);
+     scales with the bucket, the paper's linear energy lever); with
+     ``--attn-backend flash`` the attention core runs the fused RoI-masked
+     flash kernel (and, on ``photonic_pallas`` with cached weights, the
+     whole MHSA block collapses into one jit entry point —
+     ``kernels/ops.py::fused_roi_attention_prequant``);
   5. **account** — per-flush ``EnergyReport`` from
      ``vit_matmul_shapes(kept_patches=k)``, surfaced live as frames/s (host
      wall clock) and KFPS/W (accelerator model, the Table-4 metric).
@@ -78,6 +82,13 @@ class ServingConfig:
     #                              fraction of N (the paper's fixed
     #                              keep-ratio inference; also the controlled
     #                              operating point for skip-ratio benchmarks)
+    one_shape: bool = False      # fixed-sensor-buffer mode: every encode is
+    #                              (microbatch, ladder.cap, d) with the
+    #                              score-ordered tokens and a static packed
+    #                              kept-count (kv_len) per bucket — one
+    #                              token shape, |ladder| kv_len-specialized
+    #                              jits; the flash attention backend skips
+    #                              the pruned tail's score FLOPs
 
 
 @dataclass
@@ -155,6 +166,12 @@ class ServingEngine:
         self._gather = {
             k: jax.jit(functools.partial(_gather_topk_rows, keep=k))
             for k in self.ladder.sizes}
+        self._encode_one = {}
+        if self.serve_cfg.one_shape:
+            def _one(k: int):
+                return jax.jit(lambda p, t: forward_vit_tokens(
+                    p, t, cfg, pol, kv_len=k)[0])
+            self._encode_one = {k: _one(int(k)) for k in self.ladder.sizes}
 
     # -- pipeline stages ---------------------------------------------------
 
@@ -216,10 +233,15 @@ class ServingEngine:
                     mask_budget(scores_np, self.mcfg.t_reg))
 
             order = self._order(jnp.asarray(scores_np))    # (C, N), shared
+            permuted = (self._gather[self.ladder.cap](toks, order)
+                        if sc.one_shape else None)         # (C, cap, d)
             for k in np.unique(routes[valid]):
                 k = int(k)
                 sel = np.flatnonzero((routes == k) & valid)
-                pruned = self._gather[k](toks, order)      # (C, k, d)
+                # one-shape mode ships the shared cap-size permutation and
+                # prunes via the static per-bucket kv_len at encode time
+                pruned = (permuted if sc.one_shape
+                          else self._gather[k](toks, order))   # (C, k, d)
                 hist.add(k, len(sel))
                 group = pruned if len(sel) == frames.shape[0] else pruned[sel]
                 for flush in batcher.push_many(
@@ -249,7 +271,16 @@ class ServingEngine:
         return res
 
     def _finish(self, flush, acct: StreamAccounting, deferred: list):
-        logits = self._encode(self.params, flush.tokens)
+        if self.serve_cfg.one_shape:
+            logits = self._encode_one[flush.bucket](self.params, flush.tokens)
+        else:
+            logits = self._encode(self.params, flush.tokens)
+        # one-shape encodes are billed at bucket k, same as gathered mode:
+        # the packed prefix is contiguous, so the accelerator's static
+        # schedule streams only the k live rows through every core (unlike
+        # scattered mask-mode, which cannot pack and is billed at N — see
+        # run_dense). The host-side cap-size FFN is a functional-sim
+        # artifact, visible in frames/s but not in the accelerator model.
         acct.add_encode(flush.bucket, flush.n_real)
         deferred.append((flush.frame_idx,
                          jnp.argmax(logits[:flush.n_real], -1)))
@@ -300,12 +331,14 @@ class ServingEngine:
 # CLI
 # --------------------------------------------------------------------------
 
-def _smoke_cfg(backend: str) -> ArchConfig:
+def _smoke_cfg(backend: str, attn_backend: str = "") -> ArchConfig:
     from repro.configs.opto_vit import get_config
     cfg = smoke_variant(get_config("tiny")).with_(
         mgnet=True, mgnet_keep_ratio=0.5, mgnet_embed=32, mgnet_heads=2)
     if backend:
         cfg = cfg.with_(matmul_backend=backend)
+    if attn_backend:
+        cfg = cfg.with_(attn_backend=attn_backend)
     return cfg
 
 
@@ -317,12 +350,19 @@ def main(argv=None):
     ap.add_argument("--img-size", type=int, default=96)
     ap.add_argument("--backend", default="photonic_pallas",
                     help=f"matmul backend ({', '.join(available_backends())})")
+    ap.add_argument("--attn-backend", default="", choices=["", "xla", "flash"],
+                    help="attention core: xla (materialized scores, default) "
+                         "or flash (fused RoI-masked Pallas kernel)")
     ap.add_argument("--frames", type=int, default=64)
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--microbatch", type=int, default=4)
     ap.add_argument("--mask-refresh", type=int, default=8)
     ap.add_argument("--delta-threshold", type=float, default=0.15)
     ap.add_argument("--buckets", default="0.25,0.5,0.75,1.0")
+    ap.add_argument("--one-shape", action="store_true",
+                    help="fixed-sensor-buffer mode: encode all frames at "
+                         "the ladder cap with a static packed kept-count "
+                         "per bucket (flash backend skips the dead tail)")
     ap.add_argument("--cut-every", type=int, default=32)
     ap.add_argument("--compare-dense", action="store_true",
                     help="also run the mask-mode dense baseline")
@@ -334,20 +374,22 @@ def main(argv=None):
         raise SystemExit(f"unknown backend {args.backend!r}; "
                          f"choose from {available_backends()}")
     if args.smoke:
-        cfg = _smoke_cfg(args.backend)
+        cfg = _smoke_cfg(args.backend, args.attn_backend)
     else:
         from repro.configs.opto_vit import get_config
         cfg = get_config(args.variant, img_size=args.img_size,
-                         mgnet=True).with_(matmul_backend=args.backend)
+                         mgnet=True).with_(matmul_backend=args.backend,
+                                           attn_backend=args.attn_backend)
 
     serve_cfg = ServingConfig(
         bucket_fractions=tuple(float(f) for f in args.buckets.split(",")),
         microbatch=args.microbatch, chunk=args.chunk,
         mask_refresh=args.mask_refresh,
-        delta_threshold=args.delta_threshold)
+        delta_threshold=args.delta_threshold, one_shape=args.one_shape)
     engine = ServingEngine(cfg, serve_cfg)
     print(f"[serve] {cfg.name} {cfg.img_size}x{cfg.img_size} "
           f"backend={engine.policy.resolve_backend()} "
+          f"attn={engine.policy.resolve_attn_backend()} "
           f"ladder={list(engine.ladder.sizes)} of {engine.n_patches} patches")
 
     stream = VideoStream(img_size=cfg.img_size, patch=cfg.patch,

@@ -59,16 +59,23 @@ class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
 
 def given(*strategies: _Strategy):
     def deco(fn):
+        # strategies fill the TRAILING parameters (hypothesis fills
+        # positionally from the right so leading fixtures/self pass
+        # through); bind them by name because pytest delivers fixtures as
+        # keyword arguments.
+        params = list(inspect.signature(fn).parameters.values())
+        drawn_names = [p.name for p in params[len(params) - len(strategies):]]
+
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
             rnd = random.Random(_SEED)
             for _ in range(wrapper._max_examples):
-                drawn = [s.draw(rnd) for s in strategies]
-                fn(*args, *drawn, **kwargs)
+                drawn = {nm: s.draw(rnd)
+                         for nm, s in zip(drawn_names, strategies)}
+                fn(*args, **kwargs, **drawn)
         # hide the strategy-filled (trailing) parameters from pytest's
         # fixture resolution — like hypothesis, only leading params (if
         # any) remain visible as fixtures.
-        params = list(inspect.signature(fn).parameters.values())
         wrapper.__signature__ = inspect.Signature(
             params[: len(params) - len(strategies)])
         del wrapper.__wrapped__

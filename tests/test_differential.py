@@ -1,0 +1,380 @@
+"""Property-based cross-backend differential harness.
+
+One module owns the repo's numerics contracts, as *generated* properties
+instead of hand-picked sweeps (the ad-hoc shape lists that used to live in
+test_backend_parity.py / test_bucket_parity.py are replaced by strategies
+here; those files keep pinned regression cases):
+
+  (a) the four matmul backends agree on ``linear`` within per-backend
+      tolerances — photonic_sim and photonic_pallas to f32-epilogue noise,
+      qat to dequant-reassociation noise, bf16 to 8-bit quantization noise
+      (correlation, not allclose);
+  (b) masked-dense and gathered-top-k ViT forwards agree for every
+      backend x attention backend, including photonic_pallas in interpret
+      mode — the serving parity contract under generated budgets;
+  (c) the fused RoI-masked flash attention (both lowerings: the Pallas
+      kernel in interpret mode and the XLA twin) matches the dense
+      NEG_INF-masked oracle ``kernels/ref.py::flash_attention_ref`` over
+      generated shapes, masks and dtypes.
+
+Tolerance policy (documented in README "Testing & parity"):
+  float-only paths            rtol/atol 2e-5 (2e-2 for bf16 io)
+  integer-photonic pairs      bitwise on accumulates, 1e-6 after dequant
+  quant vs float              corr > 0.999 (8-bit noise is not allclose-able)
+  masked vs gathered (w8a8)   corr > 0.995 generated budgets / 0.999 pinned
+                              ladder budgets, + allclose 0.35 (the two modes
+                              absmax-scale different token sets)
+
+Runs under real hypothesis (CI) or the deterministic fallback shim
+(seed container). Reproduce a CI failure locally with the printed seed:
+    PYTHONPATH=src python -m pytest tests/test_differential.py -p no:randomly
+Every strategy feeds jax.random.PRNGKey(seed), so a drawn example is fully
+pinned by its integers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # seed container
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.base import smoke_variant
+from repro.configs.opto_vit import get_config
+from repro.core import backend as be
+from repro.core.backend import ExecPolicy, linear, prepare_params
+from repro.core.mgnet import select_topk_patches
+from repro.kernels.flash_attention import (flash_attention_masked,
+                                           flash_attention_masked_xla)
+from repro.kernels.ref import flash_attention_ref
+from repro.models.vit import (embed_patches, forward_vit_masked,
+                              forward_vit_tokens, init_vit)
+
+pytestmark = pytest.mark.slow          # CI runs this module in the slow job
+
+N_PATCHES = 16
+
+
+# --------------------------------------------------------------------------
+# shared model fixtures (one smoke ViT reused across generated examples)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def base_cfg():
+    return smoke_variant(get_config("tiny")).with_(n_layers=2)
+
+
+@pytest.fixture(scope="module")
+def params(base_cfg):
+    return init_vit(jax.random.PRNGKey(1), base_cfg, n_classes=8)
+
+
+@pytest.fixture(scope="module")
+def prepared(params):
+    return prepare_params(params, bits=8)
+
+
+@pytest.fixture(scope="module")
+def images():
+    return jax.random.normal(jax.random.PRNGKey(0), (2, 32, 32, 3))
+
+
+def _mask_from_idx(idx, n):
+    b = idx.shape[0]
+    return jnp.zeros((b, n)).at[jnp.arange(b)[:, None], idx].set(1.0)
+
+
+def _masked_vs_gathered(cfg, params, images, k, seed, rtol=None):
+    """The serving parity property: gathered top-k logits == masked dense
+    logits, to float noise on float paths / 8-bit noise on w8a8 paths."""
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (2, N_PATCHES))
+    toks = embed_patches(params, images, cfg)
+    pruned, idx = select_topk_patches(scores, toks, k)
+    lg_topk, kept = forward_vit_tokens(params, pruned, cfg)
+    assert kept == k
+    lg_mask, _ = forward_vit_masked(params, images,
+                                    _mask_from_idx(idx, N_PATCHES), cfg)
+    a = np.asarray(lg_topk, np.float32)
+    m = np.asarray(lg_mask, np.float32)
+    if rtol is not None:
+        np.testing.assert_allclose(a, m, rtol=rtol, atol=rtol)
+    else:                                   # w8a8: scale sets differ
+        # generated budgets include tiny k, where per-tensor activation
+        # scales diverge most between the two token sets — corr > 0.995
+        # here; the pinned ladder budgets hold 0.999 (test_bucket_parity)
+        assert np.corrcoef(a.ravel(), m.ravel())[0, 1] > 0.995
+        np.testing.assert_allclose(a, m, rtol=0.35, atol=0.35)
+
+
+# --------------------------------------------------------------------------
+# (a) four matmul backends on generated shapes
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 160), st.integers(1, 96),
+       st.integers(0, 2 ** 31 - 1))
+def test_fuzz_linear_backend_agreement(m, k, n, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    out = {name: np.asarray(linear(x, w, policy=ExecPolicy(backend=name,
+                                                           quant_bits=8,
+                                                           training=False)))
+           for name in ("bf16", "qat", "photonic_sim", "photonic_pallas")}
+    # the two photonic executions share one integer contract
+    np.testing.assert_allclose(out["photonic_sim"], out["photonic_pallas"],
+                               rtol=1e-6, atol=1e-6)
+    # fake-quant computes the same w8a8 product in float order
+    scale = max(np.abs(out["photonic_sim"]).max(), 1e-6)
+    np.testing.assert_allclose(out["qat"], out["photonic_sim"],
+                               rtol=2e-4, atol=2e-4 * scale)
+    # full precision agrees to 8-bit quantization noise only
+    if out["bf16"].size > 1 and np.abs(out["bf16"]).max() > 1e-6:
+        corr = np.corrcoef(out["bf16"].ravel(),
+                           out["photonic_sim"].ravel())[0, 1]
+        assert corr > 0.999, corr
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 96), st.integers(1, 200), st.integers(1, 96),
+       st.integers(0, 2 ** 31 - 1))
+def test_fuzz_int_accumulate_bit_identical(m, k, n, seed):
+    """The generated-shape version of the pinned tiny-96 accumulate sweep."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    xq = jax.random.randint(kx, (m, k), -127, 128, jnp.int32).astype(jnp.int8)
+    wq = jax.random.randint(kw, (k, n), -127, 128, jnp.int32).astype(jnp.int8)
+    exact = np.asarray(be.int_accumulate_exact(xq, wq))
+    np.testing.assert_array_equal(exact, np.asarray(be.int_accumulate_sim(xq, wq)))
+    np.testing.assert_array_equal(exact,
+                                  np.asarray(be.int_accumulate_pallas(xq, wq)))
+
+
+# --------------------------------------------------------------------------
+# (b) masked vs gathered forwards, generated budgets
+# --------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, N_PATCHES), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["standard", "decomposed"]),
+       st.sampled_from(["", "flash"]))
+def test_fuzz_masked_vs_gathered_bf16(base_cfg, params, images,
+                                      k, seed, attn_impl, attn_backend):
+    cfg = base_cfg.with_(matmul_backend="bf16", attn_impl=attn_impl,
+                         attn_backend=attn_backend)
+    _masked_vs_gathered(cfg, params, images, k, seed, rtol=1e-4)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(1, N_PATCHES - 1), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["qat", "photonic_sim"]),
+       st.sampled_from(["", "flash"]))
+def test_fuzz_masked_vs_gathered_quant(base_cfg, params, prepared, images,
+                                       k, seed, backend, attn_backend):
+    cfg = base_cfg.with_(matmul_backend=backend, quant_bits=8,
+                         attn_backend=attn_backend)
+    p = prepared if backend.startswith("photonic") else params
+    _masked_vs_gathered(cfg, p, images, k, seed)
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.sampled_from([4, 8, 12]), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["", "flash"]))
+def test_fuzz_masked_vs_gathered_pallas_interpret(base_cfg, prepared, images,
+                                                  k, seed, attn_backend):
+    """The acceptance path: the int8 Pallas kernel (interpret mode) holds
+    the same masked-vs-gathered contract; with attn_backend=flash the
+    whole MHSA block runs the fused prequant serving hot path."""
+    cfg = base_cfg.with_(matmul_backend="photonic_pallas", quant_bits=8,
+                         attn_backend=attn_backend)
+    _masked_vs_gathered(cfg, prepared, images, k, seed)
+
+
+# --------------------------------------------------------------------------
+# (c) fused RoI-masked attention vs the dense NEG_INF oracle
+# --------------------------------------------------------------------------
+
+def _qkv_mask(seed, b, h, hk, hv, s, d, dv, density, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, hk, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, hv, s, dv), dtype)
+    mask = (jax.random.uniform(ks[3], (b, s)) < density).astype(jnp.float32)
+    mask = mask.at[:, 0].set(1.0)          # the [cls] invariant
+    return q, k, v, mask
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([1, 2, 4]),
+       st.integers(4, 48), st.sampled_from([8, 16, 32]),
+       st.floats(0.1, 1.0), st.integers(0, 2 ** 31 - 1))
+def test_fuzz_fused_masked_xla_twin_matches_ref(b, h, s, d, density, seed):
+    q, k, v, mask = _qkv_mask(seed, b, h, h, h, s, d, d, density)
+    out = flash_attention_masked_xla(q, k, v, mask)
+    ref = flash_attention_ref(q, k, v, causal=False, key_mask=mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([(2, 1, 2), (4, 2, 4), (2, 2, 2)]),
+       st.integers(4, 40), st.sampled_from([(16, 16), (32, 8)]),
+       st.floats(0.15, 1.0), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([16, 64]))
+def test_fuzz_fused_masked_kernel_matches_ref(b, heads, s, dims, density,
+                                              seed, bkv):
+    """The Pallas kernel itself (interpret mode), over generated GQA/MQA
+    head layouts, D != Dv, block sizes, shapes that need padding, and
+    mask densities — bit-compared (allclose 2e-5) to the masked oracle."""
+    h, hk, hv = heads
+    d, dv = dims
+    q, k, v, mask = _qkv_mask(seed, b, h, hk, hv, s, d, dv, density)
+    out = flash_attention_masked(q, k, v, mask, bq=16, bkv=bkv)
+    ref = flash_attention_ref(q, k, v, causal=False, key_mask=mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 2), st.integers(4, 40), st.integers(0, 40),
+       st.integers(0, 2 ** 31 - 1))
+def test_fuzz_fused_kvlen_matches_mask(b, s, kv_len, seed):
+    """Packed kept-count == explicit prefix mask, on both lowerings."""
+    kv_len = min(kv_len, s)
+    q, k, v, _ = _qkv_mask(seed, b, 2, 2, 2, s, 16, 16, 1.0)
+    prefix = jnp.broadcast_to(
+        (jnp.arange(s) < kv_len).astype(jnp.float32)[None], (b, s))
+    ref = flash_attention_ref(q, k, v, causal=False, key_mask=prefix)
+    out_k = flash_attention_masked(q, k, v, kv_len=kv_len, bq=16, bkv=16)
+    out_x = flash_attention_masked_xla(q, k, v, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(out_x), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# pinned regression seeds (cases that once failed or probe known edges)
+# --------------------------------------------------------------------------
+
+PINNED = [
+    # (b, (h, hk, hv), s, (d, dv), density, seed, bkv)
+    (1, (2, 1, 2), 37, (64, 24), 0.5, 7, 16),    # Eq.2 layout: MQA keys, dv<d
+    (2, (4, 2, 4), 17, (16, 16), 0.3, 11, 16),   # GQA + heavy pruning
+    (1, (2, 2, 2), 33, (32, 32), 1.0, 3, 16),    # dense (no mask effect)
+    (2, (2, 2, 2), 16, (16, 16), 0.05, 5, 8),    # near-empty mask, cls only
+]
+
+
+@pytest.mark.parametrize("b,heads,s,dims,density,seed,bkv", PINNED)
+def test_pinned_fused_masked_kernel(b, heads, s, dims, density, seed, bkv):
+    h, hk, hv = heads
+    d, dv = dims
+    q, k, v, mask = _qkv_mask(seed, b, h, hk, hv, s, d, dv, density)
+    ref = flash_attention_ref(q, k, v, causal=False, key_mask=mask)
+    out = flash_attention_masked(q, k, v, mask, bq=16, bkv=bkv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    out_x = flash_attention_masked_xla(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out_x), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pinned_all_masked_rows_return_zero():
+    """A batch row whose every key is pruned outputs exactly 0 on the
+    kernel, the XLA twin, the oracle AND both attend() backends (the
+    zero-denominator guard is part of the attention contract, not a
+    flash-only behavior)."""
+    from repro.core.backend import attend
+    q, k, v, _ = _qkv_mask(0, 2, 2, 2, 2, 12, 16, 16, 1.0)
+    mask = jnp.zeros((2, 12)).at[0, 3].set(1.0)    # row 1 fully masked
+    for fn in (lambda: flash_attention_masked(q, k, v, mask, bq=8, bkv=8),
+               lambda: flash_attention_masked_xla(q, k, v, mask),
+               lambda: flash_attention_ref(q, k, v, causal=False,
+                                           key_mask=mask),
+               lambda: attend(q, k, v, ExecPolicy(), mask=mask),
+               lambda: attend(q, k, v, ExecPolicy(attn_backend="flash"),
+                              mask=mask)):
+        out = np.asarray(fn())
+        assert np.isfinite(out).all()
+        np.testing.assert_array_equal(out[1], np.zeros_like(out[1]))
+
+
+def test_pinned_fused_prequant_accepts_elided_mask(base_cfg, prepared):
+    """The fused hot path accepts the same lead-dim-elided (n,) masks the
+    composed dispatch broadcasts — whether cached weights are installed
+    must not change the accepted mask shapes of mhsa_standard."""
+    from repro.core.backend import QuantizedWeight
+    from repro.core.decomposed_attention import mhsa_standard
+    blk = {name: QuantizedWeight(w.wq[0], w.scale[0], w.bits)
+           for name, w in prepared["blocks"]["attn"].items()}
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 8, base_cfg.d_model))
+    pol = ExecPolicy(backend="photonic_pallas", quant_bits=8,
+                     attn_backend="flash")
+    shared = jnp.zeros((8,)).at[:5].set(1.0)
+    o_1d = mhsa_standard(x, blk, base_cfg.n_heads, pol, shared)
+    o_2d = mhsa_standard(x, blk, base_cfg.n_heads, pol,
+                         jnp.broadcast_to(shared[None], (2, 8)))
+    np.testing.assert_array_equal(np.asarray(o_1d), np.asarray(o_2d))
+
+
+def test_pinned_bf16_io_fused_masked():
+    q, k, v, mask = _qkv_mask(9, 1, 2, 2, 2, 24, 16, 16, 0.6, jnp.bfloat16)
+    out = flash_attention_masked(q, k, v, mask, bq=8, bkv=8)
+    assert out.dtype == jnp.bfloat16
+    ref = flash_attention_ref(q, k, v, causal=False, key_mask=mask)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("k", [4, 8, 12])
+def test_pinned_one_shape_kvlen_matches_gathered(base_cfg, params, images, k):
+    """One-shape serving parity: encoding all N score-ordered tokens with
+    a static packed kv_len == encoding the gathered top-k tokens (the
+    first k of the same order) — on both attention backends."""
+    scores = jax.random.normal(jax.random.PRNGKey(3), (2, N_PATCHES))
+    order = jnp.argsort(scores, axis=-1, stable=True, descending=True)
+    toks = embed_patches(params, images, base_cfg)
+    permuted = jnp.take_along_axis(toks, order[:, :, None], axis=1)
+    for ab in ("", "flash"):
+        cfg = base_cfg.with_(matmul_backend="bf16", attn_backend=ab)
+        lg_one, kept = forward_vit_tokens(params, permuted, cfg, kv_len=k)
+        assert kept == k
+        lg_gath, _ = forward_vit_tokens(params, permuted[:, :k], cfg)
+        np.testing.assert_allclose(np.asarray(lg_one), np.asarray(lg_gath),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=ab or "xla")
+
+
+def test_pinned_attend_broadcastable_mask_both_backends():
+    """attend() accepts lead-dim-elided masks ((Skv,) shared across the
+    batch) identically on both attention backends — the dispatch must not
+    change the mask contract."""
+    from repro.core.backend import attend
+    q, k, v, _ = _qkv_mask(6, 3, 2, 2, 2, 12, 16, 16, 1.0)
+    shared = jnp.zeros((12,)).at[:7].set(1.0)      # one mask, every batch
+    full = jnp.broadcast_to(shared[None], (3, 12))
+    for ab in ("", "flash"):
+        pol = ExecPolicy(attn_backend=ab)
+        got = attend(q, k, v, pol, mask=shared)
+        want = attend(q, k, v, pol, mask=full)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=ab or "xla")
+
+
+def test_pinned_fused_prequant_equals_composed(base_cfg, params, prepared,
+                                               images):
+    """The one-jit serving hot path (int8 prequant projections + fused
+    masked attention) is bit-identical to composing ``linear`` + ``attend``
+    — through the full masked forward."""
+    mask = (jax.random.uniform(jax.random.PRNGKey(4), (2, N_PATCHES))
+            > 0.5).astype(jnp.float32)
+    cfg = base_cfg.with_(matmul_backend="photonic_pallas", quant_bits=8,
+                        attn_backend="flash")
+    lg_fused, _ = forward_vit_masked(prepared, images, mask, cfg)
+    # raw weights force the composed (non-fused) dispatch, same numbers
+    lg_comp, _ = forward_vit_masked(params, images, mask, cfg)
+    np.testing.assert_array_equal(np.asarray(lg_fused), np.asarray(lg_comp))

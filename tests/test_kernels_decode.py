@@ -8,6 +8,8 @@ import pytest
 from repro.kernels.flash_decode import flash_decode
 from repro.models.attention import decode_attention, full_attention
 
+pytestmark = pytest.mark.slow      # interpret-mode kernels -> CI slow job
+
 
 def _setup(seed, b, s, h, hkv, d, cache_dtype=jnp.float32):
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)

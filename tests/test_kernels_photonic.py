@@ -13,6 +13,8 @@ except ImportError:    # seed container: deterministic fallback
     from _hypothesis_fallback import given, settings, st
 
 from repro.core import quant
+
+pytestmark = pytest.mark.slow      # interpret-mode kernels -> CI slow job
 from repro.core.photonic import photonic_matmul_exact
 from repro.kernels.ops import photonic_matmul
 from repro.kernels.photonic_matmul import photonic_matmul_int8

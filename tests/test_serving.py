@@ -48,6 +48,23 @@ def test_ladder_rejects_bad_shapes():
         BucketLadder((18, 9))
 
 
+def test_ladder_budget_edges():
+    """Budget 0 (MGNet found nothing — still encode the smallest bucket,
+    the [cls] path needs tokens) and budget == N (dense fallback, no
+    over-routing past the cap)."""
+    n = 36
+    lad = BucketLadder.from_fractions(n, (0.25, 0.5, 0.75, 1.0))
+    assert lad.route(0) == lad.sizes[0]
+    assert lad.route(n) == n == lad.cap
+    np.testing.assert_array_equal(lad.route_many([0, n]), [lad.sizes[0], n])
+    # a single-bucket ladder sends every budget to that bucket
+    one = BucketLadder((n,))
+    assert one.route(0) == one.route(n) == one.route(n + 99) == n
+    # fractions below 1/N clamp to one patch, never zero
+    tiny = BucketLadder.from_fractions(n, (0.001, 1.0))
+    assert tiny.sizes[0] == 1
+
+
 def test_histogram_counts():
     lad = BucketLadder((4, 8))
     h = BucketHistogram(lad)
@@ -111,6 +128,43 @@ def test_mask_cache_delta_trigger_fires_on_scene_change():
     assert scores[2].mean() == pytest.approx(0.0)
     assert scores[3].mean() == pytest.approx(1.0)
     assert scores[5].mean() == pytest.approx(1.0)   # reused post-cut mask
+
+
+def test_mask_cache_refresh_boundary_is_inclusive():
+    """idx - ref_idx == refresh must re-score (staleness bound is >=, not
+    >): with refresh=4 a frame exactly 4 after the reference is scored."""
+    def score_fn(f):
+        return np.zeros((f.shape[0], 4), np.float32)
+
+    # frames 0..4 in one chunk: 0 scores (cold), 4 is exactly refresh away
+    cache = TemporalMaskCache(refresh=4, delta_threshold=1e9)
+    _, n = cache.gate(_static_frames(5), np.arange(5), score_fn)
+    assert n == 2                            # frames 0 and 4, not 3
+    # one frame short of the boundary: only the cold score
+    short = TemporalMaskCache(refresh=4, delta_threshold=1e9)
+    _, n2 = short.gate(_static_frames(4), np.arange(4), score_fn)
+    assert n2 == 1
+
+
+def test_mask_cache_delta_exactly_at_threshold_reuses():
+    """The delta trigger is strict (delta > threshold): a frame whose mean
+    abs delta equals the threshold exactly reuses the cached mask."""
+    from repro.core.mgnet import frame_delta
+    thr_frames = _static_frames(2)
+    thr_frames[1] = 0.25                      # uniform delta of exactly 0.25
+    delta = float(frame_delta(thr_frames[1:2], thr_frames[0])[0])
+    assert delta == pytest.approx(0.25)
+
+    def score_fn(f):
+        return np.zeros((f.shape[0], 4), np.float32)
+
+    at = TemporalMaskCache(refresh=1000, delta_threshold=delta)
+    _, n_at = at.gate(thr_frames, np.arange(2), score_fn)
+    assert n_at == 1                          # == threshold -> reuse
+    below = TemporalMaskCache(refresh=1000,
+                              delta_threshold=delta - 1e-6)
+    _, n_below = below.gate(thr_frames, np.arange(2), score_fn)
+    assert n_below == 2                       # just past it -> re-score
 
 
 def test_mask_cache_static_score_shape():
@@ -184,6 +238,28 @@ def test_energy_report_aggregation():
     assert a.adc_uj == pytest.approx(4.0)
 
 
+def test_stream_accounting_empty_flushes():
+    """Zero-frame flushes (fully-padded micro-batches, idle streams) must
+    not perturb the aggregate: no frames, no energy, KFPS/W stays 0 and
+    the mean-frame report divides by nothing."""
+    cfg = get_config("tiny", img_size=96, mgnet=True)
+    acct = StreamAccounting(cfg)
+    acct.add_encode(18, 0)
+    acct.add_mgnet(0)
+    assert acct.frames == 0 and acct.scored_frames == 0
+    assert acct.kfps_per_watt == 0.0
+    assert acct.mean_frame.total_uj == 0.0
+    assert acct.total.total_uj == pytest.approx(0.0)
+    # real frames after empty flushes aggregate exactly as if alone
+    acct.add_encode(18, 3)
+    fresh = StreamAccounting(cfg)
+    fresh.add_encode(18, 3)
+    assert acct.frames == fresh.frames == 3
+    assert acct.mean_frame.total_uj == pytest.approx(
+        fresh.mean_frame.total_uj)
+    assert acct.kfps_per_watt == pytest.approx(fresh.kfps_per_watt)
+
+
 def test_stream_accounting_tracks_buckets_and_mgnet():
     cfg = get_config("tiny", img_size=96, mgnet=True)
     acct = StreamAccounting(cfg)
@@ -231,9 +307,11 @@ def test_prefetch_preserves_order():
 # engine end to end
 # --------------------------------------------------------------------------
 
-def _smoke_engine(backend: str, **serve_kw) -> ServingEngine:
+def _smoke_engine(backend: str, attn_backend: str = "",
+                  **serve_kw) -> ServingEngine:
     cfg = smoke_variant(get_config("tiny")).with_(
-        mgnet=True, mgnet_embed=32, mgnet_heads=2, matmul_backend=backend)
+        mgnet=True, mgnet_embed=32, mgnet_heads=2, matmul_backend=backend,
+        attn_backend=attn_backend)
     sc = ServingConfig(microbatch=4, chunk=8, mask_refresh=8, **serve_kw)
     return ServingEngine(cfg, sc, n_classes=8, seed=0)
 
@@ -266,6 +344,45 @@ def test_engine_pallas_serving_path():
     res = eng.run(stream, n_frames=16)
     assert res.frames >= 16
     assert sorted(res.predictions) == list(range(res.frames))
+
+
+def test_engine_fused_flash_serving_path():
+    """The tentpole path: int8 Pallas matmul backend + fused RoI-masked
+    flash attention core, streaming end to end — predicting (nearly) the
+    same classes as the xla attention core. The two dataflows agree only
+    to reassociation noise, so a near-tied frame may legitimately flip:
+    require >= 90% class agreement, not bitwise equality."""
+    stream = VideoStream(img_size=32, patch=8, cut_every=16)
+    res_f = _smoke_engine("photonic_pallas", attn_backend="flash").run(
+        stream, n_frames=16)
+    assert res_f.frames >= 16
+    assert sorted(res_f.predictions) == list(range(res_f.frames))
+    res_x = _smoke_engine("photonic_pallas").run(stream, n_frames=16)
+    agree = sum(res_f.predictions[i] == res_x.predictions[i]
+                for i in res_f.predictions) / len(res_f.predictions)
+    assert agree >= 0.9, (agree, res_f.predictions, res_x.predictions)
+
+
+def test_engine_one_shape_mode_matches_bucketed():
+    """Fixed-sensor-buffer (one-shape) serving: every encode at the ladder
+    cap with a static packed kept-count. Gating stats and bucket routing
+    are identical to the gathered mode; predictions agree to the
+    masked-vs-gathered parity contract (>= 90% on a float backend)."""
+    stream = VideoStream(img_size=32, patch=8, cut_every=16)
+    res_g = _smoke_engine("bf16").run(stream, n_frames=16)
+    res_o = _smoke_engine("bf16", one_shape=True).run(stream, n_frames=16)
+    assert res_o.frames == res_g.frames
+    assert res_o.bucket_hits == res_g.bucket_hits
+    assert res_o.scored_frames == res_g.scored_frames
+    assert sorted(res_o.predictions) == list(range(res_o.frames))
+    agree = sum(res_o.predictions[i] == res_g.predictions[i]
+                for i in res_g.predictions) / len(res_g.predictions)
+    assert agree >= 0.9, (agree, res_o.predictions, res_g.predictions)
+    # accelerator-model energy is identical: the packed prefix lets the
+    # static schedule stream only the k live rows, exactly like a gather
+    # (the cap-size host FFN is a functional-sim artifact)
+    assert res_o.mean_frame_uj == pytest.approx(res_g.mean_frame_uj)
+    assert res_o.kfps_per_watt == pytest.approx(res_g.kfps_per_watt)
 
 
 def test_engine_force_bucket_pins_routing():
