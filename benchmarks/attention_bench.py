@@ -28,38 +28,21 @@ serving engine numbers they share a hot path with.
 from __future__ import annotations
 
 import json
-import math
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import interleaved_best as _interleaved_best
 from repro.configs.opto_vit import get_config
 from repro.core.backend import ExecPolicy, attend
 from repro.kernels.flash_attention import flash_attention_masked
 
-TRIALS = 9
 BATCH = 16                      # serving_bench's tiny-224 micro-batch
 SKIP = 0.5
 SPEEDUP_GATE = 1.3
 OUT_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
-
-
-def _interleaved_best(fns) -> list[float]:
-    """Best-of-TRIALS wall per function, trials interleaved round-robin so
-    transient host load (shared CI runners) penalizes every path equally
-    instead of whichever one it happened to land on."""
-    for fn, args in fns:
-        fn(*args).block_until_ready()      # compile + warm
-    best = [math.inf] * len(fns)
-    for _ in range(TRIALS):
-        for i, (fn, args) in enumerate(fns):
-            t0 = time.perf_counter()
-            fn(*args).block_until_ready()
-            best[i] = min(best[i], time.perf_counter() - t0)
-    return best
 
 
 _XLA = ExecPolicy()                          # attn_backend "" -> "xla"

@@ -2,6 +2,9 @@
 
 from __future__ import annotations
 
+import math
+import time
+
 from repro.configs.opto_vit import get_config
 from repro.core.energy import (EnergyReport, accumulate_matmuls,
                                energy_of_stats, latency_of_stats)
@@ -9,6 +12,22 @@ from repro.models.vit import vit_matmul_shapes
 
 VARIANTS = ("tiny", "small", "base", "large")
 IMG_SIZES = (96, 224)
+
+
+def interleaved_best(fns, trials: int = 9) -> list[float]:
+    """Best-of-``trials`` wall per (fn, args) pair, trials interleaved
+    round-robin so transient host load (shared CI runners) penalizes every
+    path equally instead of whichever one it happened to land on. Each fn
+    is called once up front to compile + warm."""
+    for fn, args in fns:
+        fn(*args).block_until_ready()
+    best = [math.inf] * len(fns)
+    for _ in range(trials):
+        for i, (fn, args) in enumerate(fns):
+            t0 = time.perf_counter()
+            fn(*args).block_until_ready()
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
 
 
 def nonlin_elems(cfg, n_tokens: int) -> int:

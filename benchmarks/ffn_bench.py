@@ -1,0 +1,159 @@
+"""Fused int8 FFN benchmark (the serving hot path's GELU-MLP core).
+
+The composed path runs the encoder MLP as two independent
+``photonic_matmul_prequant`` dispatches with a float GELU round-trip
+between them; on the CPU host those matmuls execute through the Pallas
+*interpreter* — a correctness emulator, not a perf path — and the
+``(M, d_ff)`` hidden tensor crosses the dispatch boundary at float
+precision twice. The fused FFN backend (kernels/fused_ffn.py) lowers the
+same int8 contract as one XLA computation (integer dots + in-graph
+requantization, the Pallas-epilogue dequant pinning the reference's
+rounding) and — the serving lever this bench gates — takes the packed
+``live_rows`` skip from ``--one-shape`` mode: fully-pruned token rows are
+statically sliced out of both matmuls, the GELU and the absmax
+reductions, the row-space analogue of the flash kernel skipping pruned KV
+blocks.
+
+Both paths are the *registered* FFN backends, timed exactly as
+``core.backend.ffn`` dispatches them on this host — "xla" (composed, all
+rows: the post-hoc reference never skips) vs "fused" with the static
+packed kept-count at 50% skip (the one-shape serving operating point,
+matching attention_bench's gate scenario).
+
+Gates (tiny-224, 50% skip, batch = one serving micro-batch):
+  1. fused packed >= 1.3x the *fused full-row* path — the pure FLOP-skip
+     win, backend-implementation-neutral (measured ~2-3x);
+  2. fused packed >= 1.3x the composed dispatch — the end-to-end serving
+     claim for the registered hot path (measured far higher on this host,
+     where composed pays the interpreter; on a real TPU both sides run
+     Pallas kernels and the margin is the skip + fusion win).
+
+Numerics first, wall second: the fused full-row output must be
+bit-identical to the composed dispatch, and the packed output
+bit-identical to the composed dispatch on the live slice.
+
+Results merge into BENCH_serving.json under "ffn", next to the attention
+and serving numbers they share a hot path with.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import interleaved_best as _interleaved_best
+from repro.configs.opto_vit import get_config
+from repro.core.backend import ExecPolicy, ffn, prepare_params
+from repro.kernels.fused_ffn import fused_ffn_int8
+from repro.models.ffn import init_mlp
+
+BATCH = 16                      # serving_bench's tiny-224 micro-batch
+SKIP = 0.5
+SPEEDUP_GATE = 1.3
+OUT_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+
+
+_COMPOSED = ExecPolicy(backend="photonic_pallas", quant_bits=8,
+                       training=False)                  # ffn_backend -> xla
+_FUSED = ExecPolicy(backend="photonic_pallas", quant_bits=8,
+                    training=False, ffn_backend="fused")
+
+
+def run() -> dict:
+    print("\n== fused int8 FFN vs composed two-linear photonic dispatch ==")
+    cfg = get_config("tiny", img_size=224)
+    n_tokens = (cfg.img_size // cfg.patch) ** 2 + 1          # 197 incl [cls]
+    kept = int(round((1.0 - SKIP) * n_tokens))
+    d, dff = cfg.d_model, cfg.d_ff
+
+    params = prepare_params(
+        init_mlp(jax.random.PRNGKey(0), d, dff, jnp.float32), bits=8)
+    w1, b1 = params["w1"], params["b1"]
+    w2, b2 = params["w2"], params["b2"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, n_tokens, d))
+
+    def _dispatch(policy, live):
+        return jax.jit(lambda x: ffn(x, w1, b1, w2, b2, policy,
+                                     live_rows=live))
+
+    composed = _dispatch(_COMPOSED, None)
+    fused_full = _dispatch(_FUSED, None)
+    fused_packed = _dispatch(_FUSED, kept)
+
+    # numerics first: the parity contract this module's wall claims stand on
+    ref = composed(x)
+    np.testing.assert_array_equal(
+        np.asarray(fused_full(x)), np.asarray(ref),
+        err_msg="fused full-row FFN must be bit-identical to the composed "
+                "two-linear dispatch")
+    ref_live = jax.jit(lambda x: ffn(x, w1, b1, w2, b2, _COMPOSED))(
+        x[:, :kept])
+    packed = np.asarray(fused_packed(x))
+    np.testing.assert_array_equal(
+        packed[:, :kept], np.asarray(ref_live),
+        err_msg="fused packed FFN must match the composed dispatch on the "
+                "live slice bit-for-bit")
+    assert (packed[:, kept:] == 0).all(), "dead rows must return exact 0"
+
+    t_comp, t_full, t_packed = _interleaved_best([
+        (composed, (x,)),
+        (fused_full, (x,)),
+        (fused_packed, (x,)),
+    ])
+    skip_speedup = t_full / t_packed
+    total_speedup = t_comp / t_packed
+    print(f"  tiny-224, {SKIP:.0%} skip, batch {BATCH}: "
+          f"composed {t_comp * 1e3:7.2f} ms | fused full "
+          f"{t_full * 1e3:7.2f} ms | fused packed {t_packed * 1e3:7.2f} ms")
+    print(f"  packed-skip win (fused full -> packed): {skip_speedup:.2f}x; "
+          f"vs composed dispatch: {total_speedup:.2f}x "
+          f"(composed pays the interpret emulator on this host)")
+
+    # the TPU kernel through the interpret emulator — correctness-only;
+    # held to the one-quant-step kernel tolerance (its body may FMA the
+    # dequant+bias chain — kernels/fused_ffn.py "Parity contract")
+    kern = jax.jit(lambda x: fused_ffn_int8(
+        x, w1.wq, w1.scale.reshape(-1), b1, w2.wq, w2.scale.reshape(-1), b2,
+        live_rows=kept, interpret=True))
+    np.testing.assert_allclose(np.asarray(kern(x)), packed,
+                               rtol=1e-2, atol=1e-2,
+                               err_msg="Pallas fused-FFN kernel drifted "
+                                       "off the XLA twin")
+    (t_kern,) = _interleaved_best([(kern, (x,))])
+    print(f"  pallas kernel (interpret emulator, not a perf path): "
+          f"{t_kern * 1e3:7.2f} ms")
+
+    payload = {
+        "config": "tiny-224", "batch": BATCH, "skip": SKIP,
+        "n_tokens": n_tokens, "kept": kept, "d": d, "d_ff": dff,
+        "composed_ms": t_comp * 1e3,
+        "fused_full_ms": t_full * 1e3,
+        "fused_packed_ms": t_packed * 1e3,
+        "pallas_interpret_ms": t_kern * 1e3,
+        "skip_speedup": skip_speedup,
+        "speedup": total_speedup,
+    }
+    merged = {}
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            merged = json.load(f)
+    merged["ffn"] = payload
+    with open(OUT_JSON, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"  wrote {OUT_JSON} [ffn]")
+
+    assert skip_speedup >= SPEEDUP_GATE, (
+        f"fused FFN packed-skip must beat its own full-row path by "
+        f">= {SPEEDUP_GATE}x at {SKIP:.0%} skip; measured {skip_speedup:.2f}x")
+    assert total_speedup >= SPEEDUP_GATE, (
+        f"fused FFN must beat the composed two-linear dispatch by "
+        f">= {SPEEDUP_GATE}x at {SKIP:.0%} skip; measured {total_speedup:.2f}x")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

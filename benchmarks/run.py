@@ -12,9 +12,10 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (attention_bench, bench_backend_cache, fig8_energy,
-                        fig9_latency, fig10_11_mgnet, roofline_table,
-                        serving_bench, table1_qat, table4_kfps)
+from benchmarks import (attention_bench, bench_backend_cache, ffn_bench,
+                        fig8_energy, fig9_latency, fig10_11_mgnet,
+                        roofline_table, serving_bench, table1_qat,
+                        table4_kfps)
 
 ALL = {
     "fig8": fig8_energy.run,
@@ -26,6 +27,9 @@ ALL = {
     "cache": bench_backend_cache.run,
     "serving": serving_bench.run,
     "attention": attention_bench.run,
+    # the fused-FFN gate merges into BENCH_serving.json under "ffn" (same
+    # pattern as attention_bench) so the perf trajectory stays in one file
+    "ffn": ffn_bench.run,
 }
 
 

@@ -96,6 +96,10 @@ class ArchConfig:
     #                                      (materialized scores) | flash
     #                                      (fused RoI-masked Pallas kernel,
     #                                      core/backend.py ATTN_BACKENDS)
+    ffn_backend: str = ""                # GELU-MLP dispatch: "" -> xla
+    #                                      (composed two-linear) | fused
+    #                                      (fused int8 photonic FFN kernel,
+    #                                      core/backend.py FFN_BACKENDS)
 
     # perf-hillclimb knobs (EXPERIMENTS.md §Perf; all default to the
     # paper-faithful baseline behaviour)

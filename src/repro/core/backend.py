@@ -41,6 +41,23 @@ every MHSA dataflow funnels through ``attend``, dispatching between
 selected by ``ExecPolicy.attn_backend`` (ArchConfig.attn_backend). The two
 backends agree to streaming-softmax reassociation noise (enforced per
 dataflow by tests/test_differential.py).
+
+The GELU-MLP has a third registry (``FFN_BACKENDS``) behind the same
+policy object — ``ExecPolicy.ffn_backend`` / ``ArchConfig.ffn_backend``:
+
+    xla     composed two-``linear`` dispatch with the float GELU
+            round-trip between them — the reference dataflow, runs on
+            every matmul backend
+    fused   the fused int8 photonic FFN (kernels/fused_ffn.py): w1-matmul
+            + bias + GELU + requant + w2-matmul in one kernel, the
+            (B, S, d_ff) hidden state never reaching HBM; packed
+            ``live_rows`` skips fully-pruned token rows. Requires the
+            int8 Pallas matmul backend + quantize-once cached w1/w2 at
+            one bit width — anything else falls back to the composed
+            dispatch (same auto-fallback contract as the fused MHSA hot
+            path). Bit-identical to ``xla`` where both run.
+
+``ffn`` is the dispatch point ``models/ffn.py::mlp`` funnels through.
 """
 
 from __future__ import annotations
@@ -64,9 +81,13 @@ __all__ = [
     "register_attention_backend",
     "get_attention_backend",
     "available_attention_backends",
+    "register_ffn_backend",
+    "get_ffn_backend",
+    "available_ffn_backends",
     "matmul",
     "linear",
     "attend",
+    "ffn",
     "int_accumulate_exact",
     "int_accumulate_sim",
     "int_accumulate_pallas",
@@ -81,18 +102,19 @@ class ExecPolicy:
 
     ``backend`` names a registry entry explicitly; when empty the legacy
     flags resolve it: photonic -> photonic_sim, quant_bits -> qat, else bf16.
-    ``attn_backend`` names an attention-core registry entry ("" -> xla).
+    ``attn_backend`` names an attention-core registry entry ("" -> xla);
+    ``ffn_backend`` an FFN registry entry ("" -> xla).
     ``interpret`` runs Pallas kernels in interpreter mode (CPU hosts); set
     False on a real TPU deployment.
     """
 
     __slots__ = ("quant_bits", "photonic", "training", "dot_out_native",
-                 "backend", "interpret", "attn_backend")
+                 "backend", "interpret", "attn_backend", "ffn_backend")
 
     def __init__(self, quant_bits: int = 0, photonic: bool = False,
                  training: bool = True, dot_out_native: bool = False,
                  backend: str = "", interpret: bool = True,
-                 attn_backend: str = ""):
+                 attn_backend: str = "", ffn_backend: str = ""):
         self.quant_bits = quant_bits
         self.photonic = photonic
         self.training = training
@@ -100,6 +122,7 @@ class ExecPolicy:
         self.backend = backend
         self.interpret = interpret
         self.attn_backend = attn_backend
+        self.ffn_backend = ffn_backend
 
     @staticmethod
     def from_cfg(cfg, training: bool = True) -> "ExecPolicy":
@@ -108,7 +131,8 @@ class ExecPolicy:
                           getattr(cfg, "dot_out_native", False),
                           getattr(cfg, "matmul_backend", "") or "",
                           getattr(cfg, "pallas_interpret", True),
-                          getattr(cfg, "attn_backend", "") or "")
+                          getattr(cfg, "attn_backend", "") or "",
+                          getattr(cfg, "ffn_backend", "") or "")
 
     def resolve_backend(self) -> str:
         if self.backend:
@@ -122,12 +146,25 @@ class ExecPolicy:
     def resolve_attn_backend(self) -> str:
         return self.attn_backend or "xla"
 
+    def resolve_ffn_backend(self) -> str:
+        return self.ffn_backend or "xla"
+
     def is_photonic(self) -> bool:
         return self.resolve_backend().startswith("photonic")
+
+    def fingerprint(self) -> tuple:
+        """Hashable identity of every dispatch-relevant knob — the jit
+        cache key for policy-closing compiled entry points (models/vit.py
+        keys its single-jit fused encoder on this)."""
+        return (self.resolve_backend(), self.resolve_attn_backend(),
+                self.resolve_ffn_backend(), self.quant_bits,
+                bool(self.interpret), bool(self.training),
+                bool(self.dot_out_native))
 
     def __repr__(self):
         return (f"ExecPolicy(backend={self.resolve_backend()!r}, "
                 f"attn={self.resolve_attn_backend()!r}, "
+                f"ffn={self.resolve_ffn_backend()!r}, "
                 f"bits={self.quant_bits}, training={self.training})")
 
 
@@ -539,3 +576,90 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return get_attention_backend(p.resolve_attn_backend())(q, k, v, p,
                                                            mask, kv_len,
                                                            scale)
+
+
+# --------------------------------------------------------------------------
+# FFN registry (w1 -> GELU -> w2 under one dispatch point)
+# --------------------------------------------------------------------------
+
+FFN_BACKENDS: dict[str, Callable] = {}
+
+
+def register_ffn_backend(name: str):
+    def deco(fn):
+        FFN_BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def get_ffn_backend(name: str) -> Callable:
+    try:
+        return FFN_BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown ffn backend {name!r}; "
+                       f"available: {available_ffn_backends()}") from None
+
+
+def available_ffn_backends() -> tuple[str, ...]:
+    return tuple(sorted(FFN_BACKENDS))
+
+
+@register_ffn_backend("xla")
+def _ffn_xla(x, w1, b1, w2, b2, p: ExecPolicy, live_rows):
+    """Composed reference dataflow: two independent ``linear`` dispatches
+    with the float GELU round-trip between them — the hidden (B, S, d_ff)
+    activation crosses the dispatch boundary at float precision twice.
+    Runs on every matmul backend; exactly the pre-registry mlp numerics.
+    ``live_rows`` is ignored — this backend is the post-hoc reference, it
+    never skips (the same contract as the xla attention backend)."""
+    from repro.distributed.sharding import shard   # lazy: keeps core free
+    #                                                of a launch-layer dep
+    h = linear(x, w1, b1, policy=p)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "batch", "seq", "mlp")
+    return linear(h, w2, b2, policy=p)
+
+
+def _fused_ffn_eligible(w1, w2, p: ExecPolicy) -> bool:
+    """True when the block can take the fused int8 FFN kernel: int8 Pallas
+    matmul backend + both weights quantize-once cached at one (<= 8 bit)
+    width — mirroring ``_fused_prequant_eligible`` for the MHSA block."""
+    return (p.resolve_backend() == "photonic_pallas"
+            and isinstance(w1, QuantizedWeight)
+            and isinstance(w2, QuantizedWeight)
+            and w1.ndim == 2 and w2.ndim == 2
+            and w1.bits == w2.bits and w1.bits <= 8)
+
+
+@register_ffn_backend("fused")
+def _ffn_fused(x, w1, b1, w2, b2, p: ExecPolicy, live_rows):
+    """Fused int8 photonic FFN (kernels/fused_ffn.py): both matmuls, the
+    bias adds, the GELU and the hidden requantization run in one kernel
+    over the cached weight tiles, the hidden state staying in VMEM. A
+    static ``live_rows`` (one-shape serving mode) drops fully-pruned
+    token rows before any FLOP, returning exact zeros for them (activation
+    scales then reduce over live rows only — the packed-skip contract).
+    Falls back to the composed dispatch when the weights are not cached
+    int8 or the matmul backend is not the Pallas kernel."""
+    if not _fused_ffn_eligible(w1, w2, p):
+        return _ffn_xla(x, w1, b1, w2, b2, p, live_rows)
+    from repro.kernels.fused_ffn import fused_ffn   # lazy: pulls in pallas
+
+    return fused_ffn(x, w1.wq, w1.scale.reshape(-1), b1,
+                     w2.wq, w2.scale.reshape(-1), b2, bits=w1.bits,
+                     live_rows=live_rows, interpret=p.interpret)
+
+
+def ffn(x: jnp.ndarray, w1, b1: jnp.ndarray, w2, b2: jnp.ndarray,
+        policy: ExecPolicy | None = None, *,
+        live_rows: int | None = None) -> jnp.ndarray:
+    """y = gelu(x @ w1 + b1) @ w2 + b2 under the active execution policy.
+
+    x (..., n, d_in); w1 (d_in, d_ff) / w2 (d_ff, d_out) raw arrays or
+    cached ``QuantizedWeight``s. ``live_rows`` statically prunes the token
+    axis on skipping backends (key j live iff j < live_rows — the packed
+    one-shape serving layout); the xla reference computes every row.
+    """
+    p = policy or _DEFAULT
+    return get_ffn_backend(p.resolve_ffn_backend())(x, w1, b1, w2, b2, p,
+                                                    live_rows)

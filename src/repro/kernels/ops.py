@@ -20,10 +20,12 @@ from repro.core import quant
 from repro.kernels.flash_attention import (flash_attention,
                                            fused_masked_attention)
 from repro.kernels.flash_decode import flash_decode
+from repro.kernels.fused_ffn import fused_ffn
 from repro.kernels.photonic_matmul import photonic_matmul_int8
 
 __all__ = ["photonic_matmul", "photonic_matmul_prequant", "fused_attention",
-           "fused_roi_attention_prequant", "flash_decode", "pad_to"]
+           "fused_roi_attention_prequant", "fused_ffn", "flash_decode",
+           "pad_to"]
 
 
 def pad_to(x, mult, axis):

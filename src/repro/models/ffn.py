@@ -1,10 +1,18 @@
-"""Feed-forward blocks: SwiGLU (LM default) and GELU-MLP (ViT/Whisper)."""
+"""Feed-forward blocks: SwiGLU (LM default) and GELU-MLP (ViT/Whisper).
+
+The GELU-MLP routes through ``core.backend.ffn`` — the FFN backend
+registry (xla composed two-linear | fused int8 photonic kernel, selected
+by ``ArchConfig.ffn_backend`` / ``ExecPolicy.ffn_backend``) — so the
+serving hot path can collapse both matmuls, the GELU and the hidden
+requantization into one kernel without the callers changing.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import ffn as ffn_dispatch
 from repro.distributed.sharding import shard
 from repro.models.layers import ExecPolicy, he_init, linear
 
@@ -45,8 +53,16 @@ def mlp_logical_axes() -> dict:
             "w2": ("p_mlp", "p_embed"), "b2": ("p_embed",)}
 
 
-def mlp(params: dict, x: jnp.ndarray, policy: ExecPolicy | None = None):
-    h = linear(x, params["w1"], params["b1"], policy=policy)
-    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
-    h = shard(h, "batch", "seq", "mlp")
-    return linear(h, params["w2"], params["b2"], policy=policy)
+def mlp(params: dict, x: jnp.ndarray, policy: ExecPolicy | None = None,
+        live_rows: int | None = None):
+    """x (..., n, d) -> (..., n, d) through the FFN backend registry.
+
+    ``live_rows`` is the packed one-shape serving hint: a static live
+    token count that skipping backends (``ffn_backend="fused"``) use to
+    drop fully-pruned rows before any FLOP (dead rows return exact 0, so
+    the residual add leaves their stream state untouched); the composed
+    xla backend ignores it.
+    """
+    return ffn_dispatch(x, params["w1"], params["b1"],
+                        params["w2"], params["b2"], policy,
+                        live_rows=live_rows)

@@ -11,6 +11,17 @@ Standard ViT (Dosovitskiy et al.) with the paper's co-design hooks:
     scores | fused RoI-masked flash Pallas kernel, selected by
     ArchConfig.attn_backend); with the int8 Pallas matmul backend + cached
     weights the whole MHSA block takes the one-jit serving hot path,
+  * every GELU-MLP routes through ``core.backend.ffn`` -> the FFN registry
+    (xla composed two-linear | fused int8 photonic FFN kernel, selected by
+    ArchConfig.ffn_backend); in one-shape serving mode the encoder threads
+    the static packed live-token count into the FFN so fully-pruned rows
+    skip both matmuls, the GELU and the requantization,
+  * on the fully-fused serving point (photonic_pallas + flash + fused with
+    uniform cached bits) ``encode_tokens`` routes through one cached jit:
+    fused attention + fused FFN + both residual adds/LayerNorms compose
+    into a single jitted per-layer step scanned over the stacked layer
+    weights — the encoder costs one dispatch total instead of ~4 per
+    layer, computing bit-identical numbers to the composed dispatch,
   * optional Eq. 2 decomposed attention dataflow (attn_impl="decomposed"),
   * optional MGNet RoI pruning: patches are scored by MGNet and only the
     top-k (static budget = ceil(keep_ratio * N)) enter encoder block 0 —
@@ -32,11 +43,12 @@ from repro.core.decomposed_attention import mhsa_decomposed, mhsa_standard
 from repro.core.mgnet import MGNetConfig, mgnet_scores, patchify
 from repro.distributed.sharding import shard
 from repro.models import ffn as ffn_mod
-from repro.models.layers import ExecPolicy, he_init, layernorm, linear
+from repro.models.layers import (ExecPolicy, QuantizedWeight, he_init,
+                                 layernorm, linear)
 
 __all__ = ["init_vit", "vit_logical_axes", "forward_vit", "embed_patches",
-           "encode_tokens", "forward_vit_tokens", "forward_vit_masked",
-           "vit_matmul_shapes"]
+           "encode_tokens", "encoder_layer_step", "forward_vit_tokens",
+           "forward_vit_masked", "vit_matmul_shapes"]
 
 
 def _n_patches(cfg):
@@ -115,6 +127,104 @@ def embed_patches(params: dict, images: jnp.ndarray, cfg: ArchConfig,
     return x + params["pos"][:, 1: x.shape[1] + 1]
 
 
+def encoder_layer_step(carry: jnp.ndarray, lp: dict, cfg: ArchConfig,
+                       policy: ExecPolicy,
+                       mask: jnp.ndarray | None = None,
+                       attn_kv: int | None = None,
+                       ffn_live: int | None = None) -> jnp.ndarray:
+    """One encoder layer: LN -> MHSA -> residual -> LN -> FFN -> residual.
+
+    ``lp`` is one layer's param slice (what ``lax.scan`` hands the body).
+    On the fully-fused serving point this whole step is two kernel entries
+    (``fused_roi_attention_prequant`` + the fused FFN) plus the norms and
+    residual adds; ``ffn_live`` threads the packed live-row count so the
+    fused FFN skips dead token rows the same way the flash kernel skips
+    pruned KV blocks.
+    """
+    h = layernorm(carry, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+    if cfg.attn_impl == "decomposed":
+        o = mhsa_decomposed(h, lp["attn"], cfg.n_heads, policy, mask,
+                            attn_kv)
+    else:
+        o = mhsa_standard(h, lp["attn"], cfg.n_heads, policy, mask,
+                          attn_kv)
+    carry = carry + o.astype(carry.dtype)
+    h2 = layernorm(carry, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
+    return carry + ffn_mod.mlp(lp["ffn"], h2, policy, live_rows=ffn_live)
+
+
+def _encode_tokens_impl(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
+                        policy: ExecPolicy,
+                        patch_mask: jnp.ndarray | None,
+                        kv_len: int | None) -> jnp.ndarray:
+    b, _, d = tokens.shape
+    cls = jnp.broadcast_to(params["cls"], (b, 1, d)) + params["pos"][:, :1]
+    x = jnp.concatenate([cls.astype(tokens.dtype), tokens], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    mask = None
+    if patch_mask is not None:
+        mask = jnp.concatenate(
+            [jnp.ones((b, 1), patch_mask.dtype), patch_mask], axis=1)
+    attn_kv = None if kv_len is None else int(kv_len) + 1   # + live [cls]
+    # the packed live-row hint for skipping FFN backends: in one-shape
+    # mode the first kv_len patch rows (+ cls) are the only live ones —
+    # the same static count the flash attention backend skips with
+    ffn_live = attn_kv
+
+    def body(carry, lp):
+        return encoder_layer_step(carry, lp, cfg, policy, mask, attn_kv,
+                                  ffn_live), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["blocks"])
+    x = layernorm(x, params["final_ln_g"], params["final_ln_b"], cfg.norm_eps)
+    return linear(x[:, 0], params["head"], policy=policy)
+
+
+def _fused_encoder_eligible(params: dict, cfg: ArchConfig,
+                            policy: ExecPolicy) -> bool:
+    """True when the whole encoder can take the single-jit serving hot
+    path: int8 Pallas matmuls + flash attention + fused FFN, standard
+    dataflow, and every per-layer matmul weight quantize-once cached at
+    one bit width per fused entry (mixed-bits caches fall back to the
+    composed dispatch, mirroring ``_fused_prequant_eligible``)."""
+    if not (policy.resolve_backend() == "photonic_pallas"
+            and policy.resolve_attn_backend() == "flash"
+            and policy.resolve_ffn_backend() == "fused"
+            and cfg.attn_impl == "standard"):
+        return False
+    blocks = params.get("blocks")
+    if not isinstance(blocks, dict):
+        return False
+    try:
+        attn = [blocks["attn"][n] for n in ("wq", "wk", "wv")]
+        ffn_w = [blocks["ffn"][n] for n in ("w1", "w2")]
+    except (KeyError, TypeError):
+        return False
+    if not all(isinstance(w, QuantizedWeight) for w in attn + ffn_w):
+        return False
+    return (len({w.bits for w in attn}) == 1
+            and len({w.bits for w in ffn_w}) == 1
+            and ffn_w[0].bits <= 8)
+
+
+# (cfg, policy fingerprint, kv_len, has_mask) -> jitted encode entry. The
+# serving engine holds one cfg/policy per stream and the ladder is small,
+# so this stays a handful of entries per process.
+_FUSED_ENCODER_JITS: dict = {}
+
+
+def _fused_encoder_jit(cfg: ArchConfig, policy: ExecPolicy,
+                       kv_len: int | None, has_mask: bool):
+    key = (cfg, policy.fingerprint(), kv_len, has_mask)
+    fn = _FUSED_ENCODER_JITS.get(key)
+    if fn is None:
+        fn = jax.jit(lambda p, t, m: _encode_tokens_impl(p, t, cfg, policy,
+                                                         m, kv_len))
+        _FUSED_ENCODER_JITS[key] = fn
+    return fn
+
+
 def encode_tokens(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
                   policy: ExecPolicy | None = None,
                   patch_mask: jnp.ndarray | None = None,
@@ -128,40 +238,29 @@ def encode_tokens(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
     always kept). ``kv_len`` is the packed alternative for score-ordered
     tokens (one-shape serving mode): only the first ``kv_len`` patch
     tokens are live, a static count the flash attention backend skips the
-    dead tail for. Kept-token activations are identical between a masked
-    dense call and a gathered top-k call because attention is the only
-    cross-token operator in the trunk.
+    dead tail for — and the fused FFN backend skips those rows' FFN tiles.
+    Kept-token activations are identical between a masked dense call and a
+    gathered top-k call because attention is the only cross-token operator
+    in the trunk.
+
+    On the fully-fused serving point (photonic_pallas + flash + fused, all
+    weights cached at uniform bits) the call routes through a cached jit
+    of the whole trunk — fused attention + fused FFN + norms/residuals as
+    one jitted per-layer step scanned over the stacked layer weights, one
+    dispatch total. The jit computes the same graph this function traces
+    everywhere else, so serving callers that wrap their own jit around it
+    simply inline it.
     """
     policy = policy or ExecPolicy.from_cfg(cfg)
     if patch_mask is not None and kv_len is not None:
         raise ValueError("give patch_mask or kv_len, not both")
-    b, _, d = tokens.shape
-    cls = jnp.broadcast_to(params["cls"], (b, 1, d)) + params["pos"][:, :1]
-    x = jnp.concatenate([cls.astype(tokens.dtype), tokens], axis=1)
-    x = shard(x, "batch", "seq", "embed")
-    mask = None
-    if patch_mask is not None:
-        mask = jnp.concatenate(
-            [jnp.ones((b, 1), patch_mask.dtype), patch_mask], axis=1)
-    attn_kv = None if kv_len is None else int(kv_len) + 1   # + live [cls]
-
-    def body(carry, lp):
-        h = layernorm(carry, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
-        if cfg.attn_impl == "decomposed":
-            o = mhsa_decomposed(h, lp["attn"], cfg.n_heads, policy, mask,
-                                attn_kv)
-        else:
-            o = mhsa_standard(h, lp["attn"], cfg.n_heads, policy, mask,
-                              attn_kv)
-        carry = carry + o.astype(carry.dtype)
-        h2 = layernorm(carry, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
-        carry = carry + ffn_mod.mlp(lp["ffn"], h2, policy)
-        return carry, None
-
-    fn = jax.checkpoint(body) if cfg.remat else body
-    x, _ = jax.lax.scan(fn, x, params["blocks"])
-    x = layernorm(x, params["final_ln_g"], params["final_ln_b"], cfg.norm_eps)
-    return linear(x[:, 0], params["head"], policy=policy)
+    if _fused_encoder_eligible(params, cfg, policy):
+        fn = _fused_encoder_jit(cfg, policy,
+                                None if kv_len is None else int(kv_len),
+                                patch_mask is not None)
+        return fn(params, tokens, patch_mask)
+    return _encode_tokens_impl(params, tokens, cfg, policy, patch_mask,
+                               kv_len)
 
 
 def forward_vit(params: dict, images: jnp.ndarray, cfg: ArchConfig,

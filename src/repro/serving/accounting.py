@@ -8,9 +8,20 @@ aggregate divides out to the paper's Table-4 metric: KFPS/W of a pipelined
 accelerator is frames-per-joule / 1000, i.e. 1 / mean-E-frame[mJ] —
 independent of host wall time, which is reported separately as frames/s of
 the functional simulation.
+
+``summary()`` additionally surfaces per-bucket hit/launch counts and warns
+on **dead buckets** — ladder entries no stream frame ever routed to. Every
+ladder entry costs one compiled encode shape (and, in one-shape mode, one
+kv_len-specialized jit), so a bucket with zero hits is pure compile-time
+waste and a signal the ladder fractions need retuning for the stream's
+budget distribution (see README "Bucket-ladder tuning").
 """
 
 from __future__ import annotations
+
+import warnings
+from collections import Counter
+from typing import Iterable
 
 from repro.configs.base import ArchConfig
 from repro.core.energy import (EnergyReport, accumulate_matmuls,
@@ -30,11 +41,18 @@ def _nonlin_elems(cfg: ArchConfig, n_tokens: int) -> int:
 class StreamAccounting:
     """Accumulates per-frame EnergyReports bucket-by-bucket."""
 
-    def __init__(self, cfg: ArchConfig):
+    def __init__(self, cfg: ArchConfig,
+                 ladder_sizes: Iterable[int] | None = None):
         self.cfg = cfg
         self.total = EnergyReport()
         self.frames = 0
         self.scored_frames = 0
+        # per-bucket stream telemetry: frames routed (hits) and encode
+        # launches (the first launch of a bucket is its jit compile)
+        self.ladder_sizes = (tuple(int(k) for k in ladder_sizes)
+                             if ladder_sizes is not None else None)
+        self.bucket_frames: Counter = Counter()
+        self.bucket_launches: Counter = Counter()
         self._per_bucket: dict[int, EnergyReport] = {}
         self._mgnet: EnergyReport | None = None
 
@@ -72,10 +90,48 @@ class StreamAccounting:
     def add_encode(self, bucket: int, n_frames: int) -> None:
         self.total += self._bucket_report(bucket).scaled(n_frames)
         self.frames += n_frames
+        self.bucket_frames[int(bucket)] += n_frames
+        self.bucket_launches[int(bucket)] += 1
 
     def add_mgnet(self, n_invocations: int) -> None:
         self.total += self._mgnet_report().scaled(n_invocations)
         self.scored_frames += n_invocations
+
+    def dead_buckets(self) -> tuple[int, ...]:
+        """Ladder entries no frame was ever routed to (empty when no
+        ladder was registered)."""
+        if self.ladder_sizes is None:
+            return ()
+        return tuple(k for k in self.ladder_sizes
+                     if self.bucket_frames[k] == 0)
+
+    def summary(self) -> str:
+        """Per-bucket hit/launch counts, warning on dead buckets.
+
+        A launch is one encode flush; the first launch of a bucket paid
+        that bucket's jit compile, so ``launches >= 1`` marks the bucket
+        as compiled. Dead buckets compiled nothing *only if* the engine
+        never warmed them — but their ladder slot still constrains
+        routing, so the warning fires either way.
+        """
+        sizes = (self.ladder_sizes if self.ladder_sizes is not None
+                 else tuple(sorted(self.bucket_frames)))
+        parts = []
+        for k in sizes:
+            hits = self.bucket_frames[k]
+            parts.append(f"k={k}: {hits} hits/"
+                         f"{self.bucket_launches[k]} launches")
+        dead = self.dead_buckets()
+        if dead:
+            warnings.warn(
+                f"dead ladder buckets {list(dead)}: no frame routed to "
+                f"them in {self.frames} frames — every ladder entry costs "
+                f"a compiled encode shape, retune the bucket fractions "
+                f"(README 'Bucket-ladder tuning')", stacklevel=2)
+        line = " | ".join(parts) if parts else "no encodes"
+        if dead:
+            line += f"  [dead: {', '.join(f'k={k}' for k in dead)}]"
+        return f"buckets: {line}"
 
     @property
     def mean_frame(self) -> EnergyReport:

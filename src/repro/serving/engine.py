@@ -101,6 +101,7 @@ class StreamResult:
     scored_frames: int = 0
     reused_frames: int = 0
     bucket_hits: dict = field(default_factory=dict)
+    bucket_launches: dict = field(default_factory=dict)  # k -> encode flushes
     kfps_per_watt: float = 0.0
     mean_frame_uj: float = 0.0
     dense_kfps_per_watt: float = 0.0
@@ -190,29 +191,37 @@ class ServingEngine:
         return prefetch_to_device(gen, depth=sc.prefetch_depth,
                                   keys=("frames",))
 
-    def run(self, stream: VideoStream, n_frames: int = 64, start: int = 0,
-            verbose: bool = False) -> StreamResult:
-        """Stream exactly ``n_frames`` frames through the bucketed path.
+    def _drive(self, stream: VideoStream, n_frames: int, start: int,
+               on_chunk, on_drain=None, verbose: bool = False,
+               pending=None, ladder_sizes=None) -> tuple[StreamResult,
+                                                         StreamAccounting]:
+        """The frame loop shared by ``run`` and ``run_dense``: ingest ->
+        RoI-gate (temporal mask reuse) -> per-mode chunk callback ->
+        deferred prediction materialization -> common StreamResult fields.
+
+        ``on_chunk(frames, idxs, valid, scores_np, acct, deferred)`` does
+        the mode-specific encode work (bucket-route-batch or dense) and
+        appends ``(frame_idx_list, logits)`` pairs to ``deferred`` —
+        materialized only after the stream so host pre/post work overlaps
+        device encodes (async dispatch). ``on_drain(acct, deferred)``
+        flushes mode-held state at end of stream; ``pending`` is an
+        optional callable for the verbose status line.
 
         Ingest stays in full ``chunk``-sized transfers (every device shape
-        static); when n_frames is not a chunk multiple, the trailing frames
-        of the last chunk are gated but never routed, encoded, predicted or
-        accounted.
+        static); when n_frames is not a chunk multiple, the trailing
+        frames of the last chunk are gated but never routed, encoded,
+        predicted or accounted (``valid``).
         """
         sc = self.serve_cfg
         limit = start + n_frames
         cache = TemporalMaskCache(sc.mask_refresh, sc.delta_threshold)
-        batcher = MicroBatcher(sc.microbatch)
-        hist = BucketHistogram(self.ladder)
-        acct = StreamAccounting(self.cfg)
+        acct = StreamAccounting(self.cfg, ladder_sizes=ladder_sizes)
         res = StreamResult()
         score_fn = lambda f: self._score(self.params, f)
 
         t0 = time.time()
         done = 0
-        deferred = []     # (frame_idx list, logits device array) per flush —
-        #                   materialized after the stream so host pre/post
-        #                   work overlaps device encodes (async dispatch)
+        deferred = []     # (frame_idx list, per-frame argmax device array)
         for ci, batch in enumerate(self._ingest(stream, n_frames, start)):
             frames = batch["frames"]                       # device view
             idxs = batch["frame_idx"]
@@ -220,13 +229,45 @@ class ServingEngine:
             scores_np, n_scored = cache.gate(batch["frames_host"], idxs,
                                              score_fn, eligible=valid)
             acct.add_mgnet(n_scored)
+            on_chunk(frames, idxs, valid, scores_np, acct, deferred)
+            done += int(valid.sum())
+            if verbose and (ci + 1) % sc.report_every == 0:
+                dt = time.time() - t0
+                print(f"[serve] {done:>5d} frames  {done / dt:7.1f} frames/s  "
+                      f"{acct.kfps_per_watt:7.1f} KFPS/W  "
+                      f"(mgnet reuse {cache.reuse_rate:.0%}, "
+                      f"pending {pending() if pending else 0})")
 
+        if on_drain is not None:
+            on_drain(acct, deferred)
+        for fidx, preds in deferred:
+            for fi, p in zip(fidx, np.asarray(preds)):
+                if int(fi) < limit:
+                    res.predictions[int(fi)] = int(p)
+        res.wall_s = time.time() - t0
+        res.frames = acct.frames
+        res.scored_frames = cache.scored_frames
+        res.reused_frames = cache.reused_frames
+        res.bucket_launches = dict(acct.bucket_launches)
+        res.kfps_per_watt = acct.kfps_per_watt
+        res.mean_frame_uj = acct.mean_frame.total_uj
+        res.dense_kfps_per_watt = acct.dense_baseline_kfps_per_watt()
+        return res, acct
+
+    def run(self, stream: VideoStream, n_frames: int = 64, start: int = 0,
+            verbose: bool = False) -> StreamResult:
+        """Stream exactly ``n_frames`` frames through the bucketed path."""
+        sc = self.serve_cfg
+        batcher = MicroBatcher(sc.microbatch)
+        hist = BucketHistogram(self.ladder)
+
+        def on_chunk(frames, idxs, valid, scores_np, acct, deferred):
             toks = self._embed(self.params, frames)        # (C, N, d)
             # budget decision on host: scores are already host-resident
             # from the mask cache, and mask_budget stays in numpy for them
-            if self.serve_cfg.force_bucket > 0:
+            if sc.force_bucket > 0:
                 pin = self.ladder.route(
-                    int(round(self.serve_cfg.force_bucket * self.n_patches)))
+                    int(round(sc.force_bucket * self.n_patches)))
                 routes = np.full(frames.shape[0], pin)
             else:
                 routes = self.ladder.route_many(
@@ -247,27 +288,17 @@ class ServingEngine:
                 for flush in batcher.push_many(
                         k, group, [int(idxs[i]) for i in sel]):
                     self._finish(flush, acct, deferred)
-            done += int(valid.sum())
-            if verbose and (ci + 1) % sc.report_every == 0:
-                dt = time.time() - t0
-                print(f"[serve] {done:>5d} frames  {done / dt:7.1f} frames/s  "
-                      f"{acct.kfps_per_watt:7.1f} KFPS/W  "
-                      f"(mgnet reuse {cache.reuse_rate:.0%}, "
-                      f"pending {batcher.pending})")
 
-        for flush in batcher.drain():
-            self._finish(flush, acct, deferred)
-        for fidx, logits in deferred:
-            for fi, p in zip(fidx, np.asarray(logits)):
-                res.predictions[fi] = int(p)
-        res.wall_s = time.time() - t0
-        res.frames = acct.frames
-        res.scored_frames = cache.scored_frames
-        res.reused_frames = cache.reused_frames
+        def on_drain(acct, deferred):
+            for flush in batcher.drain():
+                self._finish(flush, acct, deferred)
+
+        res, acct = self._drive(stream, n_frames, start, on_chunk, on_drain,
+                                verbose, pending=lambda: batcher.pending,
+                                ladder_sizes=self.ladder.sizes)
         res.bucket_hits = hist.as_dict()
-        res.kfps_per_watt = acct.kfps_per_watt
-        res.mean_frame_uj = acct.mean_frame.total_uj
-        res.dense_kfps_per_watt = acct.dense_baseline_kfps_per_watt()
+        if verbose:
+            print("[serve]", acct.summary())
         return res
 
     def _finish(self, flush, acct: StreamAccounting, deferred: list):
@@ -279,8 +310,9 @@ class ServingEngine:
         # the packed prefix is contiguous, so the accelerator's static
         # schedule streams only the k live rows through every core (unlike
         # scattered mask-mode, which cannot pack and is billed at N — see
-        # run_dense). The host-side cap-size FFN is a functional-sim
-        # artifact, visible in frames/s but not in the accelerator model.
+        # run_dense). The host-side cap-size compute is a functional-sim
+        # artifact (and with --ffn-backend fused the FFN drops it too: the
+        # packed kv_len prunes dead token rows out of both matmuls).
         acct.add_encode(flush.bucket, flush.n_real)
         deferred.append((flush.frame_idx,
                          jnp.argmax(logits[:flush.n_real], -1)))
@@ -291,39 +323,16 @@ class ServingEngine:
         encoded at all N patches with the RoI mask applied on the attention
         key axis — compute is *not* reduced. The bucketed path's frames/s
         win over this is the serving subsystem's raison d'etre."""
-        sc = self.serve_cfg
-        limit = start + n_frames
-        cache = TemporalMaskCache(sc.mask_refresh, sc.delta_threshold)
-        acct = StreamAccounting(self.cfg)
-        res = StreamResult()
-        score_fn = lambda f: self._score(self.params, f)
 
-        t0 = time.time()
-        deferred = []
-        for batch in self._ingest(stream, n_frames, start):
-            frames = batch["frames"]                       # device view
-            idxs = batch["frame_idx"]
-            valid = idxs < limit
-            scores_np, n_scored = cache.gate(batch["frames_host"], idxs,
-                                             score_fn, eligible=valid)
-            acct.add_mgnet(n_scored)
+        def on_chunk(frames, idxs, valid, scores_np, acct, deferred):
             mask = (jax.nn.sigmoid(jnp.asarray(scores_np))
                     > self.mcfg.t_reg).astype(jnp.float32)
             logits = self._encode_dense(self.params, frames, mask)
             acct.add_encode(self.n_patches, int(valid.sum()))
             deferred.append((idxs, jnp.argmax(logits, -1)))
-        for fidx, preds in deferred:
-            for fi, p in zip(fidx, np.asarray(preds)):
-                if fi < limit:
-                    res.predictions[int(fi)] = int(p)
-        res.wall_s = time.time() - t0
-        res.frames = acct.frames
-        res.scored_frames = cache.scored_frames
-        res.reused_frames = cache.reused_frames
-        res.bucket_hits = {self.n_patches: acct.frames}
-        res.kfps_per_watt = acct.kfps_per_watt
-        res.mean_frame_uj = acct.mean_frame.total_uj
-        res.dense_kfps_per_watt = acct.dense_baseline_kfps_per_watt()
+
+        res, _ = self._drive(stream, n_frames, start, on_chunk)
+        res.bucket_hits = {self.n_patches: res.frames}
         return res
 
 
@@ -331,7 +340,8 @@ class ServingEngine:
 # CLI
 # --------------------------------------------------------------------------
 
-def _smoke_cfg(backend: str, attn_backend: str = "") -> ArchConfig:
+def _smoke_cfg(backend: str, attn_backend: str = "",
+               ffn_backend: str = "") -> ArchConfig:
     from repro.configs.opto_vit import get_config
     cfg = smoke_variant(get_config("tiny")).with_(
         mgnet=True, mgnet_keep_ratio=0.5, mgnet_embed=32, mgnet_heads=2)
@@ -339,6 +349,8 @@ def _smoke_cfg(backend: str, attn_backend: str = "") -> ArchConfig:
         cfg = cfg.with_(matmul_backend=backend)
     if attn_backend:
         cfg = cfg.with_(attn_backend=attn_backend)
+    if ffn_backend:
+        cfg = cfg.with_(ffn_backend=ffn_backend)
     return cfg
 
 
@@ -353,6 +365,12 @@ def main(argv=None):
     ap.add_argument("--attn-backend", default="", choices=["", "xla", "flash"],
                     help="attention core: xla (materialized scores, default) "
                          "or flash (fused RoI-masked Pallas kernel)")
+    ap.add_argument("--ffn-backend", default="", choices=["", "xla", "fused"],
+                    help="GELU-MLP core: xla (composed two-linear, default) "
+                         "or fused (fused int8 photonic FFN kernel — with "
+                         "photonic_pallas + cached weights the hidden state "
+                         "never leaves VMEM, and --one-shape prunes dead "
+                         "token rows out of both FFN matmuls)")
     ap.add_argument("--frames", type=int, default=64)
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--microbatch", type=int, default=4)
@@ -374,12 +392,13 @@ def main(argv=None):
         raise SystemExit(f"unknown backend {args.backend!r}; "
                          f"choose from {available_backends()}")
     if args.smoke:
-        cfg = _smoke_cfg(args.backend, args.attn_backend)
+        cfg = _smoke_cfg(args.backend, args.attn_backend, args.ffn_backend)
     else:
         from repro.configs.opto_vit import get_config
         cfg = get_config(args.variant, img_size=args.img_size,
                          mgnet=True).with_(matmul_backend=args.backend,
-                                           attn_backend=args.attn_backend)
+                                           attn_backend=args.attn_backend,
+                                           ffn_backend=args.ffn_backend)
 
     serve_cfg = ServingConfig(
         bucket_fractions=tuple(float(f) for f in args.buckets.split(",")),
@@ -390,6 +409,7 @@ def main(argv=None):
     print(f"[serve] {cfg.name} {cfg.img_size}x{cfg.img_size} "
           f"backend={engine.policy.resolve_backend()} "
           f"attn={engine.policy.resolve_attn_backend()} "
+          f"ffn={engine.policy.resolve_ffn_backend()} "
           f"ladder={list(engine.ladder.sizes)} of {engine.n_patches} patches")
 
     stream = VideoStream(img_size=cfg.img_size, patch=cfg.patch,
@@ -410,6 +430,7 @@ def main(argv=None):
             "kfps_per_watt": res.kfps_per_watt,
             "mean_frame_uj": res.mean_frame_uj,
             "bucket_hits": res.bucket_hits,
+            "bucket_launches": res.bucket_launches,
             "scored_frames": res.scored_frames,
             "reused_frames": res.reused_frames,
         }

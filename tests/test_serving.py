@@ -260,6 +260,47 @@ def test_stream_accounting_empty_flushes():
     assert acct.kfps_per_watt == pytest.approx(fresh.kfps_per_watt)
 
 
+def test_accounting_summary_reports_hits_and_launches():
+    cfg = get_config("tiny", img_size=96, mgnet=True)
+    acct = StreamAccounting(cfg, ladder_sizes=(9, 18, 27, 36))
+    acct.add_encode(18, 4)
+    acct.add_encode(18, 2)
+    acct.add_encode(27, 4)
+    with pytest.warns(UserWarning, match="dead ladder buckets"):
+        s = acct.summary()
+    assert "k=18: 6 hits/2 launches" in s
+    assert "k=27: 4 hits/1 launches" in s
+    assert "k=9: 0 hits/0 launches" in s
+    assert "[dead: k=9, k=36]" in s
+    assert acct.dead_buckets() == (9, 36)
+
+
+def test_accounting_summary_no_dead_buckets_no_warning():
+    import warnings as _w
+    cfg = get_config("tiny", img_size=96, mgnet=True)
+    acct = StreamAccounting(cfg, ladder_sizes=(9, 18))
+    acct.add_encode(9, 1)
+    acct.add_encode(18, 1)
+    with _w.catch_warnings():
+        _w.simplefilter("error")             # any warning -> test failure
+        s = acct.summary()
+    assert acct.dead_buckets() == ()
+    assert "dead" not in s
+
+
+def test_accounting_summary_without_ladder():
+    """No registered ladder (the dense driver): summary reports whatever
+    buckets were hit and never warns — a dense run has no ladder to tune."""
+    import warnings as _w
+    cfg = get_config("tiny", img_size=96, mgnet=True)
+    acct = StreamAccounting(cfg)
+    acct.add_encode(36, 5)
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        s = acct.summary()
+    assert "k=36: 5 hits/1 launches" in s
+
+
 def test_stream_accounting_tracks_buckets_and_mgnet():
     cfg = get_config("tiny", img_size=96, mgnet=True)
     acct = StreamAccounting(cfg)
@@ -308,10 +349,10 @@ def test_prefetch_preserves_order():
 # --------------------------------------------------------------------------
 
 def _smoke_engine(backend: str, attn_backend: str = "",
-                  **serve_kw) -> ServingEngine:
+                  ffn_backend: str = "", **serve_kw) -> ServingEngine:
     cfg = smoke_variant(get_config("tiny")).with_(
         mgnet=True, mgnet_embed=32, mgnet_heads=2, matmul_backend=backend,
-        attn_backend=attn_backend)
+        attn_backend=attn_backend, ffn_backend=ffn_backend)
     sc = ServingConfig(microbatch=4, chunk=8, mask_refresh=8, **serve_kw)
     return ServingEngine(cfg, sc, n_classes=8, seed=0)
 
@@ -361,6 +402,44 @@ def test_engine_fused_flash_serving_path():
     agree = sum(res_f.predictions[i] == res_x.predictions[i]
                 for i in res_f.predictions) / len(res_f.predictions)
     assert agree >= 0.9, (agree, res_f.predictions, res_x.predictions)
+
+
+def test_engine_fully_fused_serving_path():
+    """The PR's tentpole path: int8 Pallas matmuls + fused flash attention
+    + fused FFN, the whole encoder one cached jit. Bucketed encodes carry
+    no kv_len, so the fused FFN is bit-identical to the composed dispatch
+    — predictions must match the composed engine exactly."""
+    stream = VideoStream(img_size=32, patch=8, cut_every=16)
+    res_f = _smoke_engine("photonic_pallas", attn_backend="flash",
+                          ffn_backend="fused").run(stream, n_frames=16)
+    assert res_f.frames >= 16
+    assert sorted(res_f.predictions) == list(range(res_f.frames))
+    res_c = _smoke_engine("photonic_pallas", attn_backend="flash").run(
+        stream, n_frames=16)
+    assert res_f.predictions == res_c.predictions
+    assert res_f.bucket_hits == res_c.bucket_hits
+    # per-bucket launch telemetry rides along in the result
+    assert sum(res_f.bucket_launches.values()) > 0
+    assert set(res_f.bucket_launches) <= set(res_f.bucket_hits)
+
+
+def test_engine_one_shape_fused_ffn_path():
+    """One-shape mode on the fully-fused stack: the static per-bucket
+    kv_len prunes FFN rows too (the packed skip), which legitimately
+    changes w8a8 activation scale sets — class agreement >= 90%, same
+    contract as the other cross-dataflow engine comparisons."""
+    stream = VideoStream(img_size=32, patch=8, cut_every=16)
+    res_o = _smoke_engine("photonic_pallas", attn_backend="flash",
+                          ffn_backend="fused", one_shape=True).run(
+        stream, n_frames=16)
+    assert res_o.frames >= 16
+    assert sorted(res_o.predictions) == list(range(res_o.frames))
+    res_g = _smoke_engine("photonic_pallas", attn_backend="flash",
+                          ffn_backend="fused").run(stream, n_frames=16)
+    agree = sum(res_o.predictions[i] == res_g.predictions[i]
+                for i in res_g.predictions) / len(res_g.predictions)
+    assert agree >= 0.9, (agree, res_o.predictions, res_g.predictions)
+    assert res_o.mean_frame_uj == pytest.approx(res_g.mean_frame_uj)
 
 
 def test_engine_one_shape_mode_matches_bucketed():
