@@ -14,8 +14,8 @@ import time
 
 from benchmarks import (attention_bench, bench_backend_cache, ffn_bench,
                         fig8_energy, fig9_latency, fig10_11_mgnet,
-                        roofline_table, serving_bench, table1_qat,
-                        table4_kfps)
+                        multistream_bench, roofline_table, serving_bench,
+                        table1_qat, table4_kfps)
 
 ALL = {
     "fig8": fig8_energy.run,
@@ -30,6 +30,9 @@ ALL = {
     # the fused-FFN gate merges into BENCH_serving.json under "ffn" (same
     # pattern as attention_bench) so the perf trajectory stays in one file
     "ffn": ffn_bench.run,
+    # multi-stream session server vs sequential cold engines ("multistream"
+    # key in BENCH_serving.json)
+    "multistream": multistream_bench.run,
 }
 
 

@@ -1,0 +1,93 @@
+"""Multi-stream session-server demo: a camera fleet on one accelerator.
+
+N synthetic cameras (disjoint scenes, phase-offset starts) are multiplexed
+over one ``StreamServer``:
+
+    per stream:  ingest -> MGNet RoI gate (own temporal mask cache)
+    shared:      prepared weight cache + warm-started per-bucket jit ladder
+                 + cross-stream micro-batch scheduler (per-session fairness,
+                 max-wait deadline) + optional data-mesh sharded encode
+
+The demo prints each session's stream metrics and the aggregate fleet
+throughput, then re-serves stream 0 solo to show the multiplexing is
+prediction-transparent: interleaved serving computes exactly what a
+dedicated single-stream run would (micro-batches are session-pure by
+default, so per-launch w8a8 activation scales never couple streams).
+
+    PYTHONPATH=src python examples/serve_multi_stream.py \\
+        --streams 4 --frames 64 --backend photonic_sim
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.backend import available_backends
+from repro.data.pipeline import video_fleet
+from repro.serving.engine import _smoke_cfg
+from repro.serving.server import ServerConfig, StreamServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, default=4)
+    ap.add_argument("--frames", type=int, default=64)
+    ap.add_argument("--backend", default="photonic_sim",
+                    help=f"matmul backend: {', '.join(available_backends())}")
+    ap.add_argument("--attn-backend", default="",
+                    choices=["", "xla", "flash"])
+    ap.add_argument("--max-wait", type=int, default=0,
+                    help="deadline: pad-flush partial micro-batches after "
+                         "this many scheduling rounds (0 = wait for fill; "
+                         "a firing deadline changes micro-batch composition, "
+                         "so the solo-parity demo below is exact only at 0)")
+    ap.add_argument("--cut-every", type=int, default=48)
+    args = ap.parse_args()
+    if args.backend not in available_backends():
+        raise SystemExit(f"unknown backend {args.backend!r}; "
+                         f"choose from {available_backends()}")
+
+    cfg = _smoke_cfg(args.backend, args.attn_backend)
+    server_cfg = ServerConfig(microbatch=4, chunk=8, mask_refresh=16,
+                              max_wait_chunks=args.max_wait,
+                              warm_start=False)
+    server = StreamServer(cfg, server_cfg, n_classes=8)
+    print(f"[fleet] backend={server.policy.resolve_backend()} "
+          f"ladder={list(server.ladder.sizes)} of {server.n_patches} patches, "
+          f"{args.streams} streams, deadline {args.max_wait} rounds")
+
+    streams = video_fleet(args.streams, img_size=cfg.img_size,
+                          patch=cfg.patch, cut_every=args.cut_every)
+    sessions = [server.add_session(s, n_frames=args.frames, start=16 * i)
+                for i, s in enumerate(streams)]
+
+    warm = server.warm_start()
+    print(f"[fleet] jit ladder warmed in {warm:.2f}s — streams start "
+          "compile-free")
+    results = server.serve(verbose=True)
+    total = sum(r.frames for r in results.values())
+    wall = results[sessions[0].sid].wall_s
+    for s in sessions:
+        print(f"[fleet] cam{s.sid}:", results[s.sid].summary())
+    print(f"[fleet] aggregate {total} frames in {wall:.2f}s -> "
+          f"{total / wall:.1f} frames/s across {args.streams} streams "
+          f"({len(server.flush_log)} micro-batch launches)")
+
+    # multiplexing transparency: stream 0 solo computes the same classes
+    solo_srv = StreamServer(cfg, ServerConfig(
+        microbatch=4, chunk=8, mask_refresh=16, warm_start=False),
+        n_classes=8)
+    solo_sess = solo_srv.add_session(streams[0], n_frames=args.frames,
+                                     start=0)
+    solo = solo_srv.serve()[solo_sess.sid]
+    agree = sum(solo.predictions[i] == results[sessions[0].sid].predictions[i]
+                for i in solo.predictions)
+    print(f"[fleet] cam0 interleaved vs solo: {agree}/{len(solo.predictions)}"
+          " identical predictions (session-pure micro-batches keep "
+          "multiplexing out of the numerics)")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,7 @@ import numpy as np
 from repro.distributed.sharding import ShardingCtx, named_sharding
 
 __all__ = ["TokenStream", "ImageStream", "FrameStream", "VideoStream",
-           "prefetch_to_device", "lm_batch_specs"]
+           "video_fleet", "prefetch_to_device", "lm_batch_specs"]
 
 
 def _host_rng(seed: int, step: int) -> np.random.Generator:
@@ -195,6 +195,28 @@ class VideoStream:
         while True:
             yield self.frames_at(start, chunk)
             start += chunk
+
+
+def video_fleet(n_streams: int, img_size: int, patch: int = 16,
+                seed: int = 0, cut_every: int = 32, noise: float = 0.05,
+                speed: float = 1.5) -> list[VideoStream]:
+    """``n_streams`` independent synthetic cameras for multi-stream serving.
+
+    Stream i draws its scenes from ``seed + i`` (disjoint object
+    trajectories, uncorrelated cuts), so a fleet models genuinely
+    different sensors — not N copies of one feed. Each stream stays a pure
+    function of (its seed, frame_idx): any fleet member is bit-identically
+    re-servable solo, which is what the interleaved-vs-sequential parity
+    contract in tests/test_multistream.py leans on. Phase-offset serving
+    (stream i starting at frame ``i * phase``) is expressed through the
+    session's ``start``, not here — the same stream object serves any
+    window of itself.
+    """
+    if n_streams < 1:
+        raise ValueError("n_streams must be >= 1")
+    return [VideoStream(img_size=img_size, patch=patch, seed=seed + i,
+                        cut_every=cut_every, noise=noise, speed=speed)
+            for i in range(n_streams)]
 
 
 def prefetch_to_device(it: Iterator[dict], depth: int = 2,

@@ -21,7 +21,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardingCtx", "use_sharding", "current_ctx", "shard", "logical_spec",
-           "DEFAULT_RULES", "MULTIPOD_RULES", "named_sharding", "param_spec"]
+           "DEFAULT_RULES", "MULTIPOD_RULES", "DATA_RULES", "named_sharding",
+           "param_spec"]
 
 # Default logical->mesh axis rules, single-pod (data, model) mesh.
 # FSDP: parameter "embed"/"mlp_in" dims shard over data; TP dims over model.
@@ -53,6 +54,13 @@ MULTIPOD_RULES.update({
     "batch": ("pod", "data"),
     "p_embed": ("pod", "data"),
 })
+
+# Pure data parallelism over a 1-D ("data",) mesh: only the batch axis
+# shards, every other logical axis replicates. This is the serving
+# server's mesh (launch.mesh.make_serving_mesh) — micro-batched encodes
+# split their frame axis across devices with zero model-code changes,
+# params stay replicated (inference over one small prepared weight set).
+DATA_RULES: dict[str, str | tuple[str, ...] | None] = {"batch": "data"}
 
 
 @dataclass
@@ -88,7 +96,12 @@ def use_sharding(mesh: Mesh | None, rules: Mapping | None = None):
         _local.ctx = None
     else:
         if rules is None:
-            rules = MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
+            if "pod" in mesh.axis_names:
+                rules = MULTIPOD_RULES
+            elif tuple(mesh.axis_names) == ("data",):
+                rules = DATA_RULES      # 1-D serving mesh: batch-only DP
+            else:
+                rules = DEFAULT_RULES
         _local.ctx = ShardingCtx(mesh, rules)
     try:
         yield _local.ctx

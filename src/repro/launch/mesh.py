@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "batch_shard_count"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_serving_mesh",
+           "batch_shard_count"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -29,6 +30,18 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(1, min(model, n // data))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh():
+    """1-D ("data",) mesh over every visible device, or None on a single
+    device. The serving server's encode batch axis data-parallelizes over
+    it (distributed.sharding.DATA_RULES) — params replicate, each device
+    encodes a slice of the micro-batch. None keeps the single-device path
+    annotation-free (ShardingCtx is never installed)."""
+    n = len(jax.devices())
+    if n < 2:
+        return None
+    return jax.make_mesh((n,), ("data",))
 
 
 def batch_shard_count(mesh) -> int:

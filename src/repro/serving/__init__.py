@@ -1,13 +1,17 @@
-"""Streaming video serving engine (ingest -> RoI gate -> bucket -> encode
--> account). See ``repro.serving.engine`` for the pipeline and CLI."""
+"""Streaming video serving (ingest -> RoI gate -> bucket -> encode ->
+account). ``repro.serving.server`` is the multi-stream session server
+(shared jit ladder, cross-stream micro-batching, mesh-sharded encode);
+``repro.serving.engine`` the single-session compatibility shell."""
 
 from repro.serving.accounting import StreamAccounting
 from repro.serving.buckets import BucketHistogram, BucketLadder
-from repro.serving.engine import (ServingConfig, ServingEngine, StreamResult,
-                                  main)
+from repro.serving.engine import ServingEngine, main
 from repro.serving.mask_cache import TemporalMaskCache
 from repro.serving.scheduler import FrameBatch, MicroBatcher
+from repro.serving.server import ServerConfig, StreamServer
+from repro.serving.session import ServingConfig, StreamResult, StreamSession
 
 __all__ = ["ServingEngine", "ServingConfig", "StreamResult", "BucketLadder",
            "BucketHistogram", "TemporalMaskCache", "MicroBatcher",
-           "FrameBatch", "StreamAccounting", "main"]
+           "FrameBatch", "StreamAccounting", "StreamServer", "ServerConfig",
+           "StreamSession", "main"]

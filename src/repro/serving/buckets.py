@@ -58,6 +58,25 @@ class BucketLadder:
         pos = np.searchsorted(arr, np.asarray(budgets), side="left")
         return arr[np.minimum(pos, len(arr) - 1)]
 
+    def trim(self, dead, keep_cap: bool = True) -> "BucketLadder":
+        """New ladder without the ``dead`` sizes (``StreamAccounting.
+        dead_buckets()``'s output) — every dropped entry is one compiled
+        encode shape the warm-start pass no longer has to build. Budgets
+        that *would* have routed to a dropped size route up to the next
+        surviving bucket. With ``keep_cap`` (default) the ladder cap
+        survives even when flagged dead: dropping it would silently
+        down-route over-cap budgets, i.e. discard tokens a live frame
+        asked for. Unknown sizes in ``dead`` are ignored; trimming every
+        bucket away raises."""
+        dead = set(int(k) for k in dead)
+        if keep_cap:
+            dead.discard(self.cap)
+        kept = tuple(k for k in self.sizes if k not in dead)
+        if not kept:
+            raise ValueError(f"trim({sorted(dead)}) would empty the "
+                             f"ladder {self.sizes}")
+        return BucketLadder(kept)
+
 
 class BucketHistogram:
     """Frames-per-bucket counter (the bench's bucket-hit histogram)."""

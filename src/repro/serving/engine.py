@@ -1,30 +1,33 @@
-"""Streaming video serving engine: ingest -> gate -> bucket -> encode -> account.
+"""Single-session compatibility shell over the multi-stream StreamServer.
 
-The paper's deployment scenario end to end on the photonic backends:
+Historically this module *was* the serving engine; the implementation now
+lives split across
+
+  * ``repro.serving.session`` — per-stream state (``StreamSession``,
+    ``ServingConfig``, ``StreamResult``),
+  * ``repro.serving.server``  — shared state + the scheduling loop
+    (``StreamServer``: prepared weight cache, warm-start jit ladder,
+    cross-stream micro-batching, mesh-sharded encode).
+
+``ServingEngine`` here is the migration path for single-stream callers: it
+wraps one ``StreamServer`` (warm-start off, mesh off — the legacy lazy
+single-device behaviour) and serves exactly one session per ``run``. Every
+result is field-for-field what the pre-split engine produced, and the
+pipeline it drives is the same five stages:
 
   1. **ingest** — chunks of consecutive frames from ``data.pipeline``
-     (``VideoStream``), double-buffered to the device
-     (``prefetch_to_device``) so H2D transfer overlaps compute;
+     (``VideoStream``), double-buffered to the device;
   2. **RoI gate** — MGNet region scores with temporal mask reuse
-     (``TemporalMaskCache``): re-score only every ``mask_refresh`` frames or
-     when the frame-delta trigger fires, reuse the cached mask otherwise;
-  3. **token-budget bucketing** — each frame's kept-patch budget
-     (``mask_budget``) routes to the smallest ladder bucket covering it
-     (``BucketLadder``); a shared per-chunk stable score order (the
-     ``select_topk_patches`` ordering) gathers exactly that many tokens;
-     same-bucket frames micro-batch (``MicroBatcher``) so every encode is
-     shape-static and jit-cache-warm;
-  4. **encode** — ``forward_vit_tokens`` on the gathered tokens (compute
-     scales with the bucket, the paper's linear energy lever); with
-     ``--attn-backend flash`` the attention core runs the fused RoI-masked
-     flash kernel (and, on ``photonic_pallas`` with cached weights, the
-     whole MHSA block collapses into one jit entry point —
-     ``kernels/ops.py::fused_roi_attention_prequant``);
-  5. **account** — per-flush ``EnergyReport`` from
-     ``vit_matmul_shapes(kept_patches=k)``, surfaced live as frames/s (host
-     wall clock) and KFPS/W (accelerator model, the Table-4 metric).
+     (``TemporalMaskCache``);
+  3. **token-budget bucketing** — ``BucketLadder`` routing + shared stable
+     score order + same-bucket micro-batching (``MicroBatcher``);
+  4. **encode** — ``forward_vit_tokens`` on the gathered tokens (with
+     ``--attn-backend flash`` / ``--ffn-backend fused`` the fused Pallas
+     hot path);
+  5. **account** — per-flush ``EnergyReport``, live frames/s and KFPS/W.
 
-CLI (streams >= 64 frames on the Pallas kernel path):
+New code should target ``StreamServer`` directly (multi-stream CLI:
+``python -m repro.serving.server``). This CLI streams one session:
 
     PYTHONPATH=src python -m repro.serving.engine --smoke \\
         --backend photonic_pallas
@@ -33,307 +36,78 @@ CLI (streams >= 64 frames on the Pallas kernel path):
 from __future__ import annotations
 
 import argparse
-import functools
 import json
-import time
-from dataclasses import dataclass, field
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig, smoke_variant
-from repro.core.backend import (ExecPolicy, available_backends,
-                                prepare_params)
-from repro.core.mgnet import MGNetConfig, mask_budget, mgnet_scores
-from repro.data.pipeline import VideoStream, prefetch_to_device
-from repro.models.vit import (embed_patches, forward_vit_masked,
-                              forward_vit_tokens, init_vit)
-from repro.serving.accounting import StreamAccounting
-from repro.serving.buckets import BucketHistogram, BucketLadder
-from repro.serving.mask_cache import TemporalMaskCache
-from repro.serving.scheduler import MicroBatcher
+from repro.core.backend import available_backends
+from repro.data.pipeline import VideoStream
+from repro.serving.server import (ServerConfig, StreamServer,
+                                  _gather_topk_rows)
+from repro.serving.session import ServingConfig, StreamResult
 
 __all__ = ["ServingConfig", "StreamResult", "ServingEngine", "main"]
 
 
-def _gather_topk_rows(tokens, order, keep: int):
-    """(C, N, d) tokens + (C, N) descending score order -> (C, keep, d).
-
-    The top-``keep`` prefix of the shared order is exactly what
-    ``select_topk_patches`` would select (same stable argsort), without
-    re-sorting per bucket.
-    """
-    return jnp.take_along_axis(tokens, order[:, :keep, None], axis=1)
-
-
-@dataclass(frozen=True)
-class ServingConfig:
-    """Engine knobs (the ladder fractions are quantized to patch counts)."""
-
-    bucket_fractions: tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)
-    microbatch: int = 4
-    chunk: int = 8               # frames per ingest transfer
-    mask_refresh: int = 8        # re-score MGNet at least every k frames
-    delta_threshold: float = 0.15
-    prefetch_depth: int = 2
-    report_every: int = 4        # live metrics cadence (chunks)
-    force_bucket: float = 0.0    # > 0: pin every frame's budget to this
-    #                              fraction of N (the paper's fixed
-    #                              keep-ratio inference; also the controlled
-    #                              operating point for skip-ratio benchmarks)
-    one_shape: bool = False      # fixed-sensor-buffer mode: every encode is
-    #                              (microbatch, ladder.cap, d) with the
-    #                              score-ordered tokens and a static packed
-    #                              kept-count (kv_len) per bucket — one
-    #                              token shape, |ladder| kv_len-specialized
-    #                              jits; the flash attention backend skips
-    #                              the pruned tail's score FLOPs
-
-
-@dataclass
-class StreamResult:
-    """What one ``run`` streamed, measured two ways: host wall clock
-    (functional sim throughput) and accelerator model (KFPS/W)."""
-
-    frames: int = 0
-    wall_s: float = 0.0
-    scored_frames: int = 0
-    reused_frames: int = 0
-    bucket_hits: dict = field(default_factory=dict)
-    bucket_launches: dict = field(default_factory=dict)  # k -> encode flushes
-    kfps_per_watt: float = 0.0
-    mean_frame_uj: float = 0.0
-    dense_kfps_per_watt: float = 0.0
-    predictions: dict = field(default_factory=dict)   # frame_idx -> class
-
-    @property
-    def fps(self) -> float:
-        return self.frames / self.wall_s if self.wall_s > 0 else 0.0
-
-    @property
-    def energy_saved(self) -> float:
-        if self.dense_kfps_per_watt <= 0 or self.kfps_per_watt <= 0:
-            return 0.0
-        return 1.0 - self.dense_kfps_per_watt / self.kfps_per_watt
-
-    def summary(self) -> str:
-        hist = " ".join(f"k={k}:{v}" for k, v in self.bucket_hits.items())
-        return (f"{self.frames} frames in {self.wall_s:.2f}s -> "
-                f"{self.fps:.1f} frames/s | model {self.kfps_per_watt:.1f} "
-                f"KFPS/W ({self.mean_frame_uj:.2f} uJ/frame, "
-                f"{self.energy_saved:+.1%} vs dense) | mgnet scored "
-                f"{self.scored_frames}/{self.frames} | buckets: {hist}")
-
-
 class ServingEngine:
-    """Single-stream serving engine over one ViT + MGNet parameter set."""
+    """Single-stream serving engine over one ViT + MGNet parameter set.
+
+    A thin shell: one ``StreamServer`` built at construction (jits persist
+    across ``run`` calls, exactly the old behaviour), one fresh session per
+    ``run``. Warm-start and the device mesh stay off so cold-start cost and
+    single-device numerics match the pre-split engine; use ``StreamServer``
+    for eager warm-up, multi-stream multiplexing, or sharded serving.
+    """
 
     def __init__(self, cfg: ArchConfig, serve_cfg: ServingConfig | None = None,
                  params: dict | None = None, n_classes: int = 10, seed: int = 0):
-        if not cfg.mgnet:
-            raise ValueError("serving engine needs cfg.mgnet=True "
-                             "(the RoI gate is the pipeline's first stage)")
-        self.cfg = cfg
-        self.serve_cfg = serve_cfg or ServingConfig()
-        self.policy = ExecPolicy.from_cfg(cfg, training=False)
-        self.n_patches = (cfg.img_size // cfg.patch) ** 2
-        self.ladder = BucketLadder.from_fractions(
-            self.n_patches, self.serve_cfg.bucket_fractions)
-        self.mcfg = MGNetConfig(patch=cfg.patch, img_size=cfg.img_size,
-                                embed=cfg.mgnet_embed, heads=cfg.mgnet_heads)
+        sc = serve_cfg or ServingConfig()
+        self.serve_cfg = sc
+        # a plain ServingConfig gets the legacy defaults (lazy compile, no
+        # mesh); an explicit ServerConfig is honored as-is — its deadline /
+        # warm-start / mesh knobs are meaningful for one stream too
+        server_cfg = (sc if isinstance(sc, ServerConfig)
+                      else ServerConfig.from_serving(sc, warm_start=False,
+                                                     mesh="off"))
+        self.server = StreamServer(cfg, server_cfg, params=params,
+                                   n_classes=n_classes, seed=seed)
 
-        if params is None:
-            params = init_vit(jax.random.PRNGKey(seed), cfg, n_classes)
-        if self.policy.is_photonic():
-            # MR tuning happens once, before the stream starts.
-            params = prepare_params(params, bits=cfg.quant_bits or 8)
-        self.params = params
+    # legacy surface: the engine exposed these directly
+    @property
+    def cfg(self):
+        return self.server.cfg
 
-        pol = self.policy
-        self._embed = jax.jit(
-            lambda p, f: embed_patches(p, f, cfg, pol))
-        self._score = jax.jit(
-            lambda p, f: mgnet_scores(p["mgnet"], f, self.mcfg, pol))
-        self._encode = jax.jit(
-            lambda p, t: forward_vit_tokens(p, t, cfg, pol)[0])
-        self._encode_dense = jax.jit(
-            lambda p, f, m: forward_vit_masked(p, f, m, cfg, pol)[0])
-        # one stable descending argsort per chunk (the ordering
-        # select_topk_patches defines), then per-bucket static slices of it
-        # — not a fresh full-chunk sort + gather per unique bucket
-        self._order = jax.jit(
-            lambda s: jnp.argsort(s, axis=-1, stable=True, descending=True))
-        self._gather = {
-            k: jax.jit(functools.partial(_gather_topk_rows, keep=k))
-            for k in self.ladder.sizes}
-        self._encode_one = {}
-        if self.serve_cfg.one_shape:
-            def _one(k: int):
-                return jax.jit(lambda p, t: forward_vit_tokens(
-                    p, t, cfg, pol, kv_len=k)[0])
-            self._encode_one = {k: _one(int(k)) for k in self.ladder.sizes}
+    @property
+    def policy(self):
+        return self.server.policy
 
-    # -- pipeline stages ---------------------------------------------------
+    @property
+    def params(self):
+        return self.server.params
 
-    def _ingest(self, stream: VideoStream, n_frames: int, start: int):
-        """Chunked host batches with the frames double-buffered to device.
+    @property
+    def n_patches(self):
+        return self.server.n_patches
 
-        Each yielded batch carries both views of the frames: ``frames`` is
-        the (possibly still in-flight) device copy the embed/encode jits
-        consume, ``frames_host`` the sensor-side numpy the gating walk
-        reads — one H2D per chunk, no D2H ever.
-        """
-        sc = self.serve_cfg
-        chunks = (n_frames + sc.chunk - 1) // sc.chunk
-        it = stream.chunks(sc.chunk, start)
-        gen = (next(it) for _ in range(chunks))
-        return prefetch_to_device(gen, depth=sc.prefetch_depth,
-                                  keys=("frames",))
+    @property
+    def ladder(self):
+        return self.server.ladder
 
-    def _drive(self, stream: VideoStream, n_frames: int, start: int,
-               on_chunk, on_drain=None, verbose: bool = False,
-               pending=None, ladder_sizes=None) -> tuple[StreamResult,
-                                                         StreamAccounting]:
-        """The frame loop shared by ``run`` and ``run_dense``: ingest ->
-        RoI-gate (temporal mask reuse) -> per-mode chunk callback ->
-        deferred prediction materialization -> common StreamResult fields.
-
-        ``on_chunk(frames, idxs, valid, scores_np, acct, deferred)`` does
-        the mode-specific encode work (bucket-route-batch or dense) and
-        appends ``(frame_idx_list, logits)`` pairs to ``deferred`` —
-        materialized only after the stream so host pre/post work overlaps
-        device encodes (async dispatch). ``on_drain(acct, deferred)``
-        flushes mode-held state at end of stream; ``pending`` is an
-        optional callable for the verbose status line.
-
-        Ingest stays in full ``chunk``-sized transfers (every device shape
-        static); when n_frames is not a chunk multiple, the trailing
-        frames of the last chunk are gated but never routed, encoded,
-        predicted or accounted (``valid``).
-        """
-        sc = self.serve_cfg
-        limit = start + n_frames
-        cache = TemporalMaskCache(sc.mask_refresh, sc.delta_threshold)
-        acct = StreamAccounting(self.cfg, ladder_sizes=ladder_sizes)
-        res = StreamResult()
-        score_fn = lambda f: self._score(self.params, f)
-
-        t0 = time.time()
-        done = 0
-        deferred = []     # (frame_idx list, per-frame argmax device array)
-        for ci, batch in enumerate(self._ingest(stream, n_frames, start)):
-            frames = batch["frames"]                       # device view
-            idxs = batch["frame_idx"]
-            valid = idxs < limit
-            scores_np, n_scored = cache.gate(batch["frames_host"], idxs,
-                                             score_fn, eligible=valid)
-            acct.add_mgnet(n_scored)
-            on_chunk(frames, idxs, valid, scores_np, acct, deferred)
-            done += int(valid.sum())
-            if verbose and (ci + 1) % sc.report_every == 0:
-                dt = time.time() - t0
-                print(f"[serve] {done:>5d} frames  {done / dt:7.1f} frames/s  "
-                      f"{acct.kfps_per_watt:7.1f} KFPS/W  "
-                      f"(mgnet reuse {cache.reuse_rate:.0%}, "
-                      f"pending {pending() if pending else 0})")
-
-        if on_drain is not None:
-            on_drain(acct, deferred)
-        for fidx, preds in deferred:
-            for fi, p in zip(fidx, np.asarray(preds)):
-                if int(fi) < limit:
-                    res.predictions[int(fi)] = int(p)
-        res.wall_s = time.time() - t0
-        res.frames = acct.frames
-        res.scored_frames = cache.scored_frames
-        res.reused_frames = cache.reused_frames
-        res.bucket_launches = dict(acct.bucket_launches)
-        res.kfps_per_watt = acct.kfps_per_watt
-        res.mean_frame_uj = acct.mean_frame.total_uj
-        res.dense_kfps_per_watt = acct.dense_baseline_kfps_per_watt()
-        return res, acct
+    @property
+    def mcfg(self):
+        return self.server.mcfg
 
     def run(self, stream: VideoStream, n_frames: int = 64, start: int = 0,
             verbose: bool = False) -> StreamResult:
         """Stream exactly ``n_frames`` frames through the bucketed path."""
-        sc = self.serve_cfg
-        batcher = MicroBatcher(sc.microbatch)
-        hist = BucketHistogram(self.ladder)
-
-        def on_chunk(frames, idxs, valid, scores_np, acct, deferred):
-            toks = self._embed(self.params, frames)        # (C, N, d)
-            # budget decision on host: scores are already host-resident
-            # from the mask cache, and mask_budget stays in numpy for them
-            if sc.force_bucket > 0:
-                pin = self.ladder.route(
-                    int(round(sc.force_bucket * self.n_patches)))
-                routes = np.full(frames.shape[0], pin)
-            else:
-                routes = self.ladder.route_many(
-                    mask_budget(scores_np, self.mcfg.t_reg))
-
-            order = self._order(jnp.asarray(scores_np))    # (C, N), shared
-            permuted = (self._gather[self.ladder.cap](toks, order)
-                        if sc.one_shape else None)         # (C, cap, d)
-            for k in np.unique(routes[valid]):
-                k = int(k)
-                sel = np.flatnonzero((routes == k) & valid)
-                # one-shape mode ships the shared cap-size permutation and
-                # prunes via the static per-bucket kv_len at encode time
-                pruned = (permuted if sc.one_shape
-                          else self._gather[k](toks, order))   # (C, k, d)
-                hist.add(k, len(sel))
-                group = pruned if len(sel) == frames.shape[0] else pruned[sel]
-                for flush in batcher.push_many(
-                        k, group, [int(idxs[i]) for i in sel]):
-                    self._finish(flush, acct, deferred)
-
-        def on_drain(acct, deferred):
-            for flush in batcher.drain():
-                self._finish(flush, acct, deferred)
-
-        res, acct = self._drive(stream, n_frames, start, on_chunk, on_drain,
-                                verbose, pending=lambda: batcher.pending,
-                                ladder_sizes=self.ladder.sizes)
-        res.bucket_hits = hist.as_dict()
-        if verbose:
-            print("[serve]", acct.summary())
+        s = self.server.add_session(stream, n_frames=n_frames, start=start)
+        res = self.server.serve(verbose=verbose)[s.sid]
         return res
-
-    def _finish(self, flush, acct: StreamAccounting, deferred: list):
-        if self.serve_cfg.one_shape:
-            logits = self._encode_one[flush.bucket](self.params, flush.tokens)
-        else:
-            logits = self._encode(self.params, flush.tokens)
-        # one-shape encodes are billed at bucket k, same as gathered mode:
-        # the packed prefix is contiguous, so the accelerator's static
-        # schedule streams only the k live rows through every core (unlike
-        # scattered mask-mode, which cannot pack and is billed at N — see
-        # run_dense). The host-side cap-size compute is a functional-sim
-        # artifact (and with --ffn-backend fused the FFN drops it too: the
-        # packed kv_len prunes dead token rows out of both matmuls).
-        acct.add_encode(flush.bucket, flush.n_real)
-        deferred.append((flush.frame_idx,
-                         jnp.argmax(logits[:flush.n_real], -1)))
 
     def run_dense(self, stream: VideoStream, n_frames: int = 64,
                   start: int = 0) -> StreamResult:
-        """Mask-mode dense baseline: identical gating, but every frame is
-        encoded at all N patches with the RoI mask applied on the attention
-        key axis — compute is *not* reduced. The bucketed path's frames/s
-        win over this is the serving subsystem's raison d'etre."""
-
-        def on_chunk(frames, idxs, valid, scores_np, acct, deferred):
-            mask = (jax.nn.sigmoid(jnp.asarray(scores_np))
-                    > self.mcfg.t_reg).astype(jnp.float32)
-            logits = self._encode_dense(self.params, frames, mask)
-            acct.add_encode(self.n_patches, int(valid.sum()))
-            deferred.append((idxs, jnp.argmax(logits, -1)))
-
-        res, _ = self._drive(stream, n_frames, start, on_chunk)
-        res.bucket_hits = {self.n_patches: res.frames}
-        return res
+        """Mask-mode dense baseline: identical gating, every frame encoded
+        at all N patches with the RoI mask on the attention key axis."""
+        return self.server.run_dense(stream, n_frames=n_frames, start=start)
 
 
 # --------------------------------------------------------------------------

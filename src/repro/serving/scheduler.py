@@ -6,15 +6,29 @@ call — a single warm-jit launch per flush. Frames arrive as *groups* (all
 same-bucket frames of one ingest chunk come in one (m, k, d) gather output),
 and the queue stores groups, so the flush is at most one concatenate — not
 per-frame slicing + stacking, which at serving rates costs more dispatches
-than the encode itself. End-of-stream partials are padded with zero frames
-up to the micro-batch size so the encode shape set stays exactly |ladder|
-(no trailing-shape recompiles); padded rows are discarded and never
-accounted.
+than the encode itself. Single frames (``push``) are stored as bare rows and
+only expanded to group rank at flush time, so a stream of per-frame pushes
+never materializes a ``[None]``-copy per frame. End-of-stream partials are
+padded with zero frames up to the micro-batch size so the encode shape set
+stays exactly |ladder| (no trailing-shape recompiles); padded rows are
+discarded and never accounted.
+
+The multi-stream server (``repro.serving.server``) keys one shared batcher
+with ``(bucket, session)`` tuples — queue keys are opaque here — and drives
+two extra scheduler surfaces:
+
+  * ``push``/``push_many`` accept a monotonic ``now`` tick stamped on each
+    queued group;
+  * ``flush_stale(deadline)`` pad-flushes every queue whose *oldest* entry
+    was queued at or before ``deadline`` — the server's max-wait bound on
+    how long a partially-filled micro-batch may hold frames hostage,
+    without the caller ever reaching into ``_queues``.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Callable, Hashable
 
 import jax.numpy as jnp
 
@@ -25,9 +39,11 @@ __all__ = ["FrameBatch", "MicroBatcher"]
 class FrameBatch:
     """One flushed encode workload: ``tokens[:n_real]`` are live frames."""
 
-    bucket: int                 # kept-patch count k
+    bucket: Hashable            # queue key: kept-patch count k (or the
+    #                             server's (k, session) tuple)
     tokens: jnp.ndarray         # (microbatch, k, d) — zero-padded past n_real
-    frame_idx: list[int]        # len n_real, stream positions of live rows
+    frame_idx: list             # len n_real, stream positions of live rows
+    #                             (ints, or the server's (sid, idx) pairs)
     n_real: int
 
 
@@ -38,40 +54,51 @@ class MicroBatcher:
         if microbatch < 1:
             raise ValueError("microbatch must be >= 1")
         self.microbatch = microbatch
-        # k -> [(tokens (m, k, d), [frame_idx] * m)]
-        self._queues: dict[int, list] = {}
+        # key -> [(tokens, [frame_idx], now, is_row)] where tokens is a
+        # (m, k, d) group (is_row=False) or a bare (k, d) row (is_row=True)
+        self._queues: dict[Hashable, list] = {}
         self.flushes = 0
 
-    def push(self, bucket: int, tokens, frame_idx: int) -> list[FrameBatch]:
-        """Queue a single frame (row vector of one group)."""
-        return self.push_many(bucket, tokens[None], [frame_idx])
+    def push(self, bucket: Hashable, tokens, frame_idx, now: int = 0
+             ) -> list[FrameBatch]:
+        """Queue a single frame. The bare (k, d) row is stored as-is in the
+        same group storage ``push_many`` uses and expanded to group rank
+        only when its flush assembles — no per-frame ``[None]`` copy."""
+        q = self._queues.setdefault(bucket, [])
+        q.append((tokens, [frame_idx], now, True))
+        return self._collect(bucket)
 
-    def push_many(self, bucket: int, tokens, frame_idx: list[int]
-                  ) -> list[FrameBatch]:
+    def push_many(self, bucket: Hashable, tokens, frame_idx: list,
+                  now: int = 0) -> list[FrameBatch]:
         """Queue a group of same-bucket frames; returns every FrameBatch
         that became ready (possibly several if the group overfills)."""
         if tokens.shape[0] != len(frame_idx):
             raise ValueError("tokens/frame_idx length mismatch")
         q = self._queues.setdefault(bucket, [])
-        q.append((tokens, list(frame_idx)))
+        q.append((tokens, list(frame_idx), now, False))
+        return self._collect(bucket)
+
+    def _collect(self, bucket: Hashable) -> list[FrameBatch]:
         out = []
         while self._rows(bucket) >= self.microbatch:
             out.append(self._take(bucket))
         return out
 
-    def _rows(self, bucket: int) -> int:
-        return sum(t.shape[0] for t, _ in self._queues.get(bucket, ()))
+    def _rows(self, bucket: Hashable) -> int:
+        return sum(len(it[1]) for it in self._queues.get(bucket, ()))
 
-    def _take(self, bucket: int, pad: bool = False) -> FrameBatch:
+    def _take(self, bucket: Hashable, pad: bool = False) -> FrameBatch:
         """Pop exactly ``microbatch`` rows (splitting an oversized group back
         onto the queue); with ``pad`` a short tail is zero-filled."""
         q = self._queues[bucket]
         items, idxs, rows = [], [], 0
         while q and rows < self.microbatch:
-            t, ix = q.pop(0)
+            t, ix, now, is_row = q.pop(0)
+            if is_row:
+                t = t[None]                      # row -> group, at flush time
             need = self.microbatch - rows
             if t.shape[0] > need:
-                q.insert(0, (t[need:], ix[need:]))
+                q.insert(0, (t[need:], ix[need:], now, False))
                 t, ix = t[:need], ix[:need]
             items.append(t)
             idxs.extend(ix)
@@ -86,9 +113,27 @@ class MicroBatcher:
         self.flushes += 1
         return FrameBatch(bucket, toks, idxs, n_real)
 
-    def drain(self) -> list[FrameBatch]:
-        """Flush every partial queue (zero-padded to the micro-batch size)."""
-        return [self._take(k, pad=True) for k in sorted(self._queues)]
+    def drain(self, select: Callable[[Hashable], bool] | None = None
+              ) -> list[FrameBatch]:
+        """Flush every partial queue (zero-padded to the micro-batch size).
+        ``select`` restricts the sweep to matching queue keys — the server
+        drains one finished session's queues without disturbing the rest."""
+        keys = [k for k in sorted(self._queues)
+                if select is None or select(k)]
+        return [self._take(k, pad=True) for k in keys]
+
+    def flush_stale(self, deadline: int) -> list[FrameBatch]:
+        """Pad-flush every queue whose oldest entry was pushed at or before
+        ``deadline`` (the ``now`` tick of ``push``/``push_many``), oldest
+        queue first — the server's max-wait latency bound."""
+        stale = [(q[0][2], k) for k, q in self._queues.items()
+                 if q and q[0][2] <= deadline]
+        return [self._take(k, pad=True) for _, k in sorted(
+            stale, key=lambda e: (e[0], str(e[1])))]
+
+    def pending_keys(self) -> tuple:
+        """Keys of queues currently holding frames."""
+        return tuple(sorted(self._queues, key=str))
 
     @property
     def pending(self) -> int:

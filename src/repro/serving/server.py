@@ -1,0 +1,632 @@
+"""Multi-stream session server: many cameras, one photonic accelerator.
+
+The paper's deployment target is a *fleet* of near-sensor streams, and the
+throughput lever that Lightening-Transformer / ViTA both lean on is keeping
+the accelerator array saturated across concurrent workloads. This module
+multiplexes any number of ``StreamSession``\\ s (per-stream state:
+``repro.serving.session``) over one shared ``StreamServer`` that owns every
+resource the single-stream engine used to conflate with stream state:
+
+  * **one prepared parameter set** — ``prepare_params`` (MR tuning) runs
+    once per server, not once per stream;
+  * **one per-bucket jit ladder, warmed eagerly at startup** —
+    ``warm_start()`` compiles embed/score/order/gather and every bucket's
+    encode before the first frame arrives, so first-flush compiles are a
+    startup cost instead of being charged to some unlucky stream's fps;
+  * **one cross-stream ``MicroBatcher``** — every session's routed frame
+    groups land in the same scheduler, keyed ``(bucket, session)``; each
+    scheduling round serves sessions in rotating round-robin order and
+    executes ready flushes interleaved one-per-session (per-session
+    fairness: a bursty stream's backlog cannot starve the others), with an
+    optional ``max_wait_chunks`` deadline that pad-flushes partially
+    filled micro-batches (``MicroBatcher.flush_stale``);
+  * **the device mesh** — with more than one visible device, flushed
+    (microbatch, k, d) encodes are placed with the existing ``"batch"``
+    logical axis over a 1-D ``("data",)`` mesh (``launch.mesh.
+    make_serving_mesh`` + ``distributed.sharding.DATA_RULES``), so the
+    batch axis data-parallelizes with zero model-code changes.
+
+**Why micro-batches are session-pure by default.** Every w8a8 backend
+quantizes activations with a *per-launch, per-tensor* absmax
+(``core/backend._photonic_prologue``), so all frames sharing an encode
+launch share quantization scales: co-batching frames from different streams
+would couple their numerics (stream A's predictions would depend on what
+stream B happened to be looking at). Keyed ``(bucket, session)``, the
+shared scheduler multiplexes *launch order* across streams while each
+launch's absmax scope stays one stream — which is exactly what makes
+round-robin interleaved serving bit-identical, per stream, to sequential
+single-stream runs on every backend (enforced by tests/test_multistream.py).
+``mix_streams=True`` opts into genuinely cross-session filling (maximum
+saturation at partial ladder occupancy) and trades that reproducibility
+away on quantized backends; zero padding is always safe — zeros never raise
+an absmax.
+
+CLI (4 interleaved streams on the fully fused Pallas path):
+
+    PYTHONPATH=src python -m repro.serving.server --smoke --streams 4 \\
+        --backend photonic_pallas --attn-backend flash --ffn-backend fused
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+import warnings
+from dataclasses import dataclass, fields as _dc_fields
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.backend import (ExecPolicy, available_backends,
+                                prepare_params)
+from repro.core.mgnet import MGNetConfig, mask_budget, mgnet_scores
+from repro.data.pipeline import VideoStream, video_fleet
+from repro.distributed.sharding import (DATA_RULES, ShardingCtx,
+                                        named_sharding, use_sharding)
+from repro.launch.mesh import make_serving_mesh
+from repro.models.vit import (embed_patches, forward_vit_masked,
+                              forward_vit_tokens, init_vit)
+from repro.serving.buckets import BucketLadder
+from repro.serving.mask_cache import TemporalMaskCache
+from repro.serving.scheduler import MicroBatcher
+from repro.serving.session import (ServingConfig, StreamResult,
+                                   StreamSession)
+
+__all__ = ["ServerConfig", "StreamServer", "interleave_rounds", "main"]
+
+
+def _gather_topk_rows(tokens, order, keep: int):
+    """(C, N, d) tokens + (C, N) descending score order -> (C, keep, d).
+
+    The top-``keep`` prefix of the shared order is exactly what
+    ``select_topk_patches`` would select (same stable argsort), without
+    re-sorting per bucket.
+    """
+    return jnp.take_along_axis(tokens, order[:, :keep, None], axis=1)
+
+
+def interleave_rounds(groups) -> list:
+    """Round-robin merge: one element from each list per pass.
+
+    [[a1, a2, a3], [b1]] -> [a1, b1, a2, a3] — the fairness order for
+    executing ready flushes: a session with a backlog yields after every
+    launch to every other session that has one ready.
+    """
+    out, i = [], 0
+    while True:
+        row = [g[i] for g in groups if i < len(g)]
+        if not row:
+            return out
+        out.extend(row)
+        i += 1
+
+
+@dataclass(frozen=True)
+class ServerConfig(ServingConfig):
+    """ServingConfig + the multi-stream knobs."""
+
+    max_wait_chunks: int = 0     # > 0: pad-flush a partial micro-batch after
+    #                              this many scheduling rounds (latency bound;
+    #                              0 keeps frames queued until the bucket
+    #                              fills or the stream ends — the bitwise-
+    #                              reproducible default)
+    mix_streams: bool = False    # fill one bucket's micro-batch from several
+    #                              sessions (max saturation; couples w8a8
+    #                              activation scales across streams — see
+    #                              module docstring)
+    warm_start: bool = True      # compile the whole jit ladder at startup
+    mesh: str = "auto"           # "auto": shard the encode batch axis over a
+    #                              1-D data mesh when > 1 device is visible;
+    #                              "off": never
+
+    @staticmethod
+    def from_serving(sc: ServingConfig, **overrides) -> "ServerConfig":
+        """ServerConfig carrying ``sc``'s fields plus ``overrides``. An
+        ``sc`` that already is a ServerConfig keeps its server-specific
+        knobs (deadline, mixing, mesh) — only the overrides change."""
+        src = type(sc) if isinstance(sc, ServerConfig) else ServingConfig
+        base = {f.name: getattr(sc, f.name) for f in _dc_fields(src)}
+        base.update(overrides)
+        return ServerConfig(**base)
+
+
+class StreamServer:
+    """Shared serving resources + the multi-stream scheduling loop."""
+
+    def __init__(self, cfg: ArchConfig, server_cfg: ServerConfig | None = None,
+                 params: dict | None = None, n_classes: int = 10,
+                 seed: int = 0):
+        if not cfg.mgnet:
+            raise ValueError("serving engine needs cfg.mgnet=True "
+                             "(the RoI gate is the pipeline's first stage)")
+        self.cfg = cfg
+        self.serve_cfg = server_cfg or ServerConfig()
+        self.policy = ExecPolicy.from_cfg(cfg, training=False)
+        self.n_patches = (cfg.img_size // cfg.patch) ** 2
+        self.ladder = BucketLadder.from_fractions(
+            self.n_patches, self.serve_cfg.bucket_fractions)
+        self.mcfg = MGNetConfig(patch=cfg.patch, img_size=cfg.img_size,
+                                embed=cfg.mgnet_embed, heads=cfg.mgnet_heads)
+
+        if params is None:
+            params = init_vit(jax.random.PRNGKey(seed), cfg, n_classes)
+        if self.policy.is_photonic():
+            # MR tuning happens once, before any stream starts — shared by
+            # every session the server will ever serve.
+            params = prepare_params(params, bits=cfg.quant_bits or 8)
+        self.params = params
+
+        self.mesh = (make_serving_mesh()
+                     if self.serve_cfg.mesh == "auto" else None)
+        self._ctx = (ShardingCtx(self.mesh, DATA_RULES)
+                     if self.mesh is not None else None)
+
+        cfg_, pol = cfg, self.policy
+        self._embed = jax.jit(
+            lambda p, f: embed_patches(p, f, cfg_, pol))
+        self._score = jax.jit(
+            lambda p, f: mgnet_scores(p["mgnet"], f, self.mcfg, pol))
+        self._encode = jax.jit(
+            lambda p, t: forward_vit_tokens(p, t, cfg_, pol)[0])
+        self._encode_dense = jax.jit(
+            lambda p, f, m: forward_vit_masked(p, f, m, cfg_, pol)[0])
+        # one stable descending argsort per chunk (the ordering
+        # select_topk_patches defines), then per-bucket static slices of it
+        # — not a fresh full-chunk sort + gather per unique bucket
+        self._order = jax.jit(
+            lambda s: jnp.argsort(s, axis=-1, stable=True, descending=True))
+        self._gather = {
+            k: jax.jit(functools.partial(_gather_topk_rows, keep=k))
+            for k in self.ladder.sizes}
+        self._encode_one = {}
+        if self.serve_cfg.one_shape:
+            def _one(k: int):
+                return jax.jit(lambda p, t: forward_vit_tokens(
+                    p, t, cfg_, pol, kv_len=k)[0])
+            self._encode_one = {k: _one(int(k)) for k in self.ladder.sizes}
+
+        self._sessions: list[StreamSession] = []
+        self._next_sid = 0
+        self.batcher: MicroBatcher | None = None
+        self.flush_log: list[tuple] = []   # (owner sids, bucket k, n_real)
+        self.warm_s = 0.0
+        if self.serve_cfg.warm_start:
+            self.warm_start()
+
+    # -- session registry --------------------------------------------------
+
+    def add_session(self, stream: VideoStream, n_frames: int = 64,
+                    start: int = 0) -> StreamSession:
+        """Register a stream for the next ``serve()``; returns its session."""
+        s = StreamSession(self._next_sid, stream, n_frames, start,
+                          self.serve_cfg, self.cfg, ladder=self.ladder)
+        self._next_sid += 1
+        self._sessions.append(s)
+        return s
+
+    def _score_fn(self, frames):
+        return self._score(self.params, frames)
+
+    # -- warm-start jit ladder ---------------------------------------------
+
+    def warm_start(self) -> float:
+        """Eagerly compile every jit the serving loop can hit — embed,
+        score, order, the per-bucket gathers and every bucket's encode at
+        its exact flush shape — so streams never pay a compile. Returns
+        the warm-up wall seconds (also kept as ``self.warm_s``)."""
+        sc, cfg = self.serve_cfg, self.cfg
+        t0 = time.time()
+        with use_sharding(self.mesh, DATA_RULES if self.mesh else None):
+            zf = jnp.zeros((sc.chunk, cfg.img_size, cfg.img_size, 3),
+                           jnp.float32)
+            toks = self._embed(self.params, zf)            # (C, N, d)
+            self._score(self.params, zf).block_until_ready()
+            zs = jnp.asarray(np.zeros((sc.chunk, self.n_patches),
+                                      np.float32))
+            order = self._order(zs)                        # (C, N) i32
+            warm_gathers = ((self.ladder.cap,) if sc.one_shape
+                            else self.ladder.sizes)
+            pruned = {k: self._gather[k](toks, order) for k in warm_gathers}
+            for k in self.ladder.sizes:
+                src = pruned[self.ladder.cap if sc.one_shape else k]
+                zt = jnp.zeros((sc.microbatch,) + src.shape[1:], src.dtype)
+                zt = self._place(zt)
+                enc = (self._encode_one[k] if sc.one_shape else self._encode)
+                enc(self.params, zt).block_until_ready()
+        self.warm_s = time.time() - t0
+        return self.warm_s
+
+    # -- dead-bucket trimming ----------------------------------------------
+
+    def trim(self, dead) -> tuple[int, ...]:
+        """Drop ladder sizes (``StreamAccounting.dead_buckets()`` output)
+        and their per-bucket jits; un-started sessions are re-pointed at
+        the trimmed ladder. Returns the sizes actually removed."""
+        new = self.ladder.trim(dead)
+        removed = tuple(sorted(set(self.ladder.sizes) - set(new.sizes)))
+        self.ladder = new
+        for k in removed:
+            self._gather.pop(k, None)
+            self._encode_one.pop(k, None)
+        # un-started sessions are replaced, not mutated: their histogram /
+        # accounting must key the trimmed ladder (sids are stable, so
+        # callers holding the old object still index serve() results)
+        self._sessions = [
+            s if s.finished or s.frames_seen > 0
+            else StreamSession(s.sid, s.stream, s.n_frames, s.start,
+                               self.serve_cfg, self.cfg, ladder=self.ladder)
+            for s in self._sessions]
+        return removed
+
+    def calibrate_trim(self, calib_frames: int | None = None
+                       ) -> tuple[int, ...]:
+        """Route-only calibration pass: score the first ``calib_frames`` of
+        every registered session host-side (throwaway mask caches — the
+        sessions themselves are untouched and will re-gate from scratch),
+        collect which ladder buckets get hit, and ``trim`` the rest. Run
+        *before* ``warm_start()`` so the warmed jit set shrinks too.
+
+        Calibration only sees the window it scored: a later budget shift
+        (e.g. the first scene cut past ``calib_frames``) whose frames
+        would have routed to a trimmed bucket routes up to the next
+        surviving size instead — those frames encode more tokens than an
+        untrimmed run would, so the interleaved-vs-sequential bitwise
+        contract only holds against an equally-trimmed solo server. A
+        ``UserWarning`` spells this out whenever something is trimmed;
+        size the window past the stream's budget churn (scene-cut period)
+        to trim on a representative distribution."""
+        sc = self.serve_cfg
+        if not any(not s.finished for s in self._sessions):
+            # nothing to calibrate against — an empty pass would declare
+            # every non-cap bucket dead and collapse the ladder
+            return ()
+        if sc.force_bucket > 0:
+            pin = self.ladder.route(
+                int(round(sc.force_bucket * self.n_patches)))
+            hit = {pin}
+        else:
+            calib = calib_frames or 2 * sc.chunk
+            calib = ((calib + sc.chunk - 1) // sc.chunk) * sc.chunk
+            hit: set[int] = set()
+            for s in self._sessions:
+                if s.finished:
+                    continue
+                cache = TemporalMaskCache(sc.mask_refresh,
+                                          sc.delta_threshold)
+                for ofs in range(0, calib, sc.chunk):
+                    sub = s.stream.frames_at(s.start + ofs, sc.chunk)
+                    scores, _ = cache.gate(sub["frames"], sub["frame_idx"],
+                                           self._score_fn)
+                    hit |= set(int(k) for k in self.ladder.route_many(
+                        mask_budget(scores, self.mcfg.t_reg)))
+        dead = tuple(k for k in self.ladder.sizes if k not in hit)
+        if not dead:
+            return ()
+        removed = self.trim(dead)
+        if removed and sc.force_bucket <= 0:
+            warnings.warn(
+                f"calibrate_trim dropped buckets {list(removed)} from a "
+                f"calibration window the streams may outgrow: budgets that "
+                f"later route to a dropped size will route up to the next "
+                f"surviving bucket (more tokens, possibly different "
+                f"predictions than an untrimmed run)", stacklevel=2)
+        return removed
+
+    # -- the serving loop --------------------------------------------------
+
+    def serve(self, verbose: bool = False) -> dict[int, StreamResult]:
+        """Serve every registered (unfinished) session to completion,
+        interleaved round-robin; returns ``{sid: StreamResult}``. Wall
+        time is shared: every result's ``wall_s`` is the loop's span, so
+        per-session fps reflects multiplexed service and the *aggregate*
+        fps is ``sum(frames) / wall``."""
+        sc = self.serve_cfg
+        live = [s for s in self._sessions if not s.finished]
+        if not live:
+            return {}
+        for s in live:
+            s.open()
+        self.batcher = MicroBatcher(sc.microbatch)
+        self.flush_log = []
+        by_sid = {s.sid: s for s in live}
+        rnd, offset = 0, 0
+        t0 = time.time()
+        try:
+            return self._serve_loop(live, by_sid, rnd, offset, t0, verbose)
+        except BaseException:
+            # a mid-serve failure poisons the half-served sessions: their
+            # accounting/mask-cache state is partial, and re-opening them
+            # on the next serve() would re-ingest from frame 0 and
+            # double-count — they are abandoned instead
+            for s in live:
+                s.finished = True
+            raise
+        finally:
+            # finished sessions leave the registry (long-lived servers and
+            # the engine shim's run-per-session pattern stay bounded)
+            self._sessions = [s for s in self._sessions if not s.finished]
+
+    def _serve_loop(self, live, by_sid, rnd, offset, t0,
+                    verbose) -> dict[int, StreamResult]:
+        sc = self.serve_cfg
+        with use_sharding(self.mesh, DATA_RULES if self.mesh else None):
+            while any(not s.drained for s in live):
+                rot = live[offset:] + live[:offset]
+                offset = (offset + 1) % len(live)
+                per = {s.sid: [] for s in rot}
+                late: list = []
+                for s in rot:
+                    if s.ingest_done:
+                        continue
+                    batch = s.next_batch()
+                    if batch is not None:
+                        per[s.sid].extend(self._ingest_chunk(s, batch, rnd))
+                if sc.mix_streams:
+                    if all(s.ingest_done for s in live):
+                        late.extend(self.batcher.drain())
+                        for s in live:
+                            s.drained = True
+                else:
+                    for s in rot:
+                        if s.ingest_done and not s.drained:
+                            per[s.sid].extend(self.batcher.drain(
+                                select=lambda key, sid=s.sid:
+                                key[1] == sid))
+                            s.drained = True
+                if sc.max_wait_chunks > 0:
+                    late.extend(self.batcher.flush_stale(
+                        rnd - sc.max_wait_chunks))
+                for fb in interleave_rounds([per[s.sid] for s in rot]):
+                    self._finish(fb, by_sid)
+                for fb in late:
+                    self._finish(fb, by_sid)
+                rnd += 1
+                if verbose and rnd % sc.report_every == 0:
+                    dt = time.time() - t0
+                    done = sum(s.acct.frames for s in live)
+                    print(f"[server] round {rnd:>4d}  {done:>5d} frames  "
+                          f"{done / dt:7.1f} frames/s aggregate  "
+                          f"(pending {self.batcher.pending}, "
+                          f"{sum(not s.ingest_done for s in live)} "
+                          f"streams ingesting)")
+        wall = time.time() - t0
+        results = {s.sid: s.finish(wall) for s in live}
+        if verbose:
+            for s in live:
+                print(f"[server] session {s.sid}:", s.acct.summary())
+        return results
+
+    def _ingest_chunk(self, s: StreamSession, batch: dict, rnd: int) -> list:
+        """Gate one session chunk through *its* mask cache, embed on the
+        shared jit, route on the shared ladder, and push per-bucket groups
+        into the shared batcher. Returns flushes that became ready."""
+        sc = self.serve_cfg
+        frames = batch["frames"]                           # device view
+        idxs = batch["frame_idx"]
+        valid = idxs < s.limit
+        scores_np, n_scored = s.cache.gate(batch["frames_host"], idxs,
+                                           self._score_fn, eligible=valid)
+        s.acct.add_mgnet(n_scored)
+        toks = self._embed(self.params, frames)            # (C, N, d)
+        # budget decision on host: scores are already host-resident from
+        # the mask cache, and mask_budget stays in numpy for them
+        if sc.force_bucket > 0:
+            pin = self.ladder.route(
+                int(round(sc.force_bucket * self.n_patches)))
+            routes = np.full(frames.shape[0], pin)
+        else:
+            routes = self.ladder.route_many(
+                mask_budget(scores_np, self.mcfg.t_reg))
+
+        order = self._order(jnp.asarray(scores_np))        # (C, N), shared
+        permuted = (self._gather[self.ladder.cap](toks, order)
+                    if sc.one_shape else None)             # (C, cap, d)
+        out = []
+        for k in np.unique(routes[valid]):
+            k = int(k)
+            sel = np.flatnonzero((routes == k) & valid)
+            # one-shape mode ships the shared cap-size permutation and
+            # prunes via the static per-bucket kv_len at encode time
+            pruned = (permuted if sc.one_shape
+                      else self._gather[k](toks, order))   # (C, k, d)
+            s.record_route(k, len(sel))
+            group = pruned if len(sel) == frames.shape[0] else pruned[sel]
+            key = k if sc.mix_streams else (k, s.sid)
+            out.extend(self.batcher.push_many(
+                key, group, [(s.sid, int(idxs[i])) for i in sel], now=rnd))
+        s.frames_seen += int(valid.sum())
+        return out
+
+    def _place(self, tokens):
+        """Shard a flush's batch axis over the data mesh (no-op without)."""
+        if self._ctx is None:
+            return tokens
+        return jax.device_put(tokens, named_sharding(
+            tokens.shape, ("batch", None, None), self._ctx))
+
+    def _finish(self, fb, by_sid: dict[int, StreamSession]) -> None:
+        k = fb.bucket[0] if isinstance(fb.bucket, tuple) else fb.bucket
+        tokens = self._place(fb.tokens)
+        if self.serve_cfg.one_shape:
+            logits = self._encode_one[k](self.params, tokens)
+        else:
+            logits = self._encode(self.params, tokens)
+        # encodes are billed at bucket k: the packed prefix is contiguous,
+        # so the accelerator's static schedule streams only the k live rows
+        # through every core. Padded rows ([n_real:]) are never predicted
+        # or accounted.
+        preds = jnp.argmax(logits[:fb.n_real], -1)
+        owners: dict[int, tuple[list, list]] = {}
+        for row, (sid, fidx) in enumerate(fb.frame_idx):
+            rows, fidxs = owners.setdefault(sid, ([], []))
+            rows.append(row)
+            fidxs.append(fidx)
+        for sid, (rows, fidxs) in owners.items():
+            sess = by_sid[sid]
+            sess.record_flush(k, len(rows))
+            sess.add_deferred(fidxs, preds if len(owners) == 1
+                              else preds[np.asarray(rows)])
+        self.flush_log.append((tuple(sorted(owners)), k, fb.n_real))
+
+    # -- single-stream dense baseline --------------------------------------
+
+    def run_dense(self, stream: VideoStream, n_frames: int = 64,
+                  start: int = 0) -> StreamResult:
+        """Mask-mode dense baseline: identical gating, but every frame is
+        encoded at all N patches with the RoI mask applied on the attention
+        key axis — compute is *not* reduced. The bucketed path's frames/s
+        win over this is the serving subsystem's raison d'etre."""
+        s = StreamSession(-1, stream, n_frames, start, self.serve_cfg,
+                          self.cfg, ladder=None)
+        t0 = time.time()
+        while True:
+            batch = s.next_batch()
+            if batch is None:
+                break
+            frames, idxs = batch["frames"], batch["frame_idx"]
+            valid = idxs < s.limit
+            scores_np, n_scored = s.cache.gate(batch["frames_host"], idxs,
+                                               self._score_fn,
+                                               eligible=valid)
+            s.acct.add_mgnet(n_scored)
+            mask = (jax.nn.sigmoid(jnp.asarray(scores_np))
+                    > self.mcfg.t_reg).astype(jnp.float32)
+            logits = self._encode_dense(self.params, frames, mask)
+            s.acct.add_encode(self.n_patches, int(valid.sum()))
+            s.add_deferred([int(i) for i in idxs],
+                           jnp.argmax(logits, -1))
+        res = s.finish(time.time() - t0)
+        res.bucket_hits = {self.n_patches: res.frames}
+        return res
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def main(argv=None):
+    from repro.serving.engine import _smoke_cfg
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CPU config (32x32 frames, 4 layers)")
+    ap.add_argument("--variant", default="tiny")
+    ap.add_argument("--img-size", type=int, default=96)
+    ap.add_argument("--backend", default="photonic_pallas",
+                    help=f"matmul backend ({', '.join(available_backends())})")
+    ap.add_argument("--attn-backend", default="", choices=["", "xla", "flash"])
+    ap.add_argument("--ffn-backend", default="", choices=["", "xla", "fused"])
+    ap.add_argument("--streams", type=int, default=4,
+                    help="number of concurrent camera sessions")
+    ap.add_argument("--frames", type=int, default=64,
+                    help="frames per stream")
+    ap.add_argument("--phase", type=int, default=16,
+                    help="per-stream start offset (stream i starts at i*phase)")
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=4)
+    ap.add_argument("--mask-refresh", type=int, default=8)
+    ap.add_argument("--delta-threshold", type=float, default=0.15)
+    ap.add_argument("--buckets", default="0.25,0.5,0.75,1.0")
+    ap.add_argument("--one-shape", action="store_true")
+    ap.add_argument("--cut-every", type=int, default=32)
+    ap.add_argument("--max-wait", type=int, default=0,
+                    help="pad-flush partial micro-batches after this many "
+                         "scheduling rounds (0: wait for fill or stream end)")
+    ap.add_argument("--mix-streams", action="store_true",
+                    help="fill micro-batches across sessions (max "
+                         "saturation; couples w8a8 activation scales "
+                         "across streams)")
+    ap.add_argument("--trim-dead-buckets", action="store_true",
+                    help="route-only calibration pass, then drop ladder "
+                         "buckets no stream hits before warming the jit set")
+    ap.add_argument("--calib-frames", type=int, default=0,
+                    help="frames per stream for --trim-dead-buckets "
+                         "calibration (default 2 chunks)")
+    ap.add_argument("--no-warm-start", action="store_true",
+                    help="skip the eager jit-ladder warm-up (first flushes "
+                         "then pay their compiles)")
+    ap.add_argument("--mesh", default="auto", choices=["auto", "off"],
+                    help="shard the encode batch axis over visible devices")
+    ap.add_argument("--json", default="",
+                    help="write per-session + aggregate results to this path")
+    args = ap.parse_args(argv)
+
+    if args.backend and args.backend not in available_backends():
+        raise SystemExit(f"unknown backend {args.backend!r}; "
+                         f"choose from {available_backends()}")
+    if args.smoke:
+        cfg = _smoke_cfg(args.backend, args.attn_backend, args.ffn_backend)
+    else:
+        from repro.configs.opto_vit import get_config
+        cfg = get_config(args.variant, img_size=args.img_size,
+                         mgnet=True).with_(matmul_backend=args.backend,
+                                           attn_backend=args.attn_backend,
+                                           ffn_backend=args.ffn_backend)
+
+    server_cfg = ServerConfig(
+        bucket_fractions=tuple(float(f) for f in args.buckets.split(",")),
+        microbatch=args.microbatch, chunk=args.chunk,
+        mask_refresh=args.mask_refresh,
+        delta_threshold=args.delta_threshold, one_shape=args.one_shape,
+        max_wait_chunks=args.max_wait, mix_streams=args.mix_streams,
+        warm_start=False, mesh=args.mesh)
+    server = StreamServer(cfg, server_cfg)
+    print(f"[server] {cfg.name} {cfg.img_size}x{cfg.img_size} "
+          f"backend={server.policy.resolve_backend()} "
+          f"attn={server.policy.resolve_attn_backend()} "
+          f"ffn={server.policy.resolve_ffn_backend()} "
+          f"ladder={list(server.ladder.sizes)} of {server.n_patches} patches "
+          f"mesh={'x'.join(str(n) for n in server.mesh.devices.shape) if server.mesh else 'off'}")
+
+    streams = video_fleet(args.streams, img_size=cfg.img_size,
+                          patch=cfg.patch, cut_every=args.cut_every)
+    sessions = [server.add_session(st, n_frames=args.frames,
+                                   start=i * args.phase)
+                for i, st in enumerate(streams)]
+
+    if args.trim_dead_buckets:
+        removed = server.calibrate_trim(args.calib_frames or None)
+        print(f"[server] calibration trimmed buckets {list(removed)} -> "
+              f"ladder {list(server.ladder.sizes)}")
+    if not args.no_warm_start:
+        server.warm_start()
+        print(f"[server] jit ladder warmed in {server.warm_s:.2f}s "
+              f"({len(server.ladder.sizes)} buckets)")
+
+    results = server.serve(verbose=True)
+    total = sum(r.frames for r in results.values())
+    wall = max((r.wall_s for r in results.values()), default=0.0)
+    for s in sessions:
+        print(f"[server] session {s.sid}:", results[s.sid].summary())
+    agg_fps = total / wall if wall > 0 else 0.0
+    print(f"[server] aggregate: {total} frames over {len(sessions)} streams "
+          f"in {wall:.2f}s -> {agg_fps:.1f} frames/s "
+          f"(warm-up {server.warm_s:.2f}s, "
+          f"{len(server.flush_log)} encode launches)")
+
+    if args.json:
+        payload = {
+            "streams": len(sessions), "frames_total": total,
+            "aggregate_fps": agg_fps, "warm_s": server.warm_s,
+            "ladder": list(server.ladder.sizes),
+            "sessions": {
+                str(s.sid): {
+                    "frames": results[s.sid].frames,
+                    "fps": results[s.sid].fps,
+                    "kfps_per_watt": results[s.sid].kfps_per_watt,
+                    "bucket_hits": results[s.sid].bucket_hits,
+                    "predictions": results[s.sid].predictions,
+                } for s in sessions},
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"[server] wrote {args.json}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""Per-stream session state for the multi-stream serving server.
+
+The single-stream engine conflated two kinds of state: *shared* resources
+(the prepared weight cache, the per-bucket jit ladder, the micro-batch
+scheduler) and *per-stream* bookkeeping (the temporal mask cache, the
+deferred-prediction list, the energy accounting). ``StreamSession`` owns
+exactly the second kind — everything whose lifetime is one stream:
+
+  * ``TemporalMaskCache`` — mask reuse is a *temporal* property of one
+    camera's frames; streams must never share a reference frame;
+  * ``StreamAccounting`` + ``BucketHistogram`` — per-stream KFPS/W and
+    bucket telemetry (the Table-4 metric is per camera);
+  * the deferred-prediction list — ``(frame_idx, logits-argmax)`` pairs
+    held as device arrays until end of stream so host bookkeeping overlaps
+    device encodes (async dispatch), then materialized once;
+  * the ingest iterator (chunked, double-buffered to device) with the
+    stream's own ``start`` phase.
+
+Sessions are driven by ``repro.serving.server.StreamServer`` — they hold no
+jits and no parameters. ``ServingConfig`` and ``StreamResult`` live here
+(not in ``engine``) because both the server and the single-session engine
+shim consume them; ``engine`` re-exports for compatibility.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.data.pipeline import VideoStream, prefetch_to_device
+from repro.serving.accounting import StreamAccounting
+from repro.serving.buckets import BucketHistogram, BucketLadder
+from repro.serving.mask_cache import TemporalMaskCache
+
+__all__ = ["ServingConfig", "StreamResult", "StreamSession"]
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    """Engine knobs (the ladder fractions are quantized to patch counts)."""
+
+    bucket_fractions: tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)
+    microbatch: int = 4
+    chunk: int = 8               # frames per ingest transfer
+    mask_refresh: int = 8        # re-score MGNet at least every k frames
+    delta_threshold: float = 0.15
+    prefetch_depth: int = 2
+    report_every: int = 4        # live metrics cadence (chunks)
+    force_bucket: float = 0.0    # > 0: pin every frame's budget to this
+    #                              fraction of N (the paper's fixed
+    #                              keep-ratio inference; also the controlled
+    #                              operating point for skip-ratio benchmarks)
+    one_shape: bool = False      # fixed-sensor-buffer mode: every encode is
+    #                              (microbatch, ladder.cap, d) with the
+    #                              score-ordered tokens and a static packed
+    #                              kept-count (kv_len) per bucket — one
+    #                              token shape, |ladder| kv_len-specialized
+    #                              jits; the flash attention backend skips
+    #                              the pruned tail's score FLOPs
+
+
+@dataclass
+class StreamResult:
+    """What one stream served, measured two ways: host wall clock
+    (functional sim throughput) and accelerator model (KFPS/W)."""
+
+    frames: int = 0
+    wall_s: float = 0.0
+    scored_frames: int = 0
+    reused_frames: int = 0
+    bucket_hits: dict = field(default_factory=dict)
+    bucket_launches: dict = field(default_factory=dict)  # k -> encode flushes
+    kfps_per_watt: float = 0.0
+    mean_frame_uj: float = 0.0
+    dense_kfps_per_watt: float = 0.0
+    predictions: dict = field(default_factory=dict)   # frame_idx -> class
+
+    @property
+    def fps(self) -> float:
+        return self.frames / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def energy_saved(self) -> float:
+        if self.dense_kfps_per_watt <= 0 or self.kfps_per_watt <= 0:
+            return 0.0
+        return 1.0 - self.dense_kfps_per_watt / self.kfps_per_watt
+
+    def summary(self) -> str:
+        hist = " ".join(f"k={k}:{v}" for k, v in self.bucket_hits.items())
+        return (f"{self.frames} frames in {self.wall_s:.2f}s -> "
+                f"{self.fps:.1f} frames/s | model {self.kfps_per_watt:.1f} "
+                f"KFPS/W ({self.mean_frame_uj:.2f} uJ/frame, "
+                f"{self.energy_saved:+.1%} vs dense) | mgnet scored "
+                f"{self.scored_frames}/{self.frames} | buckets: {hist}")
+
+
+class StreamSession:
+    """One stream's serving state, multiplexed by ``StreamServer``.
+
+    A session is *passive*: the server pulls its next ingest chunk, gates it
+    through the session's own mask cache, routes/encodes on the shared jit
+    ladder, and records flush outcomes back here. Per-stream numbers
+    (accounting, histogram, predictions) therefore aggregate exactly as a
+    solo run of the same stream would — interleaving sessions changes only
+    *when* launches happen, never what each stream computes.
+    """
+
+    def __init__(self, sid: int, stream: VideoStream, n_frames: int,
+                 start: int, serve_cfg: ServingConfig, cfg,
+                 ladder: BucketLadder | None = None):
+        self.sid = sid
+        self.stream = stream
+        self.n_frames = n_frames
+        self.start = start
+        self.limit = start + n_frames
+        self.serve_cfg = serve_cfg
+        self.cache = TemporalMaskCache(serve_cfg.mask_refresh,
+                                       serve_cfg.delta_threshold)
+        self.acct = StreamAccounting(
+            cfg, ladder_sizes=ladder.sizes if ladder is not None else None)
+        self.hist = BucketHistogram(ladder) if ladder is not None else None
+        self.deferred: list = []     # (frame_idx list, argmax device array)
+        self.frames_seen = 0         # valid frames ingested so far
+        self.ingest_done = False
+        self.drained = False
+        self.finished = False
+        self._it = None
+
+    # -- ingest ------------------------------------------------------------
+
+    def open(self) -> None:
+        """Build the chunked, double-buffered ingest iterator.
+
+        Each yielded batch carries both views of the frames: ``frames`` is
+        the (possibly still in-flight) device copy the embed/encode jits
+        consume, ``frames_host`` the sensor-side numpy the gating walk
+        reads — one H2D per chunk, no D2H ever. Ingest stays in full
+        ``chunk``-sized transfers (every device shape static); when
+        ``n_frames`` is not a chunk multiple, the trailing frames of the
+        last chunk are gated but never routed, encoded, predicted or
+        accounted (the ``valid`` mask the server applies).
+        """
+        sc = self.serve_cfg
+        self._chunks_left = (self.n_frames + sc.chunk - 1) // sc.chunk
+        it = self.stream.chunks(sc.chunk, self.start)
+        gen = (next(it) for _ in range(self._chunks_left))
+        self._it = prefetch_to_device(gen, depth=sc.prefetch_depth,
+                                      keys=("frames",))
+
+    def next_batch(self) -> dict | None:
+        """Next ingest chunk, or None once the stream's frame budget is
+        consumed (``ingest_done`` flips on the *last* chunk, so the server
+        drains this session's queues in the same scheduling round)."""
+        if self._it is None:
+            self.open()
+        if self._chunks_left == 0:
+            self.ingest_done = True
+            return None
+        batch = next(self._it)
+        self._chunks_left -= 1
+        if self._chunks_left == 0:
+            self.ingest_done = True
+        return batch
+
+    # -- per-flush bookkeeping (written by the server) ---------------------
+
+    def record_route(self, bucket: int, n: int) -> None:
+        if self.hist is not None:
+            self.hist.add(bucket, n)
+
+    def record_flush(self, bucket: int, n_real: int) -> None:
+        self.acct.add_encode(bucket, n_real)
+
+    def add_deferred(self, frame_idx: list, preds) -> None:
+        self.deferred.append((frame_idx, preds))
+
+    # -- end of stream -----------------------------------------------------
+
+    def finish(self, wall_s: float) -> StreamResult:
+        """Materialize deferred predictions and assemble the StreamResult
+        (identical field-for-field to the single-stream engine's)."""
+        res = StreamResult()
+        for fidx, preds in self.deferred:
+            for fi, p in zip(fidx, np.asarray(preds)):
+                if int(fi) < self.limit:
+                    res.predictions[int(fi)] = int(p)
+        res.wall_s = wall_s
+        res.frames = self.acct.frames
+        res.scored_frames = self.cache.scored_frames
+        res.reused_frames = self.cache.reused_frames
+        res.bucket_hits = (self.hist.as_dict() if self.hist is not None
+                           else dict(self.acct.bucket_frames))
+        res.bucket_launches = dict(self.acct.bucket_launches)
+        res.kfps_per_watt = self.acct.kfps_per_watt
+        res.mean_frame_uj = self.acct.mean_frame.total_uj
+        res.dense_kfps_per_watt = self.acct.dense_baseline_kfps_per_watt()
+        self.finished = True
+        return res
