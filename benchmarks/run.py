@@ -9,13 +9,16 @@ harness doubles as a reproduction gate."""
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
 from benchmarks import (attention_bench, bench_backend_cache, ffn_bench,
                         fig8_energy, fig9_latency, fig10_11_mgnet,
-                        multistream_bench, roofline_table, serving_bench,
-                        table1_qat, table4_kfps)
+                        mixed_precision_bench, multistream_bench,
+                        roofline_table, serving_bench, table1_qat,
+                        table4_kfps)
 
 ALL = {
     "fig8": fig8_energy.run,
@@ -33,7 +36,29 @@ ALL = {
     # multi-stream session server vs sequential cold engines ("multistream"
     # key in BENCH_serving.json)
     "multistream": multistream_bench.run,
+    # per-layer bit plans on the fused path: speedup / energy / agreement
+    # gates ("mixed_precision" key in BENCH_serving.json)
+    "mixed_precision": mixed_precision_bench.run,
 }
+
+HISTORY = os.environ.get("BENCH_HISTORY_JSONL", "BENCH_history.jsonl")
+
+
+def _append_history(names, failed, dt: float) -> None:
+    """One JSONL row per harness run: when, what ran, what failed, and the
+    merged BENCH_serving.json snapshot — the perf trajectory over PRs."""
+    snapshot = None
+    if os.path.exists(mixed_precision_bench.OUT_JSON):
+        try:
+            with open(mixed_precision_bench.OUT_JSON) as f:
+                snapshot = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            pass
+    row = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+           "names": list(names), "failed": [n for n, _ in failed],
+           "elapsed_s": round(dt, 1), "serving": snapshot}
+    with open(HISTORY, "a") as f:
+        f.write(json.dumps(row) + "\n")
 
 
 def main() -> None:
@@ -47,6 +72,7 @@ def main() -> None:
             failed.append((n, str(e)))
             print(f"!! {n} reproduction assertion failed: {e}")
     dt = time.time() - t0
+    _append_history(names, failed, dt)
     print(f"\n== benchmarks done in {dt:.1f}s: "
           f"{len(names) - len(failed)}/{len(names)} reproduction gates pass")
     if failed:

@@ -100,6 +100,11 @@ class ArchConfig:
     #                                      (composed two-linear) | fused
     #                                      (fused int8 photonic FFN kernel,
     #                                      core/backend.py FFN_BACKENDS)
+    bit_plan: tuple = ()                 # per-layer bit widths (one per
+    #                                      encoder block, core/bitalloc.py);
+    #                                      () = uniform quant_bits. Feeds
+    #                                      prepare_params(bit_plan=...) and
+    #                                      ExecPolicy.bit_plan
 
     # perf-hillclimb knobs (EXPERIMENTS.md §Perf; all default to the
     # paper-faithful baseline behaviour)

@@ -53,9 +53,10 @@ policy object — ``ExecPolicy.ffn_backend`` / ``ArchConfig.ffn_backend``:
             (B, S, d_ff) hidden state never reaching HBM; packed
             ``live_rows`` skips fully-pruned token rows. Requires the
             int8 Pallas matmul backend + quantize-once cached w1/w2 at
-            one bit width — anything else falls back to the composed
-            dispatch (same auto-fallback contract as the fused MHSA hot
-            path). Bit-identical to ``xla`` where both run.
+            <= 8-bit (possibly different — mixed-precision bit plans)
+            widths — anything else falls back to the composed dispatch
+            with a one-time warning (same auto-fallback contract as the
+            fused MHSA hot path). Bit-identical to ``xla`` where both run.
 
 ``ffn`` is the dispatch point ``models/ffn.py::mlp`` funnels through.
 """
@@ -63,6 +64,7 @@ policy object — ``ExecPolicy.ffn_backend`` / ``ArchConfig.ffn_backend``:
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Callable
 
 import jax
@@ -75,6 +77,8 @@ __all__ = [
     "QuantizedWeight",
     "quantize_weight",
     "prepare_params",
+    "warn_fused_fallback",
+    "reset_fused_fallback_warnings",
     "register_backend",
     "get_backend",
     "available_backends",
@@ -106,15 +110,24 @@ class ExecPolicy:
     ``ffn_backend`` an FFN registry entry ("" -> xla).
     ``interpret`` runs Pallas kernels in interpreter mode (CPU hosts); set
     False on a real TPU deployment.
+    ``bit_plan`` is the hashable identity of the active mixed-precision
+    plan (``core.bitalloc.plan_key`` output, or a bare per-layer tuple) —
+    None means uniform ``quant_bits``. Setting it does two things: the
+    plan joins ``fingerprint()`` (so jit caches key on it) and
+    ``_weight_bits`` accepts cached widths that differ from
+    ``quant_bits`` (deliberate per-layer divergence instead of a stale
+    cache, which without a plan is an error).
     """
 
     __slots__ = ("quant_bits", "photonic", "training", "dot_out_native",
-                 "backend", "interpret", "attn_backend", "ffn_backend")
+                 "backend", "interpret", "attn_backend", "ffn_backend",
+                 "bit_plan")
 
     def __init__(self, quant_bits: int = 0, photonic: bool = False,
                  training: bool = True, dot_out_native: bool = False,
                  backend: str = "", interpret: bool = True,
-                 attn_backend: str = "", ffn_backend: str = ""):
+                 attn_backend: str = "", ffn_backend: str = "",
+                 bit_plan=None):
         self.quant_bits = quant_bits
         self.photonic = photonic
         self.training = training
@@ -123,6 +136,8 @@ class ExecPolicy:
         self.interpret = interpret
         self.attn_backend = attn_backend
         self.ffn_backend = ffn_backend
+        self.bit_plan = (tuple(bit_plan) if isinstance(bit_plan, list)
+                         else bit_plan) or None
 
     @staticmethod
     def from_cfg(cfg, training: bool = True) -> "ExecPolicy":
@@ -132,7 +147,8 @@ class ExecPolicy:
                           getattr(cfg, "matmul_backend", "") or "",
                           getattr(cfg, "pallas_interpret", True),
                           getattr(cfg, "attn_backend", "") or "",
-                          getattr(cfg, "ffn_backend", "") or "")
+                          getattr(cfg, "ffn_backend", "") or "",
+                          getattr(cfg, "bit_plan", None) or None)
 
     def resolve_backend(self) -> str:
         if self.backend:
@@ -159,7 +175,7 @@ class ExecPolicy:
         return (self.resolve_backend(), self.resolve_attn_backend(),
                 self.resolve_ffn_backend(), self.quant_bits,
                 bool(self.interpret), bool(self.training),
-                bool(self.dot_out_native))
+                bool(self.dot_out_native), self.bit_plan)
 
     def __repr__(self):
         return (f"ExecPolicy(backend={self.resolve_backend()!r}, "
@@ -184,12 +200,31 @@ class QuantizedWeight:
     so an in-scan slice is exactly the (K, N)/(1, N) pair the 2-D backends
     consume. Registered as a pytree so prepared params flow through jit/scan
     unchanged.
+
+    ``bits`` is an int, or — for scan-stacked (L, K, N) weights under a
+    mixed-precision bit plan — a length-L tuple of per-layer widths. The
+    tuple lives in the pytree aux data, so a plan change retraces every
+    jit that closes over the params (the treedef is the cache key). 2-D
+    weights always carry an int; the scanned encoder slices stacked
+    weights into equal-bits runs before any 2-D dispatch sees them
+    (models/vit.py), so ``linear`` never meets a tuple.
     """
 
-    def __init__(self, wq: jax.Array, scale: jax.Array, bits: int = 8):
+    def __init__(self, wq: jax.Array, scale: jax.Array, bits=8):
         self.wq = wq
         self.scale = scale
-        self.bits = bits
+        self.bits = tuple(bits) if isinstance(bits, list) else bits
+
+    def layer_bits(self, i: int) -> int:
+        """Width of stacked layer ``i`` (an int ``bits`` is uniform)."""
+        return self.bits[i] if isinstance(self.bits, tuple) else self.bits
+
+    def uniform_bits(self) -> int | None:
+        """The single width when uniform, else None (mixed stacked)."""
+        if isinstance(self.bits, tuple):
+            u = set(self.bits)
+            return u.pop() if len(u) == 1 else None
+        return self.bits
 
     @property
     def shape(self):
@@ -213,7 +248,7 @@ class QuantizedWeight:
         return f"QuantizedWeight(shape={self.wq.shape}, bits={self.bits})"
 
 
-def quantize_weight(w: jax.Array, bits: int = 8) -> QuantizedWeight:
+def quantize_weight(w: jax.Array, bits=8) -> QuantizedWeight:
     """Pre-compute int8 codes + scale for one weight (the MR tuning step).
 
     The scale reduces only the contraction axis (-2), i.e. per output
@@ -221,8 +256,25 @@ def quantize_weight(w: jax.Array, bits: int = 8) -> QuantizedWeight:
     identical to the per-call ``absmax_scale(w2d, axis=0)`` of the dynamic
     photonic path, which is what makes cached and uncached execution
     bit-identical.
+
+    ``bits`` may be a per-layer sequence for a scan-stacked weight (one
+    entry per leading-dim layer): each layer slice is quantized at its own
+    width — bit-identical to quantizing the 2-D slices separately — and
+    the codes/scales re-stacked into one cache entry.
     """
     w32 = w.astype(jnp.float32)
+    if isinstance(bits, (tuple, list)):
+        bt = tuple(int(b) for b in bits)
+        if w32.ndim < 3 or w32.shape[0] != len(bt):
+            raise ValueError(
+                f"per-layer bits {bt} need a scan-stacked "
+                f"(L={len(bt)}, K, N) weight, got shape {w.shape}")
+        if len(set(bt)) == 1:
+            bits = bt[0]                       # uniform plan: int fast path
+        else:
+            parts = [quantize_weight(w32[i], bt[i]) for i in range(len(bt))]
+            return QuantizedWeight(jnp.stack([p.wq for p in parts]),
+                                   jnp.stack([p.scale for p in parts]), bt)
     scale = quant.absmax_scale(w32, bits=bits, axis=-2)     # (..., 1, N)
     return QuantizedWeight(quant.quantize(w32, scale, bits=bits), scale, bits)
 
@@ -254,7 +306,8 @@ def _path_key(entry) -> str:
 
 
 def prepare_params(params, bits: int = 8, min_size: int = 128,
-                   exclude: frozenset = NON_MATMUL_KEYS):
+                   exclude: frozenset = NON_MATMUL_KEYS,
+                   bit_plan=None, n_layers: int | None = None):
     """Quantize every matmul weight of a param pytree once (MR tuning pass).
 
     A leaf is tuned iff its key names a ``linear`` weight (``w*`` prefix or
@@ -265,7 +318,31 @@ def prepare_params(params, bits: int = 8, min_size: int = 128,
     operands. Key-based selection (rather than shape-based) is what keeps
     scan-stacked 1-D leaves like a (L, d) ``ln_g`` out of the cache.
     Idempotent: already-quantized leaves pass through.
+
+    ``bit_plan`` assigns non-uniform widths (core/bitalloc.py): a
+    per-layer sequence (one width per encoder block, applied to every
+    matmul weight of the scan-stacked ``blocks`` subtree) or a dict with
+    per-tensor path-suffix overrides (``{"attn/wq": 4, "ffn/w2": (8, 6,
+    6, 8)}``) plus optional ``"layers"`` / ``"default"`` keys. Weights
+    outside ``blocks`` (patch embed, head, MGNet) take the plan's default
+    (= ``bits`` unless overridden). ``n_layers`` sizes per-layer
+    sequences; it defaults to the leading dim of the stacked ``blocks``
+    leaves.
     """
+    plan = None
+    if bit_plan is not None:
+        from repro.core import bitalloc     # lazy: bitalloc imports us
+        if n_layers is None:
+            n_layers = _infer_n_layers(params)
+        plan = bitalloc.normalize_bit_plan(bit_plan, n_layers,
+                                           default=bits)
+
+    def _leaf_bits(path):
+        if plan is None:
+            return bits
+        from repro.core import bitalloc
+        names = tuple(_path_key(e) for e in path)
+        return bitalloc.resolve_bits(plan, names)
 
     def _prep(path, leaf):
         if isinstance(leaf, QuantizedWeight):
@@ -278,10 +355,25 @@ def prepare_params(params, bits: int = 8, min_size: int = 128,
             return leaf
         if not jnp.issubdtype(leaf.dtype, jnp.floating):
             return leaf
-        return quantize_weight(leaf, bits=bits)
+        lb = _leaf_bits(path)
+        if (isinstance(lb, tuple) and
+                (leaf.ndim < 3 or leaf.shape[0] != len(lb))):
+            lb = bits        # per-layer plan, non-stacked weight: default
+        return quantize_weight(leaf, bits=lb)
 
     return jax.tree_util.tree_map_with_path(
         _prep, params, is_leaf=lambda x: isinstance(x, QuantizedWeight))
+
+
+def _infer_n_layers(params) -> int:
+    """Leading dim of the scan-stacked ``blocks`` leaves (plan sizing)."""
+    blocks = params.get("blocks") if isinstance(params, dict) else None
+    if blocks is not None:
+        for leaf in jax.tree_util.tree_leaves(blocks):
+            if getattr(leaf, "ndim", 0) >= 1:
+                return int(leaf.shape[0])
+    raise ValueError("cannot infer n_layers for a per-layer bit plan: "
+                     "no stacked 'blocks' subtree — pass n_layers=")
 
 
 def _resolve_wq(w, bits: int):
@@ -294,13 +386,63 @@ def _resolve_wq(w, bits: int):
 
 
 def _weight_bits(w, p: ExecPolicy) -> int:
+    """Effective width for a 2-D dispatch: the cached width when the weight
+    is quantize-once cached, else ``policy.quant_bits``. A cached width
+    that *disagrees* with an explicit ``quant_bits`` is an error unless a
+    bit plan is active (``policy.bit_plan``) — silently preferring the
+    cache hid stale-cache bugs (params prepared at one width, policy
+    asking another)."""
     if isinstance(w, QuantizedWeight):
+        if isinstance(w.bits, tuple):
+            raise ValueError(
+                f"stacked mixed-bits QuantizedWeight (bits={w.bits}) "
+                f"reached a 2-D matmul dispatch; slice it to one layer "
+                f"first (the segmented-scan encoder in models/vit.py does "
+                f"this — see QuantizedWeight.layer_bits)")
+        if p.quant_bits and p.bit_plan is None and w.bits != p.quant_bits:
+            raise ValueError(
+                f"cached QuantizedWeight.bits={w.bits} disagrees with "
+                f"ExecPolicy.quant_bits={p.quant_bits} and no bit plan is "
+                f"active — re-run prepare_params at the policy's width, "
+                f"set quant_bits=0 to defer to the cache, or set "
+                f"ExecPolicy.bit_plan for deliberate mixed precision")
         return w.bits
     return p.quant_bits or 8
 
 
 def _out_dim(w) -> int:
     return w.shape[-1]
+
+
+# --------------------------------------------------------------------------
+# fused-path fallback warnings (the 12x cliff should never be invisible)
+# --------------------------------------------------------------------------
+
+# (component, fingerprint, reason) triples already warned about — one
+# warning per distinct cause per policy, not one per forward call.
+_FUSED_FALLBACK_WARNED: set = set()
+
+
+def warn_fused_fallback(component: str, p: ExecPolicy, reason: str) -> None:
+    """One-time ``UserWarning`` when a *requested* fused path (encoder /
+    FFN / attention) silently takes composed dispatch instead. Keyed by
+    (component, policy fingerprint, reason) so a steady-state serving loop
+    warns exactly once per cause; silent when the fused path actually
+    runs. Call sites only invoke this when the policy asked for the fused
+    path (``ffn_backend="fused"`` / ``attn_backend="flash"``)."""
+    key = (component, p.fingerprint(), reason)
+    if key in _FUSED_FALLBACK_WARNED:
+        return
+    _FUSED_FALLBACK_WARNED.add(key)
+    warnings.warn(
+        f"fused {component} path fell back to composed dispatch: {reason} "
+        f"(policy {p!r}) — expect ~an-order-of-magnitude slower serving; "
+        f"see README 'Fused-path eligibility'", UserWarning, stacklevel=3)
+
+
+def reset_fused_fallback_warnings() -> None:
+    """Forget which fallbacks have been warned about (test isolation)."""
+    _FUSED_FALLBACK_WARNED.clear()
 
 
 # --------------------------------------------------------------------------
@@ -620,15 +762,30 @@ def _ffn_xla(x, w1, b1, w2, b2, p: ExecPolicy, live_rows):
     return linear(h, w2, b2, policy=p)
 
 
+def _fused_ffn_ineligible_reason(w1, w2, p: ExecPolicy) -> str | None:
+    """None when the block can take the fused int8 FFN kernel — int8
+    Pallas matmul backend + both weights quantize-once cached at (possibly
+    different) <= 8-bit widths — else a human-readable reason (mirrors
+    ``_fused_prequant_eligible`` for the MHSA block). w1 and w2 may carry
+    *different* widths: the kernel quantizes the input at w1's width and
+    requantizes the hidden state at w2's, exactly the composed numerics."""
+    if p.resolve_backend() != "photonic_pallas":
+        return (f"matmul backend is {p.resolve_backend()!r}, fused kernel "
+                f"needs 'photonic_pallas'")
+    if not (isinstance(w1, QuantizedWeight) and isinstance(w2, QuantizedWeight)):
+        return "w1/w2 not quantize-once cached (run prepare_params)"
+    if not (w1.ndim == 2 and w2.ndim == 2):
+        return "w1/w2 still scan-stacked (ndim > 2), not per-layer slices"
+    if not (isinstance(w1.bits, int) and isinstance(w2.bits, int)):
+        return (f"w1/w2 carry stacked per-layer bits ({w1.bits}/{w2.bits}),"
+                f" not a single width")
+    if not (w1.bits <= 8 and w2.bits <= 8):
+        return f"bit widths ({w1.bits}, {w2.bits}) above the int8 kernel max"
+    return None
+
+
 def _fused_ffn_eligible(w1, w2, p: ExecPolicy) -> bool:
-    """True when the block can take the fused int8 FFN kernel: int8 Pallas
-    matmul backend + both weights quantize-once cached at one (<= 8 bit)
-    width — mirroring ``_fused_prequant_eligible`` for the MHSA block."""
-    return (p.resolve_backend() == "photonic_pallas"
-            and isinstance(w1, QuantizedWeight)
-            and isinstance(w2, QuantizedWeight)
-            and w1.ndim == 2 and w2.ndim == 2
-            and w1.bits == w2.bits and w1.bits <= 8)
+    return _fused_ffn_ineligible_reason(w1, w2, p) is None
 
 
 @register_ffn_backend("fused")
@@ -639,14 +796,21 @@ def _ffn_fused(x, w1, b1, w2, b2, p: ExecPolicy, live_rows):
     static ``live_rows`` (one-shape serving mode) drops fully-pruned
     token rows before any FLOP, returning exact zeros for them (activation
     scales then reduce over live rows only — the packed-skip contract).
-    Falls back to the composed dispatch when the weights are not cached
-    int8 or the matmul backend is not the Pallas kernel."""
-    if not _fused_ffn_eligible(w1, w2, p):
+    w1 and w2 may be cached at different widths (a mixed-precision bit
+    plan): the input is quantized at w1's width, the hidden state
+    requantized at w2's — bit-identical to the composed two-``linear``
+    dispatch under the same cache. Falls back to the composed dispatch
+    (with a one-time warning) when the weights are not cached int8 or the
+    matmul backend is not the Pallas kernel."""
+    reason = _fused_ffn_ineligible_reason(w1, w2, p)
+    if reason is not None:
+        warn_fused_fallback("FFN", p, reason)
         return _ffn_xla(x, w1, b1, w2, b2, p, live_rows)
     from repro.kernels.fused_ffn import fused_ffn   # lazy: pulls in pallas
 
     return fused_ffn(x, w1.wq, w1.scale.reshape(-1), b1,
-                     w2.wq, w2.scale.reshape(-1), b2, bits=w1.bits,
+                     w2.wq, w2.scale.reshape(-1), b2,
+                     bits=(w1.bits, w2.bits),
                      live_rows=live_rows, interpret=p.interpret)
 
 

@@ -1,0 +1,261 @@
+"""Per-layer / per-tensor bit plans + the sensitivity-driven allocator.
+
+Opto-ViT's energy story is quantization co-designed with the photonic
+substrate, and the per-layer allocation literature (ENLighten; the ViT
+quantization survey in PAPERS.md) puts most of the edge energy win in
+*non-uniform* width assignment: early/late layers keep 8 bits, the
+insensitive middle drops to 6 or 4, and every dropped bit scales the
+dominant SAR-ADC/DAC/SRAM energy terms roughly linearly (core/energy.py).
+This module makes that a first-class serving input:
+
+  * a **bit plan** is either a per-layer sequence (one width per encoder
+    block, applied to all of that block's matmul weights) or a dict with
+    optional ``"layers"`` / ``"default"`` keys plus per-tensor overrides
+    keyed by param-path suffix (``"attn/wq"``, ``"ffn/w2"``, ...) whose
+    values are an int or a per-layer sequence;
+  * ``normalize_bit_plan`` canonicalizes any of those forms (and
+    ``parse_bit_plan`` the CLI string forms: ``"8,6,4,8"`` or a JSON
+    file path / literal); ``plan_key`` is the hashable identity that
+    ``ExecPolicy.fingerprint()`` folds into jit-cache keys;
+  * ``resolve_bits`` answers "what width does this param-tree leaf get"
+    for ``core.backend.prepare_params`` — per-tensor overrides beat the
+    per-layer assignment, which beats the default; non-block weights
+    (patch embed, head, MGNet) stay at the default width;
+  * ``calibrate_bit_plan`` is the allocator: per-layer perturbation
+    scoring on a calibration batch (requantize one layer at a candidate
+    width, measure that layer's output MSE against the uniform-8
+    baseline), then greedy downgrades — always the cheapest sensitivity
+    per saved bit — until the plan's mean width meets ``target_mean_bits``.
+
+Widths are bounded to [2, 8]: 8 bits is the MR resolution limit of the
+photonic core (core/noise.py), ``quant_range`` rejects anything below 2.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["normalize_bit_plan", "parse_bit_plan", "plan_key",
+           "resolve_bits", "plan_layer_bits", "plan_mean_bits",
+           "calibrate_bit_plan"]
+
+_MAX_BITS = 8        # MR resolution limit (paper Sec. IV / core/noise.py)
+_MIN_BITS = 2
+
+
+def _check_bits(b) -> int:
+    b = int(b)
+    if not _MIN_BITS <= b <= _MAX_BITS:
+        raise ValueError(f"bit width {b} outside the photonic core's "
+                         f"supported [{_MIN_BITS}, {_MAX_BITS}] range")
+    return b
+
+
+def _as_layers(v, n_layers: int) -> tuple:
+    seq = tuple(_check_bits(b) for b in v)
+    if len(seq) != n_layers:
+        raise ValueError(f"per-layer bit sequence has {len(seq)} entries "
+                         f"for {n_layers} layers")
+    return seq
+
+
+def normalize_bit_plan(plan, n_layers: int, default: int = 8):
+    """Canonicalize a bit plan to ``{"default", "layers", "tensors"}``.
+
+    ``plan`` is a per-layer sequence, a dict (``"layers"`` / ``"default"``
+    keys + per-tensor path-suffix overrides), or an already-normalized
+    plan. Returns None for an empty/None plan (uniform quantization).
+    """
+    if plan is None:
+        return None
+    if isinstance(plan, Mapping):
+        layers = plan.get("layers")
+        out = {
+            "default": _check_bits(plan.get("default", default)),
+            "layers": (None if layers is None
+                       else _as_layers(layers, n_layers)),
+            "tensors": {},
+        }
+        for key, v in plan.items():
+            if key in ("layers", "default"):
+                continue
+            out["tensors"][str(key)] = (
+                _check_bits(v) if isinstance(v, (int, float, str))
+                else _as_layers(v, n_layers))
+        return out
+    seq = tuple(plan)
+    if not seq:
+        return None
+    return {"default": _check_bits(default),
+            "layers": _as_layers(seq, n_layers), "tensors": {}}
+
+
+def parse_bit_plan(spec: str):
+    """CLI form -> plan: ``"8,6,4,8"`` (per-layer), a JSON literal, or a
+    path to a JSON file holding the dict form."""
+    spec = spec.strip()
+    if not spec:
+        return None
+    if os.path.exists(spec):
+        with open(spec) as f:
+            return json.load(f)
+    if spec.lstrip().startswith(("{", "[")):
+        return json.loads(spec)
+    return tuple(int(b) for b in spec.split(","))
+
+
+def plan_key(plan) -> tuple | None:
+    """Hashable identity of a normalized plan (jit-cache key material)."""
+    if plan is None:
+        return None
+    return (plan["default"], plan["layers"],
+            tuple(sorted(plan["tensors"].items())))
+
+
+def _suffix_match(pattern: str, path_names: tuple) -> bool:
+    parts = tuple(p for p in pattern.split("/") if p)
+    return len(parts) <= len(path_names) and \
+        tuple(path_names[-len(parts):]) == parts
+
+
+def resolve_bits(plan, path_names: tuple):
+    """Width for the leaf at ``path_names`` (tuple of str components).
+
+    Per-tensor overrides (longest matching path suffix) beat the
+    per-layer assignment, which applies only inside the scan-stacked
+    ``blocks`` subtree; everything else gets the default. Returns an int
+    or — for stacked block weights under a per-layer assignment — the
+    per-layer tuple.
+    """
+    if plan is None:
+        return None
+    best = None
+    for pattern, bits in plan["tensors"].items():
+        if _suffix_match(pattern, path_names):
+            if best is None or len(pattern.split("/")) > len(best[0].split("/")):
+                best = (pattern, bits)
+    if best is not None:
+        return best[1]
+    if "blocks" in path_names and plan["layers"] is not None:
+        return plan["layers"]
+    return plan["default"]
+
+
+def plan_layer_bits(plan, n_layers: int) -> tuple:
+    """Per-layer effective widths (the energy-accounting view): the
+    per-layer assignment where given, else the default everywhere."""
+    if plan is None:
+        return (8,) * n_layers
+    if plan["layers"] is not None:
+        return plan["layers"]
+    return (plan["default"],) * n_layers
+
+
+def plan_mean_bits(plan, n_layers: int) -> float:
+    lb = plan_layer_bits(plan, n_layers)
+    return sum(lb) / len(lb)
+
+
+# --------------------------------------------------------------------------
+# sensitivity-driven allocation (the calibrator behind --bit-budget)
+# --------------------------------------------------------------------------
+
+def _slice_layer(tree, i: int):
+    from repro.core.backend import QuantizedWeight
+    return jax.tree_util.tree_map(
+        lambda a: (QuantizedWeight(a.wq[i], a.scale[i], a.layer_bits(i))
+                   if isinstance(a, QuantizedWeight) else a[i]),
+        tree, is_leaf=lambda a: isinstance(a, QuantizedWeight))
+
+
+def calibrate_bit_plan(params, tokens, cfg, policy,
+                       target_mean_bits: float,
+                       candidates: tuple = (6, 4),
+                       default: int = 8) -> tuple:
+    """Emit a per-layer bit plan meeting ``target_mean_bits``.
+
+    ``params`` are the *raw* (un-prepared) weights; ``tokens`` a
+    position-embedded calibration batch (B, k, d) — what ``embed_patches``
+    hands the encoder. For every layer and every candidate width the
+    layer's matmul weights are requantized alone and that single layer is
+    re-run on its captured baseline input; the sensitivity score is the
+    relative MSE of its output against the uniform-``default`` baseline.
+    A greedy pass then downgrades whichever (layer, width) move costs the
+    least added sensitivity per saved bit until the plan's mean width is
+    <= ``target_mean_bits``. Returns the per-layer tuple (feed it to
+    ``prepare_params(..., bit_plan=plan)``).
+
+    Scoring runs the *composed* dispatch layer-by-layer under the given
+    policy — the same numerics the fused path is bit-identical to, so the
+    ranking transfers to the serving hot path.
+    """
+    from repro.core.backend import ExecPolicy, prepare_params
+    from repro.models.vit import encoder_layer_step
+
+    # scoring policy: defer widths to the cache (quant_bits=0) so probing
+    # a layer at a candidate width is not flagged as a stale cache by
+    # ``_weight_bits`` — the deliberate-divergence contract
+    policy = ExecPolicy(quant_bits=0, photonic=policy.photonic,
+                        training=False,
+                        dot_out_native=policy.dot_out_native,
+                        backend=policy.resolve_backend(),
+                        interpret=policy.interpret,
+                        attn_backend=policy.attn_backend,
+                        ffn_backend=policy.ffn_backend)
+    n_layers = cfg.n_layers
+    candidates = tuple(sorted({_check_bits(b) for b in candidates},
+                              reverse=True))
+    if not candidates or target_mean_bits >= default:
+        return (default,) * n_layers
+
+    base = prepare_params(params, bits=default)
+    b, _, d = tokens.shape
+    cls = jnp.broadcast_to(base["cls"], (b, 1, d)) + base["pos"][:, :1]
+    x = jnp.concatenate([cls.astype(tokens.dtype), tokens], axis=1)
+    ins, outs = [], []
+    for i in range(n_layers):
+        ins.append(x)
+        x = encoder_layer_step(x, _slice_layer(base["blocks"], i), cfg,
+                               policy, None, None, None)
+        outs.append(x)
+
+    # sensitivity[(layer, bits)]: relative output MSE of requantizing just
+    # that layer at that width
+    raw_blocks = params["blocks"]
+    sens: dict = {}
+    for i in range(n_layers):
+        ref = jnp.asarray(outs[i], jnp.float32)
+        denom = float(jnp.mean(ref * ref)) + 1e-12
+        raw_i = _slice_layer(raw_blocks, i)
+        for cb in candidates:
+            lp = prepare_params(raw_i, bits=cb)
+            out = encoder_layer_step(ins[i], lp, cfg, policy, None, None,
+                                     None)
+            err = jnp.asarray(out, jnp.float32) - ref
+            sens[(i, cb)] = float(jnp.mean(err * err)) / denom
+
+    plan = [default] * n_layers
+
+    def mean_bits():
+        return sum(plan) / n_layers
+
+    while mean_bits() > target_mean_bits:
+        best = None
+        for i in range(n_layers):
+            lower = [cb for cb in candidates if cb < plan[i]]
+            if not lower:
+                continue
+            nb = lower[0]                       # one step down at a time
+            cur = sens.get((i, plan[i]), 0.0)   # default level costs 0
+            cost = (sens[(i, nb)] - cur) / (plan[i] - nb)
+            if best is None or cost < best[0]:
+                best = (cost, i, nb)
+        if best is None:                        # every layer at the floor
+            break
+        plan[best[1]] = best[2]
+    return tuple(plan)

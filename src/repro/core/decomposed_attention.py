@@ -75,21 +75,36 @@ def _heads_split(t: jnp.ndarray, h: int) -> jnp.ndarray:
     return t.reshape(*lead, n, h, d // h).swapaxes(-2, -3)  # (..., h, n, dh)
 
 
+def _fused_prequant_ineligible_reason(params: dict,
+                                      policy: ExecPolicy | None,
+                                      x: jnp.ndarray) -> str | None:
+    """None when the whole MHSA block can take the one-jit serving hot
+    path (kernels/ops.py::fused_roi_attention_prequant): int8 Pallas
+    matmul backend + flash attention core + quantize-once cached QKV at
+    (possibly different — mixed-precision plans) <= 8-bit widths. Else a
+    human-readable reason for the composed fallback."""
+    p = policy or ExecPolicy()
+    if p.resolve_attn_backend() != "flash":
+        return (f"attention backend is {p.resolve_attn_backend()!r}, "
+                f"fused prequant needs 'flash'")
+    if p.resolve_backend() != "photonic_pallas":
+        return (f"matmul backend is {p.resolve_backend()!r}, fused "
+                f"prequant needs 'photonic_pallas'")
+    if x.ndim != 3:
+        return f"x.ndim == {x.ndim}, fused prequant needs (B, n, dm)"
+    if not all(isinstance(params[n], QuantizedWeight)
+               for n in ("wq", "wk", "wv")):
+        return "QKV not quantize-once cached (run prepare_params)"
+    bits = tuple(params[n].bits for n in ("wq", "wk", "wv"))
+    if not all(isinstance(b, int) and b <= 8 for b in bits):
+        return (f"QKV bit widths {bits} not all single <= 8-bit widths "
+                f"(stacked per-layer bits must be sliced first)")
+    return None
+
+
 def _fused_prequant_eligible(params: dict, policy: ExecPolicy | None,
                              x: jnp.ndarray) -> bool:
-    """True when the whole MHSA block can take the one-jit serving hot
-    path (kernels/ops.py::fused_roi_attention_prequant): int8 Pallas
-    matmul backend + flash attention core + quantize-once cached QKV."""
-    p = policy or ExecPolicy()
-    if not (p.resolve_attn_backend() == "flash"
-            and p.resolve_backend() == "photonic_pallas"
-            and x.ndim == 3
-            and all(isinstance(params[n], QuantizedWeight)
-                    for n in ("wq", "wk", "wv"))):
-        return False
-    # the fused entry decodes all three with one bit width — a mixed-bits
-    # cache must fall back to the per-weight composed dispatch
-    return len({params[n].bits for n in ("wq", "wk", "wv")}) == 1
+    return _fused_prequant_ineligible_reason(params, policy, x) is None
 
 
 def mhsa_standard(x: jnp.ndarray, params: dict, heads: int,
@@ -112,9 +127,10 @@ def mhsa_standard(x: jnp.ndarray, params: dict, heads: int,
     hot path); it computes the exact same numbers.
     """
     dm = x.shape[-1]
-    if _fused_prequant_eligible(params, policy, x):
+    p = policy or ExecPolicy()
+    reason = _fused_prequant_ineligible_reason(params, policy, x)
+    if reason is None:
         from repro.kernels import ops as kernel_ops   # lazy: pulls in pallas
-        p = policy or ExecPolicy()
         if mask is not None:
             # same lead-dim-elided masks the composed dispatch accepts
             mask = jnp.broadcast_to(mask, x.shape[:2])
@@ -122,9 +138,16 @@ def mhsa_standard(x: jnp.ndarray, params: dict, heads: int,
             x, params["wq"].wq, params["wq"].scale.reshape(-1),
             params["wk"].wq, params["wk"].scale.reshape(-1),
             params["wv"].wq, params["wv"].scale.reshape(-1),
-            mask, heads=heads, kv_len=kv_len, bits=params["wq"].bits,
+            mask, heads=heads, kv_len=kv_len,
+            bits=tuple(params[n].bits for n in ("wq", "wk", "wv")),
             interpret=p.interpret)
         return linear(o, params["wo"], policy=policy)
+    if (p.resolve_attn_backend() == "flash"
+            and p.resolve_backend() == "photonic_pallas"):
+        # the policy asked for the fused serving combination — say why
+        # it degraded to per-projection dispatch (one-time per cause)
+        from repro.core.backend import warn_fused_fallback
+        warn_fused_fallback("attention-prequant", p, reason)
     q = _heads_split(linear(x, params["wq"], policy=policy), heads)
     k = _heads_split(linear(x, params["wk"], policy=policy), heads)
     v = _heads_split(linear(x, params["wv"], policy=policy), heads)

@@ -23,7 +23,7 @@ from repro.core.photonic import OpticalCoreConfig, PhotonicOpStats, matmul_stats
 
 __all__ = ["EnergyConstants", "LatencyConstants", "EnergyReport",
            "energy_of_stats", "latency_of_stats", "accumulate_matmuls",
-           "kfps_per_watt", "aggregate_reports"]
+           "kfps_per_watt", "aggregate_reports", "scale_for_bits"]
 
 
 @dataclass(frozen=True)
@@ -176,6 +176,31 @@ def accumulate_matmuls(shapes: list[tuple[int, int, int]],
         total += matmul_stats(m, k, n, cfg)
         tiles += (-(-k // cfg.n_wavelengths)) * (-(-n // cfg.n_arms))
     return total, tiles
+
+
+def scale_for_bits(rep: EnergyReport, bits: float,
+                   ref_bits: int = 8) -> EnergyReport:
+    """Energy report for a weight-stationary matmul run at ``bits`` width.
+
+    The width-sensitive events are the ones a SAR-ADC/DAC/SRAM/MR-tuning
+    datapath pays per *bit*: an n-bit SAR conversion is n compare cycles,
+    the DAC drive and the MR tuning resolution scale with the code width,
+    and the int8 SRAM traffic shrinks with the stored code — so
+    ``tuning_uj``/``adc_uj``/``dac_uj``/``memory_uj`` scale by
+    ``bits/ref_bits`` (the first-order model ENLighten and the LightBulb
+    ADC analysis both use; constants above are calibrated at 8 bits).
+    VCSEL symbols, BPD reads and EPU adds are per-event, not per-bit, and
+    the latency fields are left unscaled: the symbol rate and conversion
+    pipelining are width-independent in this model (a lower-width plan
+    buys energy, not wall time — documented in serving/accounting.py).
+    """
+    s = float(bits) / float(ref_bits)
+    out = EnergyReport(**{f: getattr(rep, f) for f in rep._FIELDS})
+    out.tuning_uj *= s
+    out.adc_uj *= s
+    out.dac_uj *= s
+    out.memory_uj *= s
+    return out
 
 
 def kfps_per_watt(report: EnergyReport) -> float:

@@ -25,6 +25,14 @@ XLA side and read from SMEM, mirroring flash_decode's ``len_ref``.
 Validated in interpret mode against kernels/ref.py::flash_attention_ref
 over shape/dtype/mask sweeps (tests/test_kernels_flash.py and the
 hypothesis harness in tests/test_differential.py).
+
+Bit widths: the score-softmax-PV core is float end to end (score and PV
+products are activation-activation matmuls — dynamically tuned cores on
+the photonic hardware), so this kernel is *width-agnostic*: under a
+mixed-precision bit plan the per-projection widths live entirely in the
+upstream int8 Q/K/V projections (kernels/ops.py::
+fused_roi_attention_prequant quantizes each projection's activations at
+its own cached weight's width); nothing here takes a ``bits`` parameter.
 """
 
 from __future__ import annotations

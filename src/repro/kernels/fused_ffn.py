@@ -74,6 +74,21 @@ __all__ = ["fused_ffn_kernel", "fused_ffn_int8", "fused_ffn_xla",
            "fused_ffn"]
 
 
+def _bits_pair(bits) -> tuple[int, int]:
+    """Static (w1 width, w2 width) from an int or pair — mixed-precision
+    bit plans may cache the two banks at different widths. The input
+    activation quantizes at w1's width (its matmul's operand precision)
+    and the hidden state requantizes at w2's, exactly the widths the
+    composed two-``linear`` dispatch would use."""
+    if isinstance(bits, (tuple, list)):
+        b1, b2 = (int(b) for b in bits)
+    else:
+        b1 = b2 = int(bits)
+    if not (2 <= b1 <= 8 and 2 <= b2 <= 8):
+        raise ValueError(f"fused FFN bit widths {bits!r} outside [2, 8]")
+    return b1, b2
+
+
 def fused_ffn_kernel(xq_ref, sx_ref, w1_ref, sw1_ref, b1_ref,
                      w2_ref, sw2_ref, o_ref, amax_ref, *,
                      bm: int, m_eff: int, bits: int, dt):
@@ -86,7 +101,9 @@ def fused_ffn_kernel(xq_ref, sx_ref, w1_ref, sw1_ref, b1_ref,
     whole sequential grid. ``m_eff`` masks padded rows out of the absmax
     (their x rows are zero, but bias + GELU would still leak a nonzero
     |gelu(b1)| into the scale); ``dt`` is the caller's activation dtype so
-    every cast lands exactly where the composed path casts.
+    every cast lands exactly where the composed path casts. ``bits`` is
+    the *hidden requant* width — w2's cached width under a mixed plan;
+    the incoming xq codes were already quantized at w1's width outside.
     """
     phase = pl.program_id(0)
     mi = pl.program_id(1)
@@ -157,16 +174,18 @@ def _restore_dead(y: jax.Array, n: int) -> jax.Array:
 
 def fused_ffn_int8(x: jax.Array, w1q: jax.Array, sw1: jax.Array,
                    b1: jax.Array, w2q: jax.Array, sw2: jax.Array,
-                   b2: jax.Array, *, bits: int = 8,
+                   b2: jax.Array, *, bits=8,
                    live_rows: int | None = None, bm: int = 128,
                    interpret: bool = True) -> jax.Array:
     """The Pallas lowering. x (..., n, d_in) float; w1q (d_in, d_ff) int8 +
     sw1 (d_ff,) f32 + b1 (d_ff,); w2q (d_ff, d_out) int8 + sw2 (d_out,)
-    f32 + b2 (d_out,). Returns (..., n, d_out) in x.dtype. ``live_rows``
-    statically prunes the token axis (see module docstring); shapes need
-    not be block multiples — operands are padded to the 128-aligned grid
-    and the result sliced back.
+    f32 + b2 (d_out,). Returns (..., n, d_out) in x.dtype. ``bits`` is an
+    int or a (w1, w2) pair (mixed-precision plans — see ``_bits_pair``).
+    ``live_rows`` statically prunes the token axis (see module docstring);
+    shapes need not be block multiples — operands are padded to the
+    128-aligned grid and the result sliced back.
     """
+    bits1, bits2 = _bits_pair(bits)
     n_tokens = x.shape[-2]
     xl, lv = _slice_live(x, live_rows)
     if lv == 0:
@@ -178,8 +197,8 @@ def fused_ffn_int8(x: jax.Array, w1q: jax.Array, sw1: jax.Array,
 
     x2 = xl.reshape(-1, k1).astype(jnp.float32)
     m = x2.shape[0]
-    sx = quant.absmax_scale(x2, bits=bits)
-    xq = quant.quantize(x2, sx, bits=bits)
+    sx = quant.absmax_scale(x2, bits=bits1)
+    xq = quant.quantize(x2, sx, bits=bits1)
 
     xq = _pad_axis(_pad_axis(xq, 0, bm), 1, 128)
     w1p = _pad_axis(_pad_axis(w1q, 0, 128), 1, 128)
@@ -191,7 +210,7 @@ def fused_ffn_int8(x: jax.Array, w1q: jax.Array, sw1: jax.Array,
     doutp = w2p.shape[1]
 
     grid = (2, xq.shape[0] // bm)
-    kern = functools.partial(fused_ffn_kernel, bm=bm, m_eff=m, bits=bits,
+    kern = functools.partial(fused_ffn_kernel, bm=bm, m_eff=m, bits=bits2,
                              dt=x.dtype)
     out = pl.pallas_call(
         kern,
@@ -270,7 +289,7 @@ def _int8_linear_xla(x2: jax.Array, wq: jax.Array, sw: jax.Array, *,
 
 def fused_ffn_xla(x: jax.Array, w1q: jax.Array, sw1: jax.Array,
                   b1: jax.Array, w2q: jax.Array, sw2: jax.Array,
-                  b2: jax.Array, *, bits: int = 8,
+                  b2: jax.Array, *, bits=8,
                   live_rows: int | None = None) -> jax.Array:
     """XLA lowering of ``fused_ffn_int8`` (same shapes/semantics/codes).
 
@@ -282,8 +301,10 @@ def fused_ffn_xla(x: jax.Array, w1q: jax.Array, sw1: jax.Array,
     Python-int ``live_rows`` slices the dead token tail away before any
     FLOP — both matmuls, the GELU and both absmax reductions see only
     live rows. Bit-identical to the composed two-linear photonic path on
-    the live slice (tests/test_fused_ffn.py).
+    the live slice (tests/test_fused_ffn.py) — per matmul at its own
+    width when ``bits`` is a (w1, w2) pair.
     """
+    bits1, bits2 = _bits_pair(bits)
     n_tokens = x.shape[-2]
     xl, lv = _slice_live(x, live_rows)
     if lv == 0:
@@ -291,16 +312,16 @@ def fused_ffn_xla(x: jax.Array, w1q: jax.Array, sw1: jax.Array,
     lead = xl.shape[:-1]
     dout = w2q.shape[1]
     x2 = xl.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    h = _int8_linear_xla(x2, w1q, sw1, bits=bits).astype(x.dtype) + b1
+    h = _int8_linear_xla(x2, w1q, sw1, bits=bits1).astype(x.dtype) + b1
     g = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
     y = _int8_linear_xla(g.astype(jnp.float32), w2q, sw2,
-                         bits=bits).astype(x.dtype) + b2
+                         bits=bits2).astype(x.dtype) + b2
     return _restore_dead(y.reshape(*lead, dout), n_tokens)
 
 
 def fused_ffn(x: jax.Array, w1q: jax.Array, sw1: jax.Array, b1: jax.Array,
               w2q: jax.Array, sw2: jax.Array, b2: jax.Array, *,
-              bits: int = 8, live_rows: int | None = None, bm: int = 128,
+              bits=8, live_rows: int | None = None, bm: int = 128,
               interpret: bool = True) -> jax.Array:
     """The fused int8 FFN, lowered for the host it runs on: the Pallas
     kernel when compiling for TPU (``interpret=False``), the XLA twin on

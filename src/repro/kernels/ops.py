@@ -91,7 +91,7 @@ def fused_roi_attention_prequant(x: jax.Array,
                                  wv: jax.Array, sv_: jax.Array,
                                  key_mask: jax.Array | None = None, *,
                                  heads: int, kv_len: int | None = None,
-                                 bits: int = 8,
+                                 bits=8,
                                  bq: int = 128, bkv: int = 128,
                                  interpret: bool = True) -> jax.Array:
     """The serving hot path in one jit: int8 cached-weight QKV projections
@@ -101,18 +101,27 @@ def fused_roi_attention_prequant(x: jax.Array,
     x (B, n, dm) float; wq/wk/wv (dm, dm) int8 codes with per-out-channel
     scales sq_/sk_/sv_ (dm,) f32; key_mask (B, n) keep-mask or None;
     ``kv_len`` the packed static alternative (one-shape serving mode).
+    ``bits`` is an int or a static (q, k, v) triple of per-projection
+    widths — mixed-precision bit plans may cache the three banks at
+    different widths; each projection quantizes its activations at its
+    own weight's width, exactly what the composed per-``linear`` dispatch
+    does (the flash score core downstream is width-agnostic float).
     Returns the merged head outputs (B, n, dm) in x.dtype — the output
     projection is the caller's ``linear`` (it is just one more cached
     weight). Numerically identical to composing ``linear`` projections
     with ``attend`` under the flash backend; this entry point only removes
     the per-projection dispatch from the per-frame step graph.
     """
+    if isinstance(bits, (tuple, list)):
+        bits_q, bits_k, bits_v = (int(b_) for b_ in bits)
+    else:
+        bits_q = bits_k = bits_v = int(bits)
     b, n, dm = x.shape
     dh = dm // heads
     xf = x.astype(jnp.float32)
-    q = photonic_matmul_prequant(xf, wq, sq_, bits=bits, interpret=interpret)
-    k = photonic_matmul_prequant(xf, wk, sk_, bits=bits, interpret=interpret)
-    v = photonic_matmul_prequant(xf, wv, sv_, bits=bits, interpret=interpret)
+    q = photonic_matmul_prequant(xf, wq, sq_, bits=bits_q, interpret=interpret)
+    k = photonic_matmul_prequant(xf, wk, sk_, bits=bits_k, interpret=interpret)
+    v = photonic_matmul_prequant(xf, wv, sv_, bits=bits_v, interpret=interpret)
 
     def split(t):
         # cast to x.dtype first: bit-identical to the composed path, where

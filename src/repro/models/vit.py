@@ -17,11 +17,13 @@ Standard ViT (Dosovitskiy et al.) with the paper's co-design hooks:
     the static packed live-token count into the FFN so fully-pruned rows
     skip both matmuls, the GELU and the requantization,
   * on the fully-fused serving point (photonic_pallas + flash + fused with
-    uniform cached bits) ``encode_tokens`` routes through one cached jit:
-    fused attention + fused FFN + both residual adds/LayerNorms compose
-    into a single jitted per-layer step scanned over the stacked layer
-    weights — the encoder costs one dispatch total instead of ~4 per
-    layer, computing bit-identical numbers to the composed dispatch,
+    cached <= 8-bit weights — uniform or a mixed per-layer bit plan)
+    ``encode_tokens`` routes through one cached jit: fused attention +
+    fused FFN + both residual adds/LayerNorms compose into a single
+    jitted per-layer step scanned over the stacked layer weights, mixed
+    plans segmenting the stack into equal-bits runs (one scan per run,
+    still one jit) — the encoder costs ~one dispatch total instead of ~4
+    per layer, computing bit-identical numbers to the composed dispatch,
   * optional Eq. 2 decomposed attention dataflow (attn_impl="decomposed"),
   * optional MGNet RoI pruning: patches are scored by MGNet and only the
     top-k (static budget = ceil(keep_ratio * N)) enter encoder block 0 —
@@ -153,6 +155,52 @@ def encoder_layer_step(carry: jnp.ndarray, lp: dict, cfg: ArchConfig,
     return carry + ffn_mod.mlp(lp["ffn"], h2, policy, live_rows=ffn_live)
 
 
+def _is_qw(a) -> bool:
+    return isinstance(a, QuantizedWeight)
+
+
+def _blocks_qw_leaves(blocks) -> list:
+    return [a for a in jax.tree_util.tree_leaves(blocks, is_leaf=_is_qw)
+            if _is_qw(a)]
+
+
+def _blocks_bits_key(blocks) -> tuple:
+    """Hashable per-leaf bits signature of the stacked blocks' cache —
+    jit-cache key material alongside ``ExecPolicy.fingerprint()`` (the
+    params treedef changing would retrace anyway; keying explicitly keeps
+    one wrapper per plan in ``_FUSED_ENCODER_JITS``)."""
+    return tuple(a.bits for a in _blocks_qw_leaves(blocks))
+
+
+def _bit_segments(blocks, n_layers: int) -> list[tuple[int, int]]:
+    """[lo, hi) runs of consecutive layers whose cached widths agree on
+    every QuantizedWeight leaf — the units the segmented scan compiles.
+    Uniform caches (every ``bits`` an int) are one run: today's path."""
+    leaves = _blocks_qw_leaves(blocks)
+    if not any(isinstance(a.bits, tuple) for a in leaves):
+        return [(0, n_layers)]
+    sig = [tuple(a.layer_bits(i) for a in leaves) for i in range(n_layers)]
+    segs, lo = [], 0
+    for i in range(1, n_layers + 1):
+        if i == n_layers or sig[i] != sig[lo]:
+            segs.append((lo, i))
+            lo = i
+    return segs
+
+
+def _slice_blocks(blocks, lo: int, hi: int):
+    """Layer-range slice of the stacked blocks. QuantizedWeight leaves
+    keep codes/scales stacked but collapse ``bits`` to the run's single
+    int width — what makes every 2-D in-scan slice carry the int the
+    fused kernels and ``_weight_bits`` require."""
+    def sl(a):
+        if _is_qw(a):
+            return QuantizedWeight(a.wq[lo:hi], a.scale[lo:hi],
+                                   a.layer_bits(lo))
+        return a[lo:hi]
+    return jax.tree_util.tree_map(sl, blocks, is_leaf=_is_qw)
+
+
 def _encode_tokens_impl(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
                         policy: ExecPolicy,
                         patch_mask: jnp.ndarray | None,
@@ -176,47 +224,69 @@ def _encode_tokens_impl(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
                                   ffn_live), None
 
     fn = jax.checkpoint(body) if cfg.remat else body
-    x, _ = jax.lax.scan(fn, x, params["blocks"])
+    # segmented scan: runs of equal per-layer bit signature each scan as
+    # one unit, so a mixed-precision plan still traces a handful of scans
+    # inside ONE jit (uniform caches segment to today's single scan).
+    # lax.scan slices the stacked leaves exactly like the [lo:hi] slicing
+    # here, so the segmented walk is bitwise equal to the unrolled loop.
+    for lo, hi in _bit_segments(params["blocks"], cfg.n_layers):
+        seg = (params["blocks"] if (lo, hi) == (0, cfg.n_layers)
+               else _slice_blocks(params["blocks"], lo, hi))
+        x, _ = jax.lax.scan(fn, x, seg)
     x = layernorm(x, params["final_ln_g"], params["final_ln_b"], cfg.norm_eps)
     return linear(x[:, 0], params["head"], policy=policy)
 
 
-def _fused_encoder_eligible(params: dict, cfg: ArchConfig,
-                            policy: ExecPolicy) -> bool:
-    """True when the whole encoder can take the single-jit serving hot
-    path: int8 Pallas matmuls + flash attention + fused FFN, standard
-    dataflow, and every per-layer matmul weight quantize-once cached at
-    one bit width per fused entry (mixed-bits caches fall back to the
-    composed dispatch, mirroring ``_fused_prequant_eligible``)."""
+def _fused_encoder_ineligible_reason(params: dict, cfg: ArchConfig,
+                                     policy: ExecPolicy) -> str | None:
+    """None when the whole encoder can take the single-jit serving hot
+    path — int8 Pallas matmuls + flash attention + fused FFN, standard
+    dataflow, every per-layer matmul weight quantize-once cached at <= 8
+    bits (uniform *or* a mixed per-layer plan: the segmented scan slices
+    mixed stacks into equal-bits runs before the fused entries see them)
+    — else a human-readable reason for the composed fallback."""
     if not (policy.resolve_backend() == "photonic_pallas"
             and policy.resolve_attn_backend() == "flash"
-            and policy.resolve_ffn_backend() == "fused"
-            and cfg.attn_impl == "standard"):
-        return False
+            and policy.resolve_ffn_backend() == "fused"):
+        return (f"backends ({policy.resolve_backend()!r}, "
+                f"{policy.resolve_attn_backend()!r}, "
+                f"{policy.resolve_ffn_backend()!r}) are not the fused "
+                f"serving triple ('photonic_pallas', 'flash', 'fused')")
+    if cfg.attn_impl != "standard":
+        return f"attn_impl {cfg.attn_impl!r} (fused path needs 'standard')"
     blocks = params.get("blocks")
     if not isinstance(blocks, dict):
-        return False
+        return "params['blocks'] missing or not a dict"
     try:
-        attn = [blocks["attn"][n] for n in ("wq", "wk", "wv")]
-        ffn_w = [blocks["ffn"][n] for n in ("w1", "w2")]
+        ws = ([blocks["attn"][n] for n in ("wq", "wk", "wv")]
+              + [blocks["ffn"][n] for n in ("w1", "w2")])
     except (KeyError, TypeError):
-        return False
-    if not all(isinstance(w, QuantizedWeight) for w in attn + ffn_w):
-        return False
-    return (len({w.bits for w in attn}) == 1
-            and len({w.bits for w in ffn_w}) == 1
-            and ffn_w[0].bits <= 8)
+        return "blocks missing attn/ffn weight entries"
+    if not all(isinstance(w, QuantizedWeight) for w in ws):
+        return ("block weights not quantize-once cached "
+                "(run prepare_params)")
+    widths = set()
+    for w in ws:
+        widths.update(w.bits if isinstance(w.bits, tuple) else (w.bits,))
+    if not all(2 <= b <= 8 for b in widths):
+        return f"cached bit widths {sorted(widths)} outside [2, 8]"
+    return None
 
 
-# (cfg, policy fingerprint, kv_len, has_mask) -> jitted encode entry. The
-# serving engine holds one cfg/policy per stream and the ladder is small,
-# so this stays a handful of entries per process.
+def _fused_encoder_eligible(params: dict, cfg: ArchConfig,
+                            policy: ExecPolicy) -> bool:
+    return _fused_encoder_ineligible_reason(params, cfg, policy) is None
+
+
+# (cfg, policy fingerprint, blocks bits signature, kv_len, has_mask) ->
+# jitted encode entry. The serving engine holds one cfg/policy per stream
+# and the ladder is small, so this stays a handful of entries per process.
 _FUSED_ENCODER_JITS: dict = {}
 
 
-def _fused_encoder_jit(cfg: ArchConfig, policy: ExecPolicy,
+def _fused_encoder_jit(cfg: ArchConfig, policy: ExecPolicy, bits_key: tuple,
                        kv_len: int | None, has_mask: bool):
-    key = (cfg, policy.fingerprint(), kv_len, has_mask)
+    key = (cfg, policy.fingerprint(), bits_key, kv_len, has_mask)
     fn = _FUSED_ENCODER_JITS.get(key)
     if fn is None:
         fn = jax.jit(lambda p, t, m: _encode_tokens_impl(p, t, cfg, policy,
@@ -244,21 +314,31 @@ def encode_tokens(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
     in the trunk.
 
     On the fully-fused serving point (photonic_pallas + flash + fused, all
-    weights cached at uniform bits) the call routes through a cached jit
-    of the whole trunk — fused attention + fused FFN + norms/residuals as
-    one jitted per-layer step scanned over the stacked layer weights, one
-    dispatch total. The jit computes the same graph this function traces
-    everywhere else, so serving callers that wrap their own jit around it
-    simply inline it.
+    weights cached at <= 8 bits — uniform or a mixed per-layer bit plan)
+    the call routes through a cached jit of the whole trunk — fused
+    attention + fused FFN + norms/residuals as one jitted per-layer step
+    scanned over the stacked layer weights (mixed plans scan each
+    equal-bits run), one dispatch total. The jit computes the same graph
+    this function traces everywhere else, so serving callers that wrap
+    their own jit around it simply inline it. When the policy requests
+    the fused point but the params are ineligible, a one-time
+    ``UserWarning`` names the reason before the composed fallback runs.
     """
     policy = policy or ExecPolicy.from_cfg(cfg)
     if patch_mask is not None and kv_len is not None:
         raise ValueError("give patch_mask or kv_len, not both")
-    if _fused_encoder_eligible(params, cfg, policy):
+    reason = _fused_encoder_ineligible_reason(params, cfg, policy)
+    if reason is None:
         fn = _fused_encoder_jit(cfg, policy,
+                                _blocks_bits_key(params["blocks"]),
                                 None if kv_len is None else int(kv_len),
                                 patch_mask is not None)
         return fn(params, tokens, patch_mask)
+    if policy.resolve_ffn_backend() == "fused":
+        # the policy asked for the fused serving point: name the cause of
+        # the composed-dispatch cliff once (core.backend keys the set)
+        from repro.core.backend import warn_fused_fallback
+        warn_fused_fallback("encoder", policy, reason)
     return _encode_tokens_impl(params, tokens, cfg, policy, patch_mask,
                                kv_len)
 

@@ -26,7 +26,7 @@ from typing import Iterable
 from repro.configs.base import ArchConfig
 from repro.core.energy import (EnergyReport, accumulate_matmuls,
                                energy_of_stats, kfps_per_watt,
-                               latency_of_stats)
+                               latency_of_stats, scale_for_bits)
 from repro.models.vit import vit_matmul_shapes
 
 __all__ = ["StreamAccounting"]
@@ -39,10 +39,26 @@ def _nonlin_elems(cfg: ArchConfig, n_tokens: int) -> int:
 
 
 class StreamAccounting:
-    """Accumulates per-frame EnergyReports bucket-by-bucket."""
+    """Accumulates per-frame EnergyReports bucket-by-bucket.
+
+    ``layer_bits`` (one width per encoder layer — a mixed-precision bit
+    plan's energy view, ``core.bitalloc.plan_layer_bits``) scales each
+    layer's *weight-stationary* matmul energy by its actual width: the MR
+    tuning, ADC/DAC conversion and SRAM code traffic of the q/k/v,
+    out-projection and both MLP matmuls pay ``bits/8`` of the calibrated
+    8-bit constants (``core.energy.scale_for_bits``), while the
+    activation-activation score/PV matmuls, the patch embed (always at
+    the default width) and every latency term stay unscaled — a lower
+    width buys energy per frame, not wall time, in this model."""
+
+    # index layout of one layer's chunk in vit_matmul_shapes: q, k, v,
+    # scores, attn@v, out-proj, mlp w1, mlp w2
+    _WEIGHT_IDX = (0, 1, 2, 5, 6, 7)
+    _ACT_IDX = (3, 4)
 
     def __init__(self, cfg: ArchConfig,
-                 ladder_sizes: Iterable[int] | None = None):
+                 ladder_sizes: Iterable[int] | None = None,
+                 layer_bits: Iterable[int] | None = None):
         self.cfg = cfg
         self.total = EnergyReport()
         self.frames = 0
@@ -51,10 +67,32 @@ class StreamAccounting:
         # launches (the first launch of a bucket is its jit compile)
         self.ladder_sizes = (tuple(int(k) for k in ladder_sizes)
                              if ladder_sizes is not None else None)
+        self.layer_bits = (tuple(int(b) for b in layer_bits)
+                           if layer_bits is not None else None)
+        if (self.layer_bits is not None
+                and len(self.layer_bits) != cfg.n_layers):
+            raise ValueError(f"layer_bits has {len(self.layer_bits)} "
+                             f"entries for {cfg.n_layers} layers")
         self.bucket_frames: Counter = Counter()
         self.bucket_launches: Counter = Counter()
         self._per_bucket: dict[int, EnergyReport] = {}
         self._mgnet: EnergyReport | None = None
+
+    def _mixed_bits_energy(self, shapes: list, nl: int) -> EnergyReport:
+        """Energy with each layer's weight-stationary matmuls scaled to
+        its planned width (see class docstring). Bit-exact to the
+        aggregate ``energy_of_stats`` when every layer is at 8 bits."""
+        embed_stats, _ = accumulate_matmuls(shapes[:1])
+        rep = energy_of_stats(embed_stats, nl)
+        for li, bits in enumerate(self.layer_bits):
+            chunk = shapes[1 + 8 * li: 1 + 8 * (li + 1)]
+            w_stats, _ = accumulate_matmuls([chunk[i]
+                                             for i in self._WEIGHT_IDX])
+            a_stats, _ = accumulate_matmuls([chunk[i]
+                                             for i in self._ACT_IDX])
+            rep += scale_for_bits(energy_of_stats(w_stats), bits)
+            rep += energy_of_stats(a_stats)
+        return rep
 
     def _bucket_report(self, k: int) -> EnergyReport:
         """Per-frame report for a k-patch encode (backbone only), cached —
@@ -66,7 +104,11 @@ class StreamAccounting:
             shapes = vit_matmul_shapes(self.cfg, kept_patches=kept)
             stats, tiles = accumulate_matmuls(shapes)
             nl = _nonlin_elems(self.cfg, k + 1)
-            rep = energy_of_stats(stats, nl)
+            if (self.layer_bits is not None
+                    and len(shapes) == 1 + 8 * self.cfg.n_layers):
+                rep = self._mixed_bits_energy(shapes, nl)
+            else:
+                rep = energy_of_stats(stats, nl)
             lat = latency_of_stats(stats, nl, n_tiles=tiles)
             rep.optical_us, rep.epu_us, rep.memory_us = (
                 lat.optical_us, lat.epu_us, lat.memory_us)

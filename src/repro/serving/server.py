@@ -122,6 +122,11 @@ class ServerConfig(ServingConfig):
     mesh: str = "auto"           # "auto": shard the encode batch axis over a
     #                              1-D data mesh when > 1 device is visible;
     #                              "off": never
+    bit_plan: tuple = ()         # mixed-precision bit plan for the shared
+    #                              weight cache (per-layer tuple or the dict
+    #                              form — core/bitalloc.py); () = uniform
+    #                              quant_bits. ``--bit-budget`` instead
+    #                              calibrates one at startup
 
     @staticmethod
     def from_serving(sc: ServingConfig, **overrides) -> "ServerConfig":
@@ -154,10 +159,15 @@ class StreamServer:
 
         if params is None:
             params = init_vit(jax.random.PRNGKey(seed), cfg, n_classes)
+        # the raw (pre-tuning) weights are kept: ``calibrate_bits`` re-tunes
+        # the cache from them under the emitted plan
+        self._raw_params = params
+        self.layer_bits: tuple | None = None
         if self.policy.is_photonic():
             # MR tuning happens once, before any stream starts — shared by
             # every session the server will ever serve.
-            params = prepare_params(params, bits=cfg.quant_bits or 8)
+            params = self._prepare(self.serve_cfg.bit_plan
+                                   or getattr(cfg, "bit_plan", None) or None)
         self.params = params
 
         self.mesh = (make_serving_mesh()
@@ -197,13 +207,29 @@ class StreamServer:
         if self.serve_cfg.warm_start:
             self.warm_start()
 
+    def _prepare(self, plan):
+        """MR-tune the shared cache from the raw weights under ``plan``
+        (None = uniform ``quant_bits``), fold the plan into the policy
+        fingerprint (every policy-keyed jit cache re-keys) and derive the
+        per-layer energy view threaded to each session's accounting."""
+        from repro.core import bitalloc
+        bits = self.cfg.quant_bits or 8
+        nplan = bitalloc.normalize_bit_plan(plan, self.cfg.n_layers,
+                                            default=bits)
+        self.policy.bit_plan = bitalloc.plan_key(nplan)
+        self.layer_bits = (bitalloc.plan_layer_bits(nplan, self.cfg.n_layers)
+                           if nplan is not None else None)
+        return prepare_params(self._raw_params, bits=bits, bit_plan=plan,
+                              n_layers=self.cfg.n_layers)
+
     # -- session registry --------------------------------------------------
 
     def add_session(self, stream: VideoStream, n_frames: int = 64,
                     start: int = 0) -> StreamSession:
         """Register a stream for the next ``serve()``; returns its session."""
         s = StreamSession(self._next_sid, stream, n_frames, start,
-                          self.serve_cfg, self.cfg, ladder=self.ladder)
+                          self.serve_cfg, self.cfg, ladder=self.ladder,
+                          layer_bits=self.layer_bits)
         self._next_sid += 1
         self._sessions.append(s)
         return s
@@ -258,7 +284,8 @@ class StreamServer:
         self._sessions = [
             s if s.finished or s.frames_seen > 0
             else StreamSession(s.sid, s.stream, s.n_frames, s.start,
-                               self.serve_cfg, self.cfg, ladder=self.ladder)
+                               self.serve_cfg, self.cfg, ladder=self.ladder,
+                               layer_bits=self.layer_bits)
             for s in self._sessions]
         return removed
 
@@ -315,6 +342,49 @@ class StreamServer:
                 f"surviving bucket (more tokens, possibly different "
                 f"predictions than an untrimmed run)", stacklevel=2)
         return removed
+
+    # -- sensitivity-driven bit allocation ---------------------------------
+
+    def calibrate_bits(self, target_mean_bits: float,
+                       calib_frames: int | None = None,
+                       candidates: tuple = (6, 4)) -> tuple:
+        """Emit a per-layer bit plan meeting ``target_mean_bits`` and
+        re-tune the shared weight cache under it (core/bitalloc.py).
+
+        The calibration batch is the first registered unfinished session's
+        leading ``calib_frames`` (default one ingest chunk), embedded on
+        the server's own policy — the sensitivity ranking then reflects
+        the numerics the streams will actually serve at. Re-tuning swaps
+        ``self.params`` (treedef change: every params-taking jit retraces
+        on its next call) and updates ``policy.bit_plan``; run *before*
+        ``warm_start()`` so the warmed jits compile the final plan.
+        Un-started sessions are re-pointed so their energy accounting
+        carries the plan's per-layer widths. Returns the plan tuple."""
+        from repro.core import bitalloc
+        if not self.policy.is_photonic():
+            raise ValueError("bit allocation needs a photonic backend "
+                             "(the plan drives the quantize-once cache)")
+        src = next((s for s in self._sessions if not s.finished), None)
+        if src is None:
+            raise ValueError("register at least one session before "
+                             "calibrate_bits (it provides the calibration "
+                             "frames)")
+        n = calib_frames or self.serve_cfg.chunk
+        frames = jnp.asarray(
+            src.stream.frames_at(src.start, n)["frames"], jnp.float32)
+        tokens = embed_patches(self.params, frames, self.cfg, self.policy)
+        plan = bitalloc.calibrate_bit_plan(
+            self._raw_params, tokens, self.cfg, self.policy,
+            target_mean_bits=target_mean_bits, candidates=candidates,
+            default=self.cfg.quant_bits or 8)
+        self.params = self._prepare(plan)
+        self._sessions = [
+            s if s.finished or s.frames_seen > 0
+            else StreamSession(s.sid, s.stream, s.n_frames, s.start,
+                               self.serve_cfg, self.cfg, ladder=self.ladder,
+                               layer_bits=self.layer_bits)
+            for s in self._sessions]
+        return plan
 
     # -- the serving loop --------------------------------------------------
 
@@ -481,7 +551,7 @@ class StreamServer:
         key axis — compute is *not* reduced. The bucketed path's frames/s
         win over this is the serving subsystem's raison d'etre."""
         s = StreamSession(-1, stream, n_frames, start, self.serve_cfg,
-                          self.cfg, ladder=None)
+                          self.cfg, ladder=None, layer_bits=self.layer_bits)
         t0 = time.time()
         while True:
             batch = s.next_batch()
@@ -546,6 +616,14 @@ def main(argv=None):
     ap.add_argument("--calib-frames", type=int, default=0,
                     help="frames per stream for --trim-dead-buckets "
                          "calibration (default 2 chunks)")
+    ap.add_argument("--bit-plan", default="",
+                    help="mixed-precision bit plan: comma per-layer widths "
+                         "('8,6,4,8'), a JSON literal, or a JSON file path "
+                         "(core/bitalloc.py formats)")
+    ap.add_argument("--bit-budget", type=float, default=0.0,
+                    help="> 0: calibrate a per-layer plan to this target "
+                         "mean bit width at startup (sensitivity-driven, "
+                         "overrides --bit-plan)")
     ap.add_argument("--no-warm-start", action="store_true",
                     help="skip the eager jit-ladder warm-up (first flushes "
                          "then pay their compiles)")
@@ -567,18 +645,23 @@ def main(argv=None):
                                            attn_backend=args.attn_backend,
                                            ffn_backend=args.ffn_backend)
 
+    bit_plan = ()
+    if args.bit_plan:
+        from repro.core.bitalloc import parse_bit_plan
+        bit_plan = parse_bit_plan(args.bit_plan) or ()
     server_cfg = ServerConfig(
         bucket_fractions=tuple(float(f) for f in args.buckets.split(",")),
         microbatch=args.microbatch, chunk=args.chunk,
         mask_refresh=args.mask_refresh,
         delta_threshold=args.delta_threshold, one_shape=args.one_shape,
         max_wait_chunks=args.max_wait, mix_streams=args.mix_streams,
-        warm_start=False, mesh=args.mesh)
+        warm_start=False, mesh=args.mesh, bit_plan=bit_plan)
     server = StreamServer(cfg, server_cfg)
     print(f"[server] {cfg.name} {cfg.img_size}x{cfg.img_size} "
           f"backend={server.policy.resolve_backend()} "
           f"attn={server.policy.resolve_attn_backend()} "
           f"ffn={server.policy.resolve_ffn_backend()} "
+          f"bits={list(server.layer_bits) if server.layer_bits else (cfg.quant_bits or 8)} "
           f"ladder={list(server.ladder.sizes)} of {server.n_patches} patches "
           f"mesh={'x'.join(str(n) for n in server.mesh.devices.shape) if server.mesh else 'off'}")
 
@@ -592,6 +675,12 @@ def main(argv=None):
         removed = server.calibrate_trim(args.calib_frames or None)
         print(f"[server] calibration trimmed buckets {list(removed)} -> "
               f"ladder {list(server.ladder.sizes)}")
+    if args.bit_budget > 0:
+        plan = server.calibrate_bits(args.bit_budget,
+                                     args.calib_frames or None)
+        print(f"[server] bit calibration -> per-layer plan {list(plan)} "
+              f"(mean {sum(plan) / len(plan):.2f} bits, "
+              f"target {args.bit_budget:g})")
     if not args.no_warm_start:
         server.warm_start()
         print(f"[server] jit ladder warmed in {server.warm_s:.2f}s "
@@ -613,11 +702,14 @@ def main(argv=None):
             "streams": len(sessions), "frames_total": total,
             "aggregate_fps": agg_fps, "warm_s": server.warm_s,
             "ladder": list(server.ladder.sizes),
+            "layer_bits": (list(server.layer_bits)
+                           if server.layer_bits else None),
             "sessions": {
                 str(s.sid): {
                     "frames": results[s.sid].frames,
                     "fps": results[s.sid].fps,
                     "kfps_per_watt": results[s.sid].kfps_per_watt,
+                    "mean_bits": results[s.sid].mean_bits,
                     "bucket_hits": results[s.sid].bucket_hits,
                     "predictions": results[s.sid].predictions,
                 } for s in sessions},

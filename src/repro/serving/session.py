@@ -74,6 +74,8 @@ class StreamResult:
     kfps_per_watt: float = 0.0
     mean_frame_uj: float = 0.0
     dense_kfps_per_watt: float = 0.0
+    mean_bits: float = 0.0       # mean planned weight width (8.0 = uniform
+    #                              int8; < 8 under a mixed-precision plan)
     predictions: dict = field(default_factory=dict)   # frame_idx -> class
 
     @property
@@ -108,7 +110,8 @@ class StreamSession:
 
     def __init__(self, sid: int, stream: VideoStream, n_frames: int,
                  start: int, serve_cfg: ServingConfig, cfg,
-                 ladder: BucketLadder | None = None):
+                 ladder: BucketLadder | None = None,
+                 layer_bits: tuple | None = None):
         self.sid = sid
         self.stream = stream
         self.n_frames = n_frames
@@ -117,8 +120,11 @@ class StreamSession:
         self.serve_cfg = serve_cfg
         self.cache = TemporalMaskCache(serve_cfg.mask_refresh,
                                        serve_cfg.delta_threshold)
+        self.layer_bits = (tuple(int(b) for b in layer_bits)
+                           if layer_bits is not None else None)
         self.acct = StreamAccounting(
-            cfg, ladder_sizes=ladder.sizes if ladder is not None else None)
+            cfg, ladder_sizes=ladder.sizes if ladder is not None else None,
+            layer_bits=self.layer_bits)
         self.hist = BucketHistogram(ladder) if ladder is not None else None
         self.deferred: list = []     # (frame_idx list, argmax device array)
         self.frames_seen = 0         # valid frames ingested so far
@@ -195,5 +201,7 @@ class StreamSession:
         res.kfps_per_watt = self.acct.kfps_per_watt
         res.mean_frame_uj = self.acct.mean_frame.total_uj
         res.dense_kfps_per_watt = self.acct.dense_baseline_kfps_per_watt()
+        res.mean_bits = (sum(self.layer_bits) / len(self.layer_bits)
+                         if self.layer_bits else 8.0)
         self.finished = True
         return res

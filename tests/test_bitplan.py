@@ -1,0 +1,349 @@
+"""Mixed-precision bit plans: formats, cache contract, fallback warnings,
+the sensitivity calibrator, and the per-layer energy accounting.
+
+The bitwise fused-vs-composed / segmented-scan-vs-unrolled parity of mixed
+plans lives in tests/test_differential.py section (e) (slow job); this
+module is the fast-suite unit coverage of everything around it:
+
+  * plan canonicalization (``core.bitalloc``): per-layer sequences, the
+    dict form with per-tensor suffix overrides, CLI parsing, and the
+    hashable ``plan_key`` that ``ExecPolicy.fingerprint()`` folds into
+    jit-cache keys;
+  * ``prepare_params(bit_plan=...)``: per-layer widths land on the stacked
+    block weights, everything else keeps the default;
+  * the stale-cache contract (``_weight_bits``): a cached width that
+    disagrees with a uniform ``quant_bits`` is a hard error — never a
+    silent preference — unless the divergence is deliberate
+    (``quant_bits=0`` or an installed ``bit_plan``);
+  * the one-warning-per-fingerprint fused-fallback telemetry;
+  * ``calibrate_bit_plan`` meeting its target mean width;
+  * ``scale_for_bits`` + ``StreamAccounting(layer_bits=...)``: uniform-8
+    plans are bit-exact to the unscaled aggregate, lower widths only ever
+    reduce energy and never touch latency.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import smoke_variant
+from repro.configs.opto_vit import get_config
+from repro.core import bitalloc
+from repro.core.backend import (ExecPolicy, QuantizedWeight, linear,
+                                prepare_params, quantize_weight,
+                                reset_fused_fallback_warnings)
+from repro.core.energy import (EnergyReport, accumulate_matmuls,
+                               energy_of_stats, scale_for_bits)
+from repro.models import ffn as ffn_mod
+from repro.models.vit import embed_patches, encode_tokens, init_vit
+from repro.serving.accounting import StreamAccounting
+
+N_LAYERS = 2
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_variant(get_config("tiny")).with_(n_layers=N_LAYERS)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_vit(jax.random.PRNGKey(1), cfg, n_classes=8)
+
+
+# --------------------------------------------------------------------------
+# plan formats (normalize / parse / resolve / key)
+# --------------------------------------------------------------------------
+
+def test_normalize_sequence_and_empty():
+    assert bitalloc.normalize_bit_plan(None, 2) is None
+    assert bitalloc.normalize_bit_plan((), 2) is None
+    p = bitalloc.normalize_bit_plan([8, 4], 2)
+    assert p == {"default": 8, "layers": (8, 4), "tensors": {}}
+
+
+def test_normalize_dict_with_tensor_overrides():
+    p = bitalloc.normalize_bit_plan(
+        {"layers": [8, 6], "default": 8, "attn/wq": 4, "ffn/w2": [6, 4]}, 2)
+    assert p["layers"] == (8, 6)
+    assert p["tensors"] == {"attn/wq": 4, "ffn/w2": (6, 4)}
+
+
+def test_normalize_rejects_bad_widths_and_lengths():
+    with pytest.raises(ValueError, match=r"outside the photonic"):
+        bitalloc.normalize_bit_plan([8, 16], 2)
+    with pytest.raises(ValueError, match=r"outside the photonic"):
+        bitalloc.normalize_bit_plan([8, 1], 2)
+    with pytest.raises(ValueError, match=r"3 entries for 2 layers"):
+        bitalloc.normalize_bit_plan([8, 6, 4], 2)
+
+
+def test_parse_cli_forms(tmp_path):
+    assert bitalloc.parse_bit_plan("8,6,4,8") == (8, 6, 4, 8)
+    assert bitalloc.parse_bit_plan("") is None
+    assert bitalloc.parse_bit_plan('{"layers": [8, 4]}') == {"layers": [8, 4]}
+    f = tmp_path / "plan.json"
+    f.write_text('{"layers": [6, 6], "attn/wq": 4}')
+    assert bitalloc.parse_bit_plan(str(f)) == {"layers": [6, 6],
+                                               "attn/wq": 4}
+
+
+def test_resolve_bits_precedence():
+    p = bitalloc.normalize_bit_plan(
+        {"layers": [8, 6], "attn/wq": 4, "wq": 5}, 2)
+    # longest matching suffix wins over the shorter one
+    assert bitalloc.resolve_bits(p, ("blocks", "attn", "wq")) == 4
+    assert bitalloc.resolve_bits(p, ("blocks", "mgnet", "wq")) == 5
+    # block weights without an override take the per-layer assignment
+    assert bitalloc.resolve_bits(p, ("blocks", "ffn", "w1")) == (8, 6)
+    # everything outside the blocks subtree stays at the default
+    assert bitalloc.resolve_bits(p, ("head",)) == 8
+    assert bitalloc.resolve_bits(None, ("head",)) is None
+
+
+def test_plan_key_hashable_and_canonical():
+    a = bitalloc.plan_key(bitalloc.normalize_bit_plan(
+        {"layers": [8, 4], "attn/wq": 6, "ffn/w2": 4}, 2))
+    b = bitalloc.plan_key(bitalloc.normalize_bit_plan(
+        {"ffn/w2": 4, "attn/wq": 6, "layers": (8, 4)}, 2))
+    assert a == b and hash(a) == hash(b)
+    assert bitalloc.plan_key(None) is None
+
+
+def test_plan_layer_bits_and_mean():
+    p = bitalloc.normalize_bit_plan([8, 4], 2)
+    assert bitalloc.plan_layer_bits(p, 2) == (8, 4)
+    assert bitalloc.plan_mean_bits(p, 2) == 6.0
+    assert bitalloc.plan_layer_bits(None, 3) == (8, 8, 8)
+    d = bitalloc.normalize_bit_plan({"default": 6}, 2)
+    assert bitalloc.plan_layer_bits(d, 2) == (6, 6)
+
+
+def test_fingerprint_carries_bit_plan(cfg):
+    a = ExecPolicy(backend="photonic_pallas", quant_bits=8)
+    b = ExecPolicy(backend="photonic_pallas", quant_bits=8,
+                   bit_plan=(8, 4))
+    assert a.fingerprint() != b.fingerprint()
+    c = ExecPolicy.from_cfg(cfg.with_(bit_plan=(8, 4)))
+    assert c.bit_plan == (8, 4)
+
+
+# --------------------------------------------------------------------------
+# prepare_params under a plan
+# --------------------------------------------------------------------------
+
+def test_prepare_params_applies_per_layer_widths(params):
+    prep = prepare_params(params, bits=8, bit_plan=(8, 4))
+    w1 = prep["blocks"]["ffn"]["w1"]
+    assert isinstance(w1, QuantizedWeight) and w1.bits == (8, 4)
+    assert w1.layer_bits(0) == 8 and w1.layer_bits(1) == 4
+    assert w1.uniform_bits() is None
+    # non-block weights stay at the default width
+    assert prep["head"].bits == 8
+
+
+def test_prepare_params_tensor_override(params):
+    prep = prepare_params(params, bits=8,
+                          bit_plan={"layers": [8, 8], "ffn/w2": 4})
+    assert prep["blocks"]["ffn"]["w2"].bits == 4
+    assert prep["blocks"]["ffn"]["w1"].bits == 8
+
+
+def test_prepare_params_uniform_plan_collapses(params):
+    prep = prepare_params(params, bits=8, bit_plan=(6, 6))
+    assert prep["blocks"]["ffn"]["w1"].bits == 6      # int, not (6, 6)
+
+
+def test_quantize_weight_per_layer_roundtrip():
+    w = jnp.stack([jnp.eye(4), 2 * jnp.eye(4)])
+    qw = quantize_weight(w, bits=(8, 4))
+    assert qw.bits == (8, 4)
+    for i, rtol in ((0, 1e-2), (1, 2e-1)):            # 4-bit is coarse
+        sliced = QuantizedWeight(qw.wq[i], qw.scale[i], qw.layer_bits(i))
+        np.testing.assert_allclose(np.asarray(sliced.dequantize()),
+                                   np.asarray(w[i]), rtol=rtol, atol=rtol)
+    with pytest.raises(ValueError):
+        quantize_weight(jnp.eye(4), bits=(8, 4))      # 2-D vs per-layer
+
+
+# --------------------------------------------------------------------------
+# the stale-cache contract (_weight_bits)
+# --------------------------------------------------------------------------
+
+def test_cache_policy_mismatch_raises():
+    w = quantize_weight(jax.random.normal(jax.random.PRNGKey(0), (16, 16)),
+                        bits=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    p8 = ExecPolicy(backend="photonic_pallas", quant_bits=8, training=False)
+    with pytest.raises(ValueError, match=r"disagrees with"):
+        linear(x, w, policy=p8)
+    # deliberate divergence: defer to the cache ...
+    p0 = ExecPolicy(backend="photonic_pallas", quant_bits=0, training=False)
+    out = linear(x, w, policy=p0)
+    assert np.isfinite(np.asarray(out)).all()
+    # ... or declare the plan on the policy
+    pp = ExecPolicy(backend="photonic_pallas", quant_bits=8, training=False,
+                    bit_plan=(4,))
+    np.testing.assert_array_equal(np.asarray(linear(x, w, policy=pp)),
+                                  np.asarray(out))
+
+
+def test_stacked_mixed_weight_in_2d_dispatch_raises():
+    w = quantize_weight(
+        jax.random.normal(jax.random.PRNGKey(0), (2, 16, 16)), bits=(8, 4))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    p = ExecPolicy(backend="photonic_pallas", quant_bits=0, training=False)
+    with pytest.raises(ValueError, match=r"slice it"):
+        linear(x, w, policy=p)
+
+
+# --------------------------------------------------------------------------
+# fused-fallback warnings: once per fingerprint, silent when fused
+# --------------------------------------------------------------------------
+
+def _mlp(seed=0, d=16, dff=32, cache=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    p = {"w1": jax.random.normal(ks[0], (d, dff)) * 0.1,
+         "b1": jax.random.normal(ks[1], (dff,)) * 0.1,
+         "w2": jax.random.normal(ks[2], (dff, d)) * 0.1,
+         "b2": jax.random.normal(ks[3], (d,)) * 0.1}
+    if cache:
+        p["w1"], p["w2"] = quantize_weight(p["w1"]), quantize_weight(p["w2"])
+    return p
+
+
+def test_ffn_fallback_warns_once_and_names_reason():
+    reset_fused_fallback_warnings()
+    p = _mlp(cache=False)                     # raw weights: ineligible
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 5, 16))
+    pol = ExecPolicy(backend="photonic_pallas", quant_bits=8,
+                     training=False, ffn_backend="fused")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ffn_mod.mlp(p, x, pol)
+        ffn_mod.mlp(p, x, pol)                # second call: already warned
+    msgs = [str(w.message) for w in rec
+            if "fell back to composed" in str(w.message)]
+    assert len(msgs) == 1
+    assert "not quantize-once cached" in msgs[0]
+    assert "Fused-path eligibility" in msgs[0]
+    # a different fingerprint (new plan) warns again
+    with warnings.catch_warnings(record=True) as rec2:
+        warnings.simplefilter("always")
+        ffn_mod.mlp(p, x, ExecPolicy(backend="photonic_pallas",
+                                     quant_bits=8, training=False,
+                                     ffn_backend="fused", bit_plan=(4,)))
+    assert sum("fell back" in str(w.message) for w in rec2) == 1
+
+
+def test_fused_path_is_silent(cfg, params):
+    reset_fused_fallback_warnings()
+    prep = prepare_params(params, bits=8, bit_plan=(8, 4))
+    c = cfg.with_(matmul_backend="photonic_pallas", quant_bits=8,
+                  attn_backend="flash", ffn_backend="fused", bit_plan=(8, 4))
+    toks = embed_patches(prep, jax.random.normal(jax.random.PRNGKey(0),
+                                                 (2, 32, 32, 3)), c)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        encode_tokens(prep, toks, c)
+    assert not [w for w in rec if "fell back" in str(w.message)]
+
+
+def test_full_fallback_warns_each_component_once(cfg, params):
+    """Raw weights + the full fused triple requested: encoder, attention
+    prequant and FFN each report their own fallback exactly once."""
+    reset_fused_fallback_warnings()
+    c = cfg.with_(matmul_backend="photonic_pallas", quant_bits=8,
+                  attn_backend="flash", ffn_backend="fused")
+    toks = embed_patches(params, jax.random.normal(jax.random.PRNGKey(0),
+                                                   (2, 32, 32, 3)), c)
+    pol = ExecPolicy.from_cfg(c, training=False)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        encode_tokens(params, toks, c, pol)
+        encode_tokens(params, toks, c, pol)
+    msgs = [str(w.message) for w in rec if "fell back" in str(w.message)]
+    assert len(msgs) == 3
+    assert sum("fused encoder" in m for m in msgs) == 1
+    assert sum("fused attention-prequant" in m for m in msgs) == 1
+    assert sum("fused FFN" in m for m in msgs) == 1
+
+
+# --------------------------------------------------------------------------
+# the calibrator
+# --------------------------------------------------------------------------
+
+def test_calibrator_meets_target_mean(cfg, params):
+    toks = embed_patches(prepare_params(params, bits=8),
+                         jax.random.normal(jax.random.PRNGKey(3),
+                                           (4, 32, 32, 3)), cfg)
+    pol = ExecPolicy(backend="photonic_pallas", quant_bits=8,
+                     training=False)
+    plan = bitalloc.calibrate_bit_plan(params, toks, cfg, pol,
+                                       target_mean_bits=7.0)
+    assert len(plan) == cfg.n_layers
+    assert sum(plan) / len(plan) <= 7.0
+    assert all(b in (8, 6, 4) for b in plan)
+    # a target at (or above) the default is the uniform plan
+    assert bitalloc.calibrate_bit_plan(params, toks, cfg, pol,
+                                       target_mean_bits=8.0) == (8, 8)
+
+
+def test_calibrator_floor_terminates(cfg, params):
+    toks = embed_patches(prepare_params(params, bits=8),
+                         jax.random.normal(jax.random.PRNGKey(3),
+                                           (2, 32, 32, 3)), cfg)
+    pol = ExecPolicy(backend="photonic_pallas", quant_bits=8,
+                     training=False)
+    # unreachable target: every layer bottoms out at the lowest candidate
+    plan = bitalloc.calibrate_bit_plan(params, toks, cfg, pol,
+                                       target_mean_bits=1.0,
+                                       candidates=(6,))
+    assert plan == (6, 6)
+
+
+# --------------------------------------------------------------------------
+# per-layer energy accounting
+# --------------------------------------------------------------------------
+
+def test_scale_for_bits_rules():
+    stats, _ = accumulate_matmuls([(16, 64, 64)])
+    rep = energy_of_stats(stats, nonlin_elems=100)
+    rep.optical_us = 1.0
+    half = scale_for_bits(rep, 4)
+    for f in ("tuning_uj", "adc_uj", "dac_uj", "memory_uj"):
+        assert getattr(half, f) == pytest.approx(getattr(rep, f) / 2)
+    for f in ("vcsel_uj", "bpd_uj", "epu_uj", "optical_us"):
+        assert getattr(half, f) == getattr(rep, f)
+    same = scale_for_bits(rep, 8)
+    assert same.total_uj == pytest.approx(rep.total_uj)
+
+
+def test_accounting_uniform8_plan_matches_unplanned(cfg):
+    a = StreamAccounting(cfg)
+    b = StreamAccounting(cfg, layer_bits=(8,) * cfg.n_layers)
+    for acct in (a, b):
+        acct.add_encode(16, 8)
+        acct.add_mgnet(2)
+    assert b.mean_frame.total_uj == pytest.approx(a.mean_frame.total_uj,
+                                                  rel=1e-9)
+    assert b.mean_frame.total_us == pytest.approx(a.mean_frame.total_us)
+
+
+def test_accounting_mixed_plan_cuts_energy_not_latency(cfg):
+    uni = StreamAccounting(cfg)
+    mix = StreamAccounting(cfg, layer_bits=(8, 4))
+    for acct in (uni, mix):
+        acct.add_encode(16, 8)
+    assert mix.mean_frame.total_uj < uni.mean_frame.total_uj
+    assert mix.mean_frame.total_us == pytest.approx(
+        uni.mean_frame.total_us)
+    assert mix.kfps_per_watt > uni.kfps_per_watt
+
+
+def test_accounting_rejects_wrong_plan_length(cfg):
+    with pytest.raises(ValueError, match="entries for"):
+        StreamAccounting(cfg, layer_bits=(8,) * (cfg.n_layers + 1))

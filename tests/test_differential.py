@@ -459,7 +459,8 @@ def test_fuzz_fused_ffn_live_rows_packed_skip(b, s, live, seed):
 def _slice_layer(blocks, layer):
     def slc(w):
         if isinstance(w, QuantizedWeight):
-            return QuantizedWeight(w.wq[layer], w.scale[layer], w.bits)
+            return QuantizedWeight(w.wq[layer], w.scale[layer],
+                                   w.layer_bits(layer))
         return w[layer]
     return jax.tree_util.tree_map(
         slc, blocks, is_leaf=lambda w: isinstance(w, QuantizedWeight))
@@ -552,3 +553,93 @@ def test_pinned_one_shape_fused_ffn_parity(base_cfg, prepared, images, k):
         assert np.corrcoef(a.ravel(), b.ravel())[0, 1] > 0.999, name
         np.testing.assert_allclose(a, b, rtol=0.35, atol=0.35,
                                    err_msg=name)
+
+
+# --------------------------------------------------------------------------
+# (e) mixed-precision per-layer bit plans
+# --------------------------------------------------------------------------
+
+def _mixed_prepared(params, plan):
+    return prepare_params(params, bits=8, bit_plan=plan)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([4, 6, 8]), st.sampled_from([4, 6, 8]),
+       st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["photonic_pallas", "photonic_sim"]))
+def test_fuzz_bit_plan_fused_matches_composed(base_cfg, params, images,
+                                              b0, b1, seed, backend):
+    """Generated per-layer 4/6/8 plans: ffn_backend="fused" ==
+    ffn_backend="xla" bit-for-bit under the *same* plan, per matmul
+    backend — on photonic_pallas through the mixed-width fused kernels
+    (per-weight bits as static params), on photonic_sim through the
+    documented auto-fallback. ``cfg.bit_plan`` marks the width divergence
+    deliberate, so the stale-cache check stays out of the way."""
+    plan = (b0, b1)
+    prep = _mixed_prepared(params, plan)
+    mask = (jax.random.uniform(jax.random.PRNGKey(seed), (2, N_PATCHES))
+            > 0.5).astype(jnp.float32)
+    cfg_x = base_cfg.with_(matmul_backend=backend, quant_bits=8,
+                           attn_backend="flash", bit_plan=plan)
+    cfg_f = cfg_x.with_(ffn_backend="fused")
+    lg_x, _ = forward_vit_masked(prep, images, mask, cfg_x)
+    lg_f, _ = forward_vit_masked(prep, images, mask, cfg_f)
+    np.testing.assert_array_equal(np.asarray(lg_x), np.asarray(lg_f),
+                                  err_msg=f"{backend} plan={plan}")
+
+
+MIXED_PLANS = [(8, 4), (4, 8), (6, 6), (8, 6)]   # segment layouts: split,
+#                                                  split, uniform-low, split
+
+
+@pytest.mark.parametrize("plan", MIXED_PLANS)
+@pytest.mark.parametrize("seed", FUSED_ENCODER_SEEDS)
+def test_pinned_segmented_scan_equals_unrolled_loop_mixed(base_cfg, params,
+                                                          plan, seed):
+    """The mixed-plan tentpole contract: the segmented-scan encoder (one
+    jit, one lax.scan per run of equal bit signature) is bit-identical to
+    the jitted unrolled per-layer loop of composed steps at the same
+    per-layer widths. Eager-loop agreement is float-noise only, for the
+    same standalone-GELU codegen reason as the uniform pinned test."""
+    prep = _mixed_prepared(params, plan)
+    cfg = base_cfg.with_(matmul_backend="photonic_pallas", quant_bits=8,
+                         attn_backend="flash", ffn_backend="fused",
+                         bit_plan=plan)
+    pol = ExecPolicy.from_cfg(cfg, training=False)
+    toks = jax.random.normal(jax.random.PRNGKey(seed),
+                             (2, N_PATCHES, cfg.d_model))
+    lg_scan = encode_tokens(prep, toks, cfg, pol)
+    lg_loop_j = jax.jit(
+        lambda p, t: _unrolled_encoder(p, t, cfg, pol))(prep, toks)
+    np.testing.assert_array_equal(np.asarray(lg_scan),
+                                  np.asarray(lg_loop_j),
+                                  err_msg=f"plan={plan}")
+    lg_loop_e = _unrolled_encoder(prep, toks, cfg, pol)
+    np.testing.assert_allclose(np.asarray(lg_scan), np.asarray(lg_loop_e),
+                               rtol=2e-5, atol=2e-5,
+                               err_msg=f"plan={plan} (eager)")
+
+
+def test_pinned_bit_segments_layout(base_cfg, params, prepared):
+    """Segment boundaries fall exactly at bit-signature changes, and a
+    uniform cache keeps the single-scan fast path (no slicing)."""
+    from repro.models.vit import _bit_segments
+    assert _bit_segments(prepared["blocks"], base_cfg.n_layers) == [(0, 2)]
+    mixed = _mixed_prepared(params, (8, 4))
+    assert _bit_segments(mixed["blocks"], base_cfg.n_layers) == \
+        [(0, 1), (1, 2)]
+    low = _mixed_prepared(params, (6, 6))    # uniform plan collapses
+    assert _bit_segments(low["blocks"], base_cfg.n_layers) == [(0, 2)]
+
+
+@pytest.mark.parametrize("plan", [(8, 4), (6, 8)])
+def test_pinned_mixed_plan_masked_vs_gathered(base_cfg, params, images,
+                                              plan):
+    """The serving parity property survives a mixed plan: gathered top-k
+    == masked dense on the fully-fused mixed-width hot path, to the same
+    w8a8 tolerance class as the uniform contract."""
+    prep = _mixed_prepared(params, plan)
+    cfg = base_cfg.with_(matmul_backend="photonic_pallas", quant_bits=8,
+                         attn_backend="flash", ffn_backend="fused",
+                         bit_plan=plan)
+    _masked_vs_gathered(cfg, prep, images, k=8, seed=5)

@@ -90,13 +90,26 @@ def test_fused_backend_falls_back_without_cache():
         np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
 
 
-def test_fused_backend_falls_back_on_mixed_bits():
+def test_fused_backend_stays_fused_on_mixed_bits():
+    """Per-weight widths (w1 at 8 bits, w2 at 4) are fused-eligible: the
+    kernel takes the (w1.bits, w2.bits) pair as static params — input
+    quant at w1's width, hidden requant at w2's — and stays bit-identical
+    to the composed two-linear dispatch. Widths defer to the cache
+    (quant_bits=0); a uniform quant_bits that *disagrees* with the cache
+    is a hard error, covered in tests/test_bitplan.py."""
+    from repro.core.backend import _fused_ffn_ineligible_reason
     params = _mlp_params(0, 32, 64)
     mixed = {"w1": quantize_weight(params["w1"], bits=8), "b1": params["b1"],
              "w2": quantize_weight(params["w2"], bits=4), "b2": params["b2"]}
     x = _x(1, (2, 9, 32))
-    ref = ffn_mod.mlp(mixed, x, COMPOSED)
-    got = ffn_mod.mlp(mixed, x, FUSED)
+    composed = ExecPolicy(backend="photonic_pallas", quant_bits=0,
+                          training=False)
+    fused = ExecPolicy(backend="photonic_pallas", quant_bits=0,
+                       training=False, ffn_backend="fused")
+    assert _fused_ffn_ineligible_reason(mixed["w1"], mixed["w2"],
+                                        fused) is None
+    ref = ffn_mod.mlp(mixed, x, composed)
+    got = ffn_mod.mlp(mixed, x, fused)
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
 
 
