@@ -1,0 +1,205 @@
+"""Serving control plane benchmark: calibration accuracy + autotune win.
+
+Two gates over ``repro.serving.control``:
+
+  1. **Calibration accuracy** (tiny-224, natural MGNet routing): run an
+     autotuned server so every flush is timed, then cut the fit on the
+     *first half* of the telemetry and score it on the *second half* —
+     a strictly prequential split, no observation scores its own fit.
+     Gate: median relative error <= 25%. The cost model's raw numbers are
+     TPU-class roofline seconds and the host is not that machine; what the
+     gate pins is that the fitted ``obs ~= a * pred + b`` map transfers,
+     i.e. the HLO-derived FLOP/byte features *rank and scale* real flush
+     walls well enough to steer knobs.
+
+  2. **Autotune win** (tiny-96, 4 bursty streams, pinned 50% skip): the
+     same uneven fleet served twice — a static-default server that warms
+     the full jit ladder (the status quo deployment), and an autotuned
+     server whose route probe compiles only reachable buckets (costing
+     doubles as warm-up) and whose controller re-tunes the re-timing
+     knobs online. Gate: autotuned aggregate fps >= 1.1x static, with fps
+     charged end-to-end (warm/prepare wall included — startup cost is
+     real cost). Predictions must stay per-stream bitwise identical: the
+     control plane re-times, it never re-routes.
+
+    PYTHONPATH=src python -m benchmarks.controller_bench           # gates
+    PYTHONPATH=src python -m benchmarks.controller_bench --smoke   # fast
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import time
+
+from repro.configs.opto_vit import get_config
+from repro.data.pipeline import VideoStream, video_fleet
+from repro.serving.control import Controller, FlushTelemetry, TunedKnobs
+from repro.serving.server import ServerConfig, StreamServer
+from repro.serving.session import ServingConfig
+
+MEDRELERR_GATE = 0.25
+SPEEDUP_GATE = 1.1
+OUT_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+
+
+def _calibration_split(img: int, n_streams: int, frames: int) -> dict:
+    """Prequential calibration score: fit on the first half of the timed
+    flushes, evaluate on the second half."""
+    print(f"  [1] calibration split: tiny-{img}, {n_streams} streams x "
+          f"{frames} frames, natural routing")
+    cfg = get_config("tiny", img_size=img, mgnet=True).with_(
+        matmul_backend="bf16")
+    sc = ServingConfig(microbatch=4, chunk=8)        # no pin: spread buckets
+    srv = StreamServer(cfg, ServerConfig.from_serving(
+        sc, warm_start=False, autotune=True), n_classes=10)
+    for i in range(n_streams):
+        srv.add_session(VideoStream(img_size=img, patch=16, cut_every=32),
+                        n_frames=frames, start=32 * i)
+    srv.autotune_prepare()
+    srv.serve()
+
+    obs = sorted(srv.telemetry, key=lambda o: o.seq)
+    cut = len(obs) // 2
+    train, test = obs[:cut], obs[cut:]
+    replay = FlushTelemetry(window=max(1, len(train)))
+    for o in train:
+        replay.record(o.bucket, o.n_real, o.microbatch, o.n_streams,
+                      o.wall_s, o.round)
+    ctl = Controller(srv.cost_model, replay, TunedKnobs())
+    assert ctl.calibrate(), "calibration needs at least one priced bucket"
+    errs = [abs(ctl.predict_flush_s(o.bucket) - o.wall_s) / o.wall_s
+            for o in test if o.wall_s > 0]
+    med = statistics.median(errs) if errs else None
+    a, b = ctl._fit
+    med_s = f"{med:.1%}" if med is not None else "n/a"
+    print(f"      {len(train)} fit obs -> obs = {a:.3g} * pred + {b:.3g}; "
+          f"{len(errs)} held-out obs, medrelerr {med_s}")
+    return {"fit_obs": len(train), "eval_obs": len(errs),
+            "medrelerr": med, "fit_a": a, "fit_b": b,
+            "buckets": sorted(srv.cost_model.costs)}
+
+
+def _serve_fleet(srv: StreamServer, fleet, frames_per, prepare) -> dict:
+    """Serve the bursty fleet on ``srv``; ``prepare`` pays the startup
+    (warm or autotune) inside the charged wall."""
+    t0 = time.time()
+    sessions = [srv.add_session(st, n_frames=n, start=16 * i)
+                for i, (st, n) in enumerate(zip(fleet, frames_per))]
+    prepare(srv)
+    prep_s = time.time() - t0
+    results = srv.serve()
+    serve_wall = results[sessions[0].sid].wall_s
+    n_frames = sum(r.frames for r in results.values())
+    wall = prep_s + serve_wall
+    return {"results": {s.sid: results[s.sid] for s in sessions},
+            "order": [s.sid for s in sessions],
+            "prep_s": prep_s, "serve_wall_s": serve_wall,
+            "fps": n_frames / wall, "frames": n_frames,
+            "launches": len(srv.flush_log)}
+
+
+def _autotune_win(img: int, n_streams: int, frames_per: tuple) -> dict:
+    """Static-default all-warm server vs autotuned server on one bursty
+    fleet (uneven frame budgets, phase-offset starts)."""
+    print(f"  [2] autotune win: tiny-{img}, {n_streams} bursty streams "
+          f"{list(frames_per)} frames, 50% skip")
+    cfg = get_config("tiny", img_size=img, mgnet=True).with_(
+        matmul_backend="bf16")
+    sc = ServingConfig(microbatch=4, chunk=8, force_bucket=0.5)
+
+    static = StreamServer(cfg, ServerConfig.from_serving(
+        sc, warm_start=False), n_classes=10)
+    st = _serve_fleet(static, video_fleet(n_streams, img_size=img, patch=16,
+                                          cut_every=32), frames_per,
+                      lambda s: s.warm_start())
+    print(f"      static:    {st['frames']} frames, warm {st['prep_s']:.2f}s"
+          f" + serve {st['serve_wall_s']:.2f}s -> {st['fps']:6.1f} fps "
+          f"({st['launches']} launches, full ladder warmed)")
+
+    auto = StreamServer(cfg, ServerConfig.from_serving(
+        sc, warm_start=False, autotune=True, retune_every=16), n_classes=10)
+    au = _serve_fleet(auto, video_fleet(n_streams, img_size=img, patch=16,
+                                        cut_every=32), frames_per,
+                      lambda s: s.autotune_prepare())
+    ctl = auto.controller
+    print(f"      autotuned: {au['frames']} frames, prep {au['prep_s']:.2f}s"
+          f" + serve {au['serve_wall_s']:.2f}s -> {au['fps']:6.1f} fps "
+          f"({au['launches']} launches, buckets "
+          f"{sorted(auto.cost_model.costs)} priced+AOT)")
+    print(f"      {ctl.report()}")
+
+    # the control plane re-times flushes but never re-routes: per-stream
+    # predictions are bitwise identical to the static-default server's
+    for sid_s, sid_a in zip(st["order"], au["order"]):
+        assert (st["results"][sid_s].predictions
+                == au["results"][sid_a].predictions), (
+            f"autotuning changed stream {sid_a}'s predictions")
+    assert ctl.clamp_violations == 0, (
+        f"applied knobs escaped the clamp box "
+        f"{ctl.clamp_violations} times")
+
+    speedup = au["fps"] / st["fps"]
+    print(f"      -> {speedup:.2f}x aggregate fps (gate {SPEEDUP_GATE}x; "
+          f"probe-trimmed compiles + tuned re-timing)")
+    return {"static_fps": st["fps"], "autotuned_fps": au["fps"],
+            "speedup": speedup,
+            "static_prep_s": st["prep_s"], "autotune_prep_s": au["prep_s"],
+            "retunes": ctl.applied_retunes,
+            "knobs": {"max_wait_chunks": ctl.knobs.max_wait_chunks,
+                      "interleave_depth": ctl.knobs.interleave_depth,
+                      "flush_threshold": dict(ctl.knobs.flush_threshold)},
+            "clamp_engaged": ctl.clamp_engaged,
+            "clamp_violations": ctl.clamp_violations,
+            "converged": ctl.converged}
+
+
+def run(smoke: bool = False) -> dict:
+    print("\n== serving control plane: calibrated cost model + autotuner ==")
+    if smoke:
+        calib = _calibration_split(img=64, n_streams=2, frames=24)
+        win = _autotune_win(img=64, n_streams=2, frames_per=(24, 16))
+    else:
+        calib = _calibration_split(img=224, n_streams=2, frames=48)
+        win = _autotune_win(img=96, n_streams=4,
+                            frames_per=(60, 36, 48, 24))
+    payload = {"calibration": calib, **win}
+
+    if smoke:
+        print("  (smoke mode: gates + BENCH json skipped)")
+        return payload
+
+    merged = {}
+    if os.path.exists(OUT_JSON):           # shared perf-trajectory file
+        with open(OUT_JSON) as f:
+            merged = json.load(f)
+    merged["controller"] = payload
+    with open(OUT_JSON, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"  wrote {OUT_JSON}")
+
+    assert calib["medrelerr"] is not None and (
+        calib["medrelerr"] <= MEDRELERR_GATE), (
+        f"calibrated cost model must predict held-out flush walls within "
+        f"{MEDRELERR_GATE:.0%} median relative error; measured "
+        f"{calib['medrelerr']:.1%}")
+    assert win["speedup"] >= SPEEDUP_GATE, (
+        f"autotuned serving must beat the static-default all-warm server "
+        f"by >= {SPEEDUP_GATE}x aggregate fps; measured "
+        f"{win['speedup']:.2f}x")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-config validity run: no gates, no BENCH "
+                         "json (the fast-CI configuration)")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

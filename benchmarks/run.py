@@ -11,11 +11,13 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
 import time
 
-from benchmarks import (attention_bench, bench_backend_cache, ffn_bench,
-                        fig8_energy, fig9_latency, fig10_11_mgnet,
+from benchmarks import (attention_bench, bench_backend_cache,
+                        controller_bench, ffn_bench, fig8_energy,
+                        fig9_latency, fig10_11_mgnet,
                         mixed_precision_bench, multistream_bench,
                         roofline_table, serving_bench, table1_qat,
                         table4_kfps)
@@ -39,14 +41,30 @@ ALL = {
     # per-layer bit plans on the fused path: speedup / energy / agreement
     # gates ("mixed_precision" key in BENCH_serving.json)
     "mixed_precision": mixed_precision_bench.run,
+    # serving control plane: calibration medrelerr + autotune fps gates
+    # ("controller" key in BENCH_serving.json)
+    "controller": controller_bench.run,
 }
 
 HISTORY = os.environ.get("BENCH_HISTORY_JSONL", "BENCH_history.jsonl")
+HISTORY_KEEP = 200
+
+
+def _git_sha() -> str | None:
+    """Short HEAD SHA, or None outside a repo / without git."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
 
 
 def _append_history(names, failed, dt: float) -> None:
-    """One JSONL row per harness run: when, what ran, what failed, and the
-    merged BENCH_serving.json snapshot — the perf trajectory over PRs."""
+    """One JSONL row per harness run: when, which commit, what ran, what
+    failed, and the merged BENCH_serving.json snapshot — the perf
+    trajectory over PRs. The file is rotated to the newest HISTORY_KEEP
+    rows so a long-lived checkout's log stays bounded."""
     snapshot = None
     if os.path.exists(mixed_precision_bench.OUT_JSON):
         try:
@@ -55,10 +73,16 @@ def _append_history(names, failed, dt: float) -> None:
         except (OSError, json.JSONDecodeError):
             pass
     row = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+           "sha": _git_sha(),
            "names": list(names), "failed": [n for n, _ in failed],
            "elapsed_s": round(dt, 1), "serving": snapshot}
-    with open(HISTORY, "a") as f:
-        f.write(json.dumps(row) + "\n")
+    rows = []
+    if os.path.exists(HISTORY):
+        with open(HISTORY) as f:
+            rows = [ln for ln in f.read().splitlines() if ln.strip()]
+    rows.append(json.dumps(row))
+    with open(HISTORY, "w") as f:
+        f.write("\n".join(rows[-HISTORY_KEEP:]) + "\n")
 
 
 def main() -> None:

@@ -140,24 +140,42 @@ def energy_of_stats(stats: PhotonicOpStats, nonlin_elems: int = 0,
 def latency_of_stats(stats: PhotonicOpStats, nonlin_elems: int = 0,
                      lc: LatencyConstants | None = None,
                      pipelined_tuning: bool = True,
-                     n_tiles: int = 0) -> EnergyReport:
+                     n_tiles: int = 0,
+                     bits: float = 8.0, ref_bits: int = 8,
+                     exposed_tunings: int | None = None) -> EnergyReport:
     """Fill the latency fields of an EnergyReport (us).
 
     With the Eq. 2 decomposition + Fig. 5 pipeline, tuning overlaps compute
     (``pipelined_tuning=True``): only the *first* tile's tuning is exposed.
     Without it, every tile tuning serializes — this is exactly the latency
     delta the decomposition buys.
+
+    ``bits`` scales the width-sensitive stage times: an n-bit SAR
+    conversion is n compare cycles and the SRAM code traffic shrinks with
+    the stored width, so the ADC wall and the memory stage pay
+    ``bits/ref_bits`` of the 8-bit constants. The optical symbol rate and
+    the EPU are width-independent. This is the latency view of
+    ``scale_for_bits`` — a mixed-precision plan now buys wall time too,
+    not just energy (the serving cost model needs width-aware latency to
+    rank bit plans honestly).
+
+    ``exposed_tunings`` overrides the pipelined-tuning count — callers
+    summing *partial* stats of one pipelined pass (per-layer width-aware
+    accounting) pass 0 for all but one part, so the sum stays bit-exact
+    to the aggregate call.
     """
     lc = lc or LatencyConstants()
     r = EnergyReport()
     ns = 1e-3  # ns -> us
+    w = float(bits) / float(ref_bits)
     optical = stats.cycles * lc.optical_cycle_ns
-    exposed_tunings = 1 if pipelined_tuning else max(n_tiles, 1)
+    if exposed_tunings is None:
+        exposed_tunings = 1 if pipelined_tuning else max(n_tiles, 1)
     optical += exposed_tunings * lc.tuning_ns
-    optical += stats.adc_conversions * lc.adc_ns / lc.adc_lanes
+    optical += stats.adc_conversions * lc.adc_ns * w / lc.adc_lanes
     r.optical_us = optical * ns
     r.epu_us = nonlin_elems * lc.epu_elem_ns * ns
-    r.memory_us = ((stats.sram_reads + stats.sram_writes)
+    r.memory_us = ((stats.sram_reads + stats.sram_writes) * w
                    / lc.sram_lanes * lc.sram_ns * ns)
     return r
 
@@ -189,10 +207,14 @@ def scale_for_bits(rep: EnergyReport, bits: float,
     ``tuning_uj``/``adc_uj``/``dac_uj``/``memory_uj`` scale by
     ``bits/ref_bits`` (the first-order model ENLighten and the LightBulb
     ADC analysis both use; constants above are calibrated at 8 bits).
-    VCSEL symbols, BPD reads and EPU adds are per-event, not per-bit, and
-    the latency fields are left unscaled: the symbol rate and conversion
-    pipelining are width-independent in this model (a lower-width plan
-    buys energy, not wall time — documented in serving/accounting.py).
+    VCSEL symbols, BPD reads and EPU adds are per-event, not per-bit.
+
+    Of the latency fields only ``memory_us`` scales here (SRAM code
+    traffic is per-bit): ``optical_us`` mixes width-scaled ADC time with
+    width-independent symbol cycles and cannot be decomposed after the
+    fact — width-aware optical latency comes from
+    ``latency_of_stats(..., bits=...)``, which is what the serving
+    accounting and the control-plane cost model use.
     """
     s = float(bits) / float(ref_bits)
     out = EnergyReport(**{f: getattr(rep, f) for f in rep._FIELDS})
@@ -200,6 +222,7 @@ def scale_for_bits(rep: EnergyReport, bits: float,
     out.adc_uj *= s
     out.dac_uj *= s
     out.memory_uj *= s
+    out.memory_us *= s
     return out
 
 

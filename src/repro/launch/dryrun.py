@@ -1,11 +1,17 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+if __name__ == "__main__":
+    # Only when running AS the dry-run driver (python -m ...): jax locks
+    # the host device count on first init, and this must land before the
+    # jax import below. Guarded so merely importing this module (tests,
+    # pytest collection) never leaks 512 fake devices into the process.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-The two lines above MUST run before any other import (jax locks the host
-device count on first init); 512 placeholder CPU devices let
-``jax.make_mesh`` build the production meshes:
+In driver mode the XLA_FLAGS override above runs before any other import
+(jax locks the host device count on first init); 512 placeholder CPU
+devices let ``jax.make_mesh`` build the production meshes:
 
     single-pod : (16, 16)    ("data", "model")          256 chips
     multi-pod  : (2, 16, 16) ("pod", "data", "model")   512 chips

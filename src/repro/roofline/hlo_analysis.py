@@ -38,7 +38,7 @@ import re
 from dataclasses import dataclass, field
 
 __all__ = ["Cost", "HloModule", "parse_hlo", "analyze_module",
-           "collective_summary"]
+           "compile_and_cost", "collective_summary"]
 
 _ESIZE = {"f64": 8, "s64": 8, "u64": 8, "c64": 8,
           "f32": 4, "s32": 4, "u32": 4,
@@ -373,21 +373,46 @@ def _fusion_flops(comp: Computation, mod: HloModule,
     return total, i8
 
 
+def _operand_name(op: str) -> str:
+    """'%c', 's32[] %c' or bare 'c' -> 'c'."""
+    return op.strip().rsplit("%", 1)[-1].strip()
+
+
+def _const_int(ins: Instr | None) -> int | None:
+    """Integer literal of a parsed constant: ``%c = s32[] constant(5)``
+    parses with the value as the constant's sole *operand* (not in attrs
+    or the type string), so that is where the bound lives."""
+    if ins is None or ins.opcode != "constant" or not ins.operands:
+        return None
+    lit = ins.operands[0].strip()
+    return int(lit) if lit.lstrip("-").isdigit() else None
+
+
 def _trip_count(ins: Instr, mod: HloModule) -> int:
     m = _TRIP_RE.search(ins.attrs)
     if m:
         return int(m.group(1))
-    # fallback: cond computation's compare against a constant
+    # fallback for modules whose backend_config lost known_trip_count: a
+    # counted loop's cond computation compares the induction variable
+    # against a constant bound — resolve the compare's operands to
+    # constant instructions and read the bound from there.
     mc = _COND.search(ins.attrs)
     if mc and mc.group(1) in mod.computations:
-        for ci in mod.computations[mc.group(1)].instrs:
-            if ci.opcode == "constant" and re.search(r"constant\((\d+)\)",
-                                                     ci.attrs or ci.type_str):
-                pass
-        for ci in mod.computations[mc.group(1)].instrs:
-            cm = re.search(r"constant\((\d+)\)", ci.type_str + ci.attrs)
-            if cm:
-                return int(cm.group(1))
+        cond = mod.computations[mc.group(1)]
+        consts = {ci.name: ci for ci in cond.instrs
+                  if ci.opcode == "constant"}
+        for ci in cond.instrs:
+            if ci.opcode != "compare":
+                continue
+            for op in ci.operands:
+                n = _const_int(consts.get(_operand_name(op)))
+                if n is not None and n > 0:
+                    return n
+        # no compare resolved: any positive int constant in the cond
+        for ci in consts.values():
+            n = _const_int(ci)
+            if n is not None and n > 0:
+                return n
     return 1
 
 
@@ -516,6 +541,27 @@ def analyze_module(hlo_text: str) -> Cost:
     if not mod.entry:
         return Cost()
     return _comp_cost(mod.computations[mod.entry], mod, {}, {})
+
+
+def compile_and_cost(fn, *args, **kwargs):
+    """Lower + compile ``fn`` on ``args`` and cost the optimized HLO.
+
+    Returns ``(cost, compiled)``. The compiled executable is handed back
+    deliberately: the serving control plane's cost model prices every
+    ladder bucket by compiling it, and the same executable then *serves*
+    that bucket AOT — one compile pays for both costing and warm-up
+    instead of a second jit trace of the identical function.
+
+    ``fn`` may be a ``jax.jit`` wrapper (anything with ``.lower``) or a
+    plain callable, which is jitted here. jax import is deferred so the
+    text parser above stays importable without a jax install.
+    """
+    import jax
+
+    lowered = (fn.lower(*args, **kwargs) if hasattr(fn, "lower")
+               else jax.jit(fn).lower(*args, **kwargs))
+    compiled = lowered.compile()
+    return analyze_module(compiled.as_text()), compiled
 
 
 def collective_summary(cost: Cost) -> str:

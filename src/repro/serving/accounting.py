@@ -9,6 +9,17 @@ accelerator is frames-per-joule / 1000, i.e. 1 / mean-E-frame[mJ] —
 independent of host wall time, which is reported separately as frames/s of
 the functional simulation.
 
+Two report builders are exposed at module level because the serving control
+plane's cost model (``serving/control/costmodel.py``) prices the same
+buckets the accounting bills: ``bucket_report`` (one k-patch encode frame)
+and ``mgnet_report`` (one mask-generator invocation).
+
+Besides the *modeled* numbers, the accounting can carry *measured*
+per-flush wall latencies (``add_flush_wall``, fed by the server's flush
+timer when autotuning is on) — ``summary()`` then prints measured ms next
+to the modeled us per bucket, and the controller calibrates its cost model
+against exactly these observations.
+
 ``summary()`` additionally surfaces per-bucket hit/launch counts and warns
 on **dead buckets** — ladder entries no stream frame ever routed to. Every
 ladder entry costs one compiled encode shape (and, in one-shape mode, one
@@ -29,7 +40,7 @@ from repro.core.energy import (EnergyReport, accumulate_matmuls,
                                latency_of_stats, scale_for_bits)
 from repro.models.vit import vit_matmul_shapes
 
-__all__ = ["StreamAccounting"]
+__all__ = ["StreamAccounting", "bucket_report", "mgnet_report"]
 
 
 def _nonlin_elems(cfg: ArchConfig, n_tokens: int) -> int:
@@ -38,23 +49,92 @@ def _nonlin_elems(cfg: ArchConfig, n_tokens: int) -> int:
                            + n_tokens * cfg.d_ff)
 
 
+# index layout of one layer's chunk in vit_matmul_shapes: q, k, v,
+# scores, attn@v, out-proj, mlp w1, mlp w2
+_WEIGHT_IDX = (0, 1, 2, 5, 6, 7)
+_ACT_IDX = (3, 4)
+
+
+def _mixed_bits_report(cfg: ArchConfig, shapes: list, nl: int,
+                       layer_bits: tuple) -> EnergyReport:
+    """Energy *and* latency with each layer's weight-stationary matmuls
+    scaled to its planned width: the MR tuning, ADC/DAC conversion and
+    SRAM code traffic of the q/k/v, out-projection and both MLP matmuls
+    pay ``bits/8`` of the calibrated 8-bit constants — in energy
+    (``scale_for_bits``) and in the ADC/SRAM stage latencies
+    (``latency_of_stats(bits=...)``). The activation-activation score/PV
+    matmuls and the patch embed stay at the default width. Only one
+    pipelined tuning exposure is counted across the whole frame
+    (``exposed_tunings``), so a uniform-8 plan is bit-exact to the
+    aggregate ``energy_of_stats``/``latency_of_stats`` path."""
+    embed_stats, _ = accumulate_matmuls(shapes[:1])
+    rep = energy_of_stats(embed_stats, nl)
+    lat = latency_of_stats(embed_stats, nl, exposed_tunings=1)
+    for li, bits in enumerate(layer_bits):
+        chunk = shapes[1 + 8 * li: 1 + 8 * (li + 1)]
+        w_stats, _ = accumulate_matmuls([chunk[i] for i in _WEIGHT_IDX])
+        a_stats, _ = accumulate_matmuls([chunk[i] for i in _ACT_IDX])
+        rep += scale_for_bits(energy_of_stats(w_stats), bits)
+        rep += energy_of_stats(a_stats)
+        lat += latency_of_stats(w_stats, bits=bits, exposed_tunings=0)
+        lat += latency_of_stats(a_stats, exposed_tunings=0)
+    rep.optical_us, rep.epu_us, rep.memory_us = (
+        lat.optical_us, lat.epu_us, lat.memory_us)
+    return rep
+
+
+def bucket_report(cfg: ArchConfig, bucket: int,
+                  layer_bits: Iterable[int] | None = None) -> EnergyReport:
+    """Per-frame accelerator-model report for one k-patch encode (backbone
+    only): energy components + optical/EPU/memory latency. ``layer_bits``
+    (one width per encoder layer — ``core.bitalloc.plan_layer_bits``)
+    switches to the width-aware mixed-precision path."""
+    n_patches = (cfg.img_size // cfg.patch) ** 2
+    kept = None if bucket >= n_patches else bucket
+    shapes = vit_matmul_shapes(cfg, kept_patches=kept)
+    stats, tiles = accumulate_matmuls(shapes)
+    nl = _nonlin_elems(cfg, bucket + 1)
+    lb = tuple(int(b) for b in layer_bits) if layer_bits is not None else None
+    if lb is not None and len(shapes) == 1 + 8 * cfg.n_layers:
+        return _mixed_bits_report(cfg, shapes, nl, lb)
+    rep = energy_of_stats(stats, nl)
+    lat = latency_of_stats(stats, nl, n_tiles=tiles)
+    rep.optical_us, rep.epu_us, rep.memory_us = (
+        lat.optical_us, lat.epu_us, lat.memory_us)
+    return rep
+
+
+def mgnet_report(cfg: ArchConfig) -> EnergyReport:
+    """Per-invocation MGNet report (the shapes ``include_mgnet`` appends
+    after the backbone's)."""
+    base = vit_matmul_shapes(cfg)
+    full = vit_matmul_shapes(cfg, include_mgnet=True)
+    stats, tiles = accumulate_matmuls(full[len(base):])
+    rep = energy_of_stats(stats)
+    lat = latency_of_stats(stats, n_tiles=tiles)
+    rep.optical_us, rep.epu_us, rep.memory_us = (
+        lat.optical_us, lat.epu_us, lat.memory_us)
+    return rep
+
+
 class StreamAccounting:
     """Accumulates per-frame EnergyReports bucket-by-bucket.
 
-    ``layer_bits`` (one width per encoder layer — a mixed-precision bit
-    plan's energy view, ``core.bitalloc.plan_layer_bits``) scales each
-    layer's *weight-stationary* matmul energy by its actual width: the MR
-    tuning, ADC/DAC conversion and SRAM code traffic of the q/k/v,
-    out-projection and both MLP matmuls pay ``bits/8`` of the calibrated
-    8-bit constants (``core.energy.scale_for_bits``), while the
-    activation-activation score/PV matmuls, the patch embed (always at
-    the default width) and every latency term stay unscaled — a lower
-    width buys energy per frame, not wall time, in this model."""
+    ``layer_bits`` (a mixed-precision bit plan's energy view) scales each
+    layer's *weight-stationary* matmul energy **and** its ADC/SRAM stage
+    latencies by its actual width (``bucket_report`` above): a lower
+    width now buys both energy per frame and modeled wall time, which is
+    what lets the control-plane cost model rank bit plans honestly.
+    The activation-activation score/PV matmuls and the patch embed stay
+    at the default width.
 
-    # index layout of one layer's chunk in vit_matmul_shapes: q, k, v,
-    # scores, attn@v, out-proj, mlp w1, mlp w2
-    _WEIGHT_IDX = (0, 1, 2, 5, 6, 7)
-    _ACT_IDX = (3, 4)
+    Measured flush wall times land here too (``add_flush_wall``): the
+    modeled accelerator latency and the observed host latency live side
+    by side, per bucket, so ``summary()`` and the autotune controller
+    can compare them without a separate bookkeeping object."""
+
+    _WEIGHT_IDX = _WEIGHT_IDX
+    _ACT_IDX = _ACT_IDX
 
     def __init__(self, cfg: ArchConfig,
                  ladder_sizes: Iterable[int] | None = None,
@@ -75,58 +155,25 @@ class StreamAccounting:
                              f"entries for {cfg.n_layers} layers")
         self.bucket_frames: Counter = Counter()
         self.bucket_launches: Counter = Counter()
+        # measured per-flush wall seconds (sum + count per bucket) — the
+        # observed numbers the cost-model calibration fits against
+        self.flush_wall_s: dict[int, float] = {}
+        self.flush_wall_n: Counter = Counter()
         self._per_bucket: dict[int, EnergyReport] = {}
         self._mgnet: EnergyReport | None = None
 
-    def _mixed_bits_energy(self, shapes: list, nl: int) -> EnergyReport:
-        """Energy with each layer's weight-stationary matmuls scaled to
-        its planned width (see class docstring). Bit-exact to the
-        aggregate ``energy_of_stats`` when every layer is at 8 bits."""
-        embed_stats, _ = accumulate_matmuls(shapes[:1])
-        rep = energy_of_stats(embed_stats, nl)
-        for li, bits in enumerate(self.layer_bits):
-            chunk = shapes[1 + 8 * li: 1 + 8 * (li + 1)]
-            w_stats, _ = accumulate_matmuls([chunk[i]
-                                             for i in self._WEIGHT_IDX])
-            a_stats, _ = accumulate_matmuls([chunk[i]
-                                             for i in self._ACT_IDX])
-            rep += scale_for_bits(energy_of_stats(w_stats), bits)
-            rep += energy_of_stats(a_stats)
-        return rep
-
     def _bucket_report(self, k: int) -> EnergyReport:
-        """Per-frame report for a k-patch encode (backbone only), cached —
-        the ladder is small so each bucket's report is computed once."""
+        """Per-frame report for a k-patch encode, cached — the ladder is
+        small so each bucket's report is computed once."""
         rep = self._per_bucket.get(k)
         if rep is None:
-            n_patches = (self.cfg.img_size // self.cfg.patch) ** 2
-            kept = None if k >= n_patches else k
-            shapes = vit_matmul_shapes(self.cfg, kept_patches=kept)
-            stats, tiles = accumulate_matmuls(shapes)
-            nl = _nonlin_elems(self.cfg, k + 1)
-            if (self.layer_bits is not None
-                    and len(shapes) == 1 + 8 * self.cfg.n_layers):
-                rep = self._mixed_bits_energy(shapes, nl)
-            else:
-                rep = energy_of_stats(stats, nl)
-            lat = latency_of_stats(stats, nl, n_tiles=tiles)
-            rep.optical_us, rep.epu_us, rep.memory_us = (
-                lat.optical_us, lat.epu_us, lat.memory_us)
+            rep = bucket_report(self.cfg, k, self.layer_bits)
             self._per_bucket[k] = rep
         return rep
 
     def _mgnet_report(self) -> EnergyReport:
-        """Per-invocation MGNet report (the shapes ``include_mgnet`` appends
-        after the backbone's)."""
         if self._mgnet is None:
-            base = vit_matmul_shapes(self.cfg)
-            full = vit_matmul_shapes(self.cfg, include_mgnet=True)
-            stats, tiles = accumulate_matmuls(full[len(base):])
-            rep = energy_of_stats(stats)
-            lat = latency_of_stats(stats, n_tiles=tiles)
-            rep.optical_us, rep.epu_us, rep.memory_us = (
-                lat.optical_us, lat.epu_us, lat.memory_us)
-            self._mgnet = rep
+            self._mgnet = mgnet_report(self.cfg)
         return self._mgnet
 
     def add_encode(self, bucket: int, n_frames: int) -> None:
@@ -139,6 +186,22 @@ class StreamAccounting:
         self.total += self._mgnet_report().scaled(n_invocations)
         self.scored_frames += n_invocations
 
+    def add_flush_wall(self, bucket: int, wall_s: float) -> None:
+        """Record one flush's measured host wall seconds at this bucket.
+        (A cross-session ``mix_streams`` flush is billed in full to every
+        owning session — the per-session mean then reads as 'seconds of
+        launch this stream's frames rode in', not exclusive time.)"""
+        k = int(bucket)
+        self.flush_wall_s[k] = self.flush_wall_s.get(k, 0.0) + float(wall_s)
+        self.flush_wall_n[k] += 1
+
+    def measured_flush_s(self, bucket: int) -> float | None:
+        """Mean measured wall seconds per flush at this bucket (None
+        before any timed flush landed there)."""
+        k = int(bucket)
+        n = self.flush_wall_n[k]
+        return self.flush_wall_s[k] / n if n else None
+
     def dead_buckets(self) -> tuple[int, ...]:
         """Ladder entries no frame was ever routed to (empty when no
         ladder was registered)."""
@@ -148,7 +211,8 @@ class StreamAccounting:
                      if self.bucket_frames[k] == 0)
 
     def summary(self) -> str:
-        """Per-bucket hit/launch counts, warning on dead buckets.
+        """Per-bucket hit/launch counts (plus measured ms per flush when
+        the server timed them), warning on dead buckets.
 
         A launch is one encode flush; the first launch of a bucket paid
         that bucket's jit compile, so ``launches >= 1`` marks the bucket
@@ -161,8 +225,12 @@ class StreamAccounting:
         parts = []
         for k in sizes:
             hits = self.bucket_frames[k]
-            parts.append(f"k={k}: {hits} hits/"
-                         f"{self.bucket_launches[k]} launches")
+            part = (f"k={k}: {hits} hits/"
+                    f"{self.bucket_launches[k]} launches")
+            meas = self.measured_flush_s(k)
+            if meas is not None:
+                part += f" ({meas * 1e3:.1f}ms/flush measured)"
+            parts.append(part)
         dead = self.dead_buckets()
         if dead:
             warnings.warn(

@@ -1,0 +1,22 @@
+"""Self-tuning serving control plane (ROADMAP item 1).
+
+Three layers, composed by ``StreamServer.autotune_prepare()``:
+
+  * ``costmodel`` — prices every ladder bucket's encode by compiling it
+    and analyzing the optimized HLO (``roofline.hlo_analysis``), combined
+    with the photonic accelerator model (``serving.accounting``); the
+    compiled executables double as the server's AOT encode path.
+  * ``telemetry`` — ring buffer of observed per-flush wall timings and
+    occupancy, tagged by (bucket, batch fill, stream count).
+  * ``controller`` — calibrates predicted cost against observed seconds
+    (per-bucket linear fit), then re-tunes the serving knobs every N
+    frames with hysteresis and a safety clamp.
+"""
+
+from repro.serving.control.controller import (Controller, ControllerConfig,
+                                              TunedKnobs)
+from repro.serving.control.costmodel import BucketCost, EncodeCostModel
+from repro.serving.control.telemetry import FlushObs, FlushTelemetry
+
+__all__ = ["BucketCost", "EncodeCostModel", "FlushObs", "FlushTelemetry",
+           "Controller", "ControllerConfig", "TunedKnobs"]

@@ -1,0 +1,166 @@
+"""HLO-driven per-flush cost model for the bucket ladder.
+
+Each ladder bucket's encode is priced by *compiling it*: the bucket's
+jitted encode is lowered at its exact flush shape
+(``jax.jit(...).lower(...).compile()``), the optimized HLO text goes
+through ``roofline.hlo_analysis.analyze_module`` (scan-aware FLOPs, HBM
+boundary bytes, int8 dot share), and the roofline terms on the pinned HW
+constants give a predicted device time per flush. The photonic
+accelerator model (``serving.accounting.bucket_report``) prices the same
+flush in uJ and accelerator-us, so one table carries both views: what the
+host simulation will cost (the number the controller calibrates against
+wall clock) and what the modeled accelerator would cost (the number
+KFPS/W is made of).
+
+The compile is *not* thrown away: ``executables[k]`` keeps the AOT
+executable, and ``StreamServer.autotune_prepare`` installs it as the
+bucket's encode path — costing a bucket and warming it are the same
+compile, so the autotuned server never pays a second trace of a function
+the cost model already built. (The raw predicted seconds are TPU-class
+roofline numbers; on any other host they are only a *ranking*. The
+controller's calibration fit maps them to observed seconds — see
+``controller.py``.)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.roofline.hlo_analysis import Cost, compile_and_cost
+from repro.roofline.report import HW
+from repro.serving.accounting import bucket_report
+
+__all__ = ["BucketCost", "EncodeCostModel"]
+
+
+@dataclass(frozen=True)
+class BucketCost:
+    """One (bucket, micro-batch shape, bit-plan signature) price row."""
+
+    bucket: int                 # kept-patch count k
+    microbatch: int             # flush batch rows
+    kv_len: int                 # token rows the encode actually sees
+    #                             (== bucket, or the ladder cap in
+    #                             one-shape mode with kv_len pruning)
+    flops: float                # per flush, from the optimized HLO
+    hbm_bytes: float            # per flush, fusion-boundary model
+    int8_flops: float           # w8a8 dot share (2x MXU peak)
+    device_s: float             # roofline max(compute, memory) per flush
+    energy_uj: float            # photonic model, per flush (mb frames)
+    photonic_us: float          # photonic model latency, per frame
+    bits_sig: tuple | None      # per-layer bit plan the price was cut at
+
+    @property
+    def per_frame_s(self) -> float:
+        return self.device_s / max(self.microbatch, 1)
+
+
+class EncodeCostModel:
+    """Predicted per-flush latency/energy table over the bucket ladder.
+
+    Construction is lazy per bucket: ``from_server`` registers a builder
+    for every ladder size but only compiles the ones asked for
+    (``ensure``) — probing showed which buckets the workload can hit, and
+    pricing a bucket costs its full XLA compile.
+    """
+
+    def __init__(self, microbatch: int, hw: HW | None = None):
+        self.microbatch = int(microbatch)
+        self.hw = hw or HW()
+        self.costs: dict[int, BucketCost] = {}
+        self.executables: dict[int, Any] = {}
+        self._builders: dict[int, Callable[[], tuple]] = {}
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_server(cls, server, buckets=None,
+                    hw: HW | None = None) -> "EncodeCostModel":
+        """Builders over ``server``'s jit ladder (duck-typed: anything with
+        ``cfg``/``serve_cfg``/``params``/``ladder`` and the per-bucket
+        encode jits). ``buckets`` (default: the whole ladder) are priced
+        eagerly; the rest stay lazy."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.vit import embed_patches
+
+        sc, cfg = server.serve_cfg, server.cfg
+        cm = cls(sc.microbatch, hw=hw)
+        # token dtype without running the embed: eval_shape on the same
+        # callable the server's ingest path jits
+        tok = jax.eval_shape(
+            lambda p, f: embed_patches(p, f, cfg, server.policy),
+            server.params,
+            jax.ShapeDtypeStruct(
+                (sc.chunk, cfg.img_size, cfg.img_size, 3), jnp.float32))
+        d, dt = tok.shape[-1], tok.dtype
+        layer_bits = getattr(server, "layer_bits", None)
+
+        def _builder(k: int):
+            def build():
+                kv = server.ladder.cap if sc.one_shape else k
+                fn = (server._encode_one[k] if sc.one_shape
+                      else server._encode)
+                sds = jax.ShapeDtypeStruct((sc.microbatch, kv, d), dt)
+                return fn, (server.params, sds), kv
+            return build
+
+        for k in server.ladder.sizes:
+            cm._builders[int(k)] = _builder(int(k))
+        cm._cfg = cfg
+        cm._layer_bits = (tuple(int(b) for b in layer_bits)
+                          if layer_bits else None)
+        for k in (buckets if buckets is not None else server.ladder.sizes):
+            cm.ensure(int(k))
+        return cm
+
+    def ensure(self, bucket: int) -> BucketCost:
+        """Price ``bucket`` (compile + analyze) if not already priced."""
+        k = int(bucket)
+        if k in self.costs:
+            return self.costs[k]
+        if k not in self._builders:
+            raise KeyError(f"bucket {k} is not on the registered ladder "
+                           f"({sorted(self._builders)})")
+        fn, args, kv = self._builders[k]()
+        cost, compiled = compile_and_cost(fn, *args)
+        self.executables[k] = compiled
+        self.costs[k] = self._price(k, kv, cost)
+        return self.costs[k]
+
+    def _price(self, k: int, kv: int, cost: Cost) -> BucketCost:
+        hw = self.hw
+        t_c = ((cost.flops - cost.int8_flops) / hw.peak_flops
+               + cost.int8_flops / (2.0 * hw.peak_flops))
+        t_m = cost.bytes / hw.hbm_bw
+        rep = bucket_report(self._cfg, k, self._layer_bits)
+        return BucketCost(
+            bucket=k, microbatch=self.microbatch, kv_len=kv,
+            flops=cost.flops, hbm_bytes=cost.bytes,
+            int8_flops=cost.int8_flops, device_s=max(t_c, t_m),
+            energy_uj=rep.total_uj * self.microbatch,
+            photonic_us=rep.total_us, bits_sig=self._layer_bits)
+
+    # -- queries -----------------------------------------------------------
+
+    def predicted_flush_s(self, bucket: int) -> float:
+        """Raw (uncalibrated) predicted seconds for one flush — the
+        feature the controller's linear fit maps to observed seconds."""
+        return self.ensure(bucket).device_s
+
+    def table(self) -> dict[int, BucketCost]:
+        """Every bucket priced so far, ascending."""
+        return {k: self.costs[k] for k in sorted(self.costs)}
+
+    def render(self) -> str:
+        lines = [f"{'bucket':>7} {'mb':>3} {'GFLOP/flush':>12} "
+                 f"{'MB/flush':>9} {'pred us':>8} {'uJ/flush':>9} "
+                 f"{'acc us/frame':>13}"]
+        for k, c in self.table().items():
+            lines.append(
+                f"{k:>7} {c.microbatch:>3} {c.flops / 1e9:>12.3f} "
+                f"{c.hbm_bytes / 1e6:>9.2f} {c.device_s * 1e6:>8.2f} "
+                f"{c.energy_uj:>9.2f} {c.photonic_us:>13.2f}")
+        return "\n".join(lines)

@@ -131,6 +131,31 @@ class MicroBatcher:
         return [self._take(k, pad=True) for _, k in sorted(
             stale, key=lambda e: (e[0], str(e[1])))]
 
+    def flush_filled(self, threshold_of: Callable[[Hashable], int]
+                     ) -> list[FrameBatch]:
+        """Pad-flush every queue holding at least ``threshold_of(key)``
+        rows (thresholds at or above the micro-batch size never fire here
+        — full queues already flushed in ``_collect``). The control
+        plane's per-bucket flush-threshold knob: a chronically partial
+        bucket stops waiting for a fill that never comes."""
+        out = []
+        for k in sorted(self._queues, key=str):
+            thr = threshold_of(k)
+            if thr < self.microbatch and self._rows(k) >= thr:
+                out.append(self._take(k, pad=True))
+        return out
+
+    def rows(self, key: Hashable) -> int:
+        """Rows currently queued under ``key`` (0 for unknown keys)."""
+        return self._rows(key)
+
+    def queue_stats(self) -> dict:
+        """key -> (queued rows, oldest entry's ``now`` tick) for every
+        non-empty queue — the live depth view the controller's re-tuning
+        reads without touching ``_queues``."""
+        return {k: (self._rows(k), q[0][2])
+                for k, q in self._queues.items() if q}
+
     def pending_keys(self) -> tuple:
         """Keys of queues currently holding frames."""
         return tuple(sorted(self._queues, key=str))

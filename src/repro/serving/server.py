@@ -89,20 +89,25 @@ def _gather_topk_rows(tokens, order, keep: int):
     return jnp.take_along_axis(tokens, order[:, :keep, None], axis=1)
 
 
-def interleave_rounds(groups) -> list:
-    """Round-robin merge: one element from each list per pass.
+def interleave_rounds(groups, depth: int = 1) -> list:
+    """Round-robin merge: ``depth`` elements from each list per pass.
 
-    [[a1, a2, a3], [b1]] -> [a1, b1, a2, a3] — the fairness order for
-    executing ready flushes: a session with a backlog yields after every
-    launch to every other session that has one ready.
+    [[a1, a2, a3], [b1]] -> [a1, b1, a2, a3] at depth 1 — the fairness
+    order for executing ready flushes: a session with a backlog yields
+    after every ``depth`` launches to every other session that has one
+    ready. Depth > 1 (the controller's ``interleave_depth`` knob) trades
+    a little per-session fairness for fewer rotation passes when every
+    session has a deep ready backlog.
     """
+    if depth < 1:
+        raise ValueError("interleave depth must be >= 1")
     out, i = [], 0
     while True:
-        row = [g[i] for g in groups if i < len(g)]
+        row = [x for g in groups for x in g[i: i + depth]]
         if not row:
             return out
         out.extend(row)
-        i += 1
+        i += depth
 
 
 @dataclass(frozen=True)
@@ -127,6 +132,16 @@ class ServerConfig(ServingConfig):
     #                              form — core/bitalloc.py); () = uniform
     #                              quant_bits. ``--bit-budget`` instead
     #                              calibrates one at startup
+    autotune: bool = False       # serving control plane: route-probe the
+    #                              ladder, price hit buckets with the HLO
+    #                              cost model (the compiles double as AOT
+    #                              encode executables), then run the online
+    #                              controller (serving/control/)
+    retune_every: int = 32       # frames between controller evaluations
+    interleave_depth: int = 1    # default ready-flush launches per session
+    #                              per rotation pass (the controller's
+    #                              tunable counterpart)
+    telemetry_window: int = 256  # flush-observation ring-buffer size
 
     @staticmethod
     def from_serving(sc: ServingConfig, **overrides) -> "ServerConfig":
@@ -163,6 +178,12 @@ class StreamServer:
         # the cache from them under the emitted plan
         self._raw_params = params
         self.layer_bits: tuple | None = None
+        # control plane (populated by autotune_prepare): AOT executables
+        # from the cost model's compiles, keyed by bucket
+        self._encode_aot: dict[int, object] = {}
+        self.cost_model = None
+        self.telemetry = None
+        self.controller = None
         if self.policy.is_photonic():
             # MR tuning happens once, before any stream starts — shared by
             # every session the server will ever serve.
@@ -204,7 +225,10 @@ class StreamServer:
         self.batcher: MicroBatcher | None = None
         self.flush_log: list[tuple] = []   # (owner sids, bucket k, n_real)
         self.warm_s = 0.0
-        if self.serve_cfg.warm_start:
+        # autotune mode compiles its own (probed-only) jit set inside
+        # autotune_prepare — an eager full-ladder warm-up would pay for
+        # exactly the dead-bucket compiles the probe exists to skip
+        if self.serve_cfg.warm_start and not self.serve_cfg.autotune:
             self.warm_start()
 
     def _prepare(self, plan):
@@ -219,6 +243,10 @@ class StreamServer:
         self.policy.bit_plan = bitalloc.plan_key(nplan)
         self.layer_bits = (bitalloc.plan_layer_bits(nplan, self.cfg.n_layers)
                            if nplan is not None else None)
+        # AOT executables were lowered against the *previous* params
+        # pytree; a re-tuned cache may change avals/treedef, so they are
+        # dropped (the jit ladder retraces on its own)
+        self._encode_aot = {}
         return prepare_params(self._raw_params, bits=bits, bit_plan=plan,
                               n_layers=self.cfg.n_layers)
 
@@ -239,12 +267,18 @@ class StreamServer:
 
     # -- warm-start jit ladder ---------------------------------------------
 
-    def warm_start(self) -> float:
+    def warm_start(self, buckets: tuple | None = None) -> float:
         """Eagerly compile every jit the serving loop can hit — embed,
-        score, order, the per-bucket gathers and every bucket's encode at
-        its exact flush shape — so streams never pay a compile. Returns
-        the warm-up wall seconds (also kept as ``self.warm_s``)."""
+        score, order, the per-bucket gathers and (by default) every
+        bucket's encode at its exact flush shape — so streams never pay a
+        compile. ``buckets`` restricts the encode warm-up to a subset of
+        ladder sizes (``autotune_prepare`` passes the probe's hit set);
+        buckets already backed by an AOT executable from the cost model
+        are skipped — their compile already happened. Returns the warm-up
+        wall seconds (also kept as ``self.warm_s``)."""
         sc, cfg = self.serve_cfg, self.cfg
+        targets = tuple(k for k in self.ladder.sizes
+                        if buckets is None or k in buckets)
         t0 = time.time()
         with use_sharding(self.mesh, DATA_RULES if self.mesh else None):
             zf = jnp.zeros((sc.chunk, cfg.img_size, cfg.img_size, 3),
@@ -255,9 +289,11 @@ class StreamServer:
                                       np.float32))
             order = self._order(zs)                        # (C, N) i32
             warm_gathers = ((self.ladder.cap,) if sc.one_shape
-                            else self.ladder.sizes)
+                            else targets)
             pruned = {k: self._gather[k](toks, order) for k in warm_gathers}
-            for k in self.ladder.sizes:
+            for k in targets:
+                if k in self._encode_aot:
+                    continue
                 src = pruned[self.ladder.cap if sc.one_shape else k]
                 zt = jnp.zeros((sc.microbatch,) + src.shape[1:], src.dtype)
                 zt = self._place(zt)
@@ -268,16 +304,19 @@ class StreamServer:
 
     # -- dead-bucket trimming ----------------------------------------------
 
-    def trim(self, dead) -> tuple[int, ...]:
+    def trim(self, dead, keep_cap: bool = True) -> tuple[int, ...]:
         """Drop ladder sizes (``StreamAccounting.dead_buckets()`` output)
         and their per-bucket jits; un-started sessions are re-pointed at
-        the trimmed ladder. Returns the sizes actually removed."""
-        new = self.ladder.trim(dead)
+        the trimmed ladder. ``keep_cap=False`` lets the ladder cap go too
+        — only safe when routing provably cannot exceed the surviving
+        sizes (the ``force_bucket`` pin). Returns the sizes removed."""
+        new = self.ladder.trim(dead, keep_cap=keep_cap)
         removed = tuple(sorted(set(self.ladder.sizes) - set(new.sizes)))
         self.ladder = new
         for k in removed:
             self._gather.pop(k, None)
             self._encode_one.pop(k, None)
+            self._encode_aot.pop(k, None)
         # un-started sessions are replaced, not mutated: their histogram /
         # accounting must key the trimmed ladder (sids are stable, so
         # callers holding the old object still index serve() results)
@@ -288,6 +327,32 @@ class StreamServer:
                                layer_bits=self.layer_bits)
             for s in self._sessions]
         return removed
+
+    def _route_probe(self, calib_frames: int | None = None) -> set[int]:
+        """Which ladder buckets the registered sessions' leading frames
+        route to — host-side scoring only (throwaway mask caches, no
+        embeds/encodes, sessions untouched). Under a ``force_bucket`` pin
+        the answer is exact by construction: every frame routes to the
+        pinned size regardless of content."""
+        sc = self.serve_cfg
+        if sc.force_bucket > 0:
+            return {self.ladder.route(
+                int(round(sc.force_bucket * self.n_patches)))}
+        calib = calib_frames or 2 * sc.chunk
+        calib = ((calib + sc.chunk - 1) // sc.chunk) * sc.chunk
+        hit: set[int] = set()
+        for s in self._sessions:
+            if s.finished:
+                continue
+            cache = TemporalMaskCache(sc.mask_refresh,
+                                      sc.delta_threshold)
+            for ofs in range(0, calib, sc.chunk):
+                sub = s.stream.frames_at(s.start + ofs, sc.chunk)
+                scores, _ = cache.gate(sub["frames"], sub["frame_idx"],
+                                       self._score_fn)
+                hit |= set(int(k) for k in self.ladder.route_many(
+                    mask_budget(scores, self.mcfg.t_reg)))
+        return hit
 
     def calibrate_trim(self, calib_frames: int | None = None
                        ) -> tuple[int, ...]:
@@ -311,25 +376,7 @@ class StreamServer:
             # nothing to calibrate against — an empty pass would declare
             # every non-cap bucket dead and collapse the ladder
             return ()
-        if sc.force_bucket > 0:
-            pin = self.ladder.route(
-                int(round(sc.force_bucket * self.n_patches)))
-            hit = {pin}
-        else:
-            calib = calib_frames or 2 * sc.chunk
-            calib = ((calib + sc.chunk - 1) // sc.chunk) * sc.chunk
-            hit: set[int] = set()
-            for s in self._sessions:
-                if s.finished:
-                    continue
-                cache = TemporalMaskCache(sc.mask_refresh,
-                                          sc.delta_threshold)
-                for ofs in range(0, calib, sc.chunk):
-                    sub = s.stream.frames_at(s.start + ofs, sc.chunk)
-                    scores, _ = cache.gate(sub["frames"], sub["frame_idx"],
-                                           self._score_fn)
-                    hit |= set(int(k) for k in self.ladder.route_many(
-                        mask_budget(scores, self.mcfg.t_reg)))
+        hit = self._route_probe(calib_frames)
         dead = tuple(k for k in self.ladder.sizes if k not in hit)
         if not dead:
             return ()
@@ -386,6 +433,55 @@ class StreamServer:
             for s in self._sessions]
         return plan
 
+    # -- serving control plane ---------------------------------------------
+
+    def autotune_prepare(self, calib_frames: int | None = None):
+        """Stand up the serving control plane (``serving/control/``):
+
+        1. **Route probe** — host-side scoring of each session's leading
+           frames finds which ladder buckets the workload can hit. Under
+           a ``force_bucket`` pin the unreachable sizes are trimmed
+           outright (provably route-invariant — every frame routes to the
+           pin either way; without ``one_shape`` even the cap can go).
+           Otherwise the ladder is left intact: the probe only decides
+           which buckets get *compiled*, never where frames route, so
+           predictions stay bitwise identical to a statically-knobbed run.
+        2. **Cost model** — each probed bucket's encode is lowered,
+           compiled and priced (``EncodeCostModel``); off the mesh path
+           the compiled executables are installed as the AOT encode set,
+           so costing doubled as warm-up and dead buckets never compile.
+        3. **Controller** — telemetry ring buffer + the calibrating,
+           clamped knob tuner; the serve loop reads ``controller.knobs``
+           every round and calls ``controller.step`` every
+           ``retune_every`` frames.
+
+        Returns the controller."""
+        from repro.serving.control import (Controller, ControllerConfig,
+                                           EncodeCostModel, FlushTelemetry,
+                                           TunedKnobs)
+        sc = self.serve_cfg
+        probed = self._route_probe(calib_frames)
+        if sc.force_bucket > 0:
+            dead = tuple(k for k in self.ladder.sizes if k not in probed)
+            if dead:
+                self.trim(dead, keep_cap=not sc.one_shape)
+        self.cost_model = EncodeCostModel.from_server(
+            self, buckets=tuple(sorted(probed & set(self.ladder.sizes))))
+        if self.mesh is None:
+            # the cost model's compiles were cut at the exact flush avals
+            # the loop uses — reuse them as the AOT encode path. With a
+            # mesh the serve-time shardings differ from the unsharded
+            # lowering, so the jit ladder keeps ownership there.
+            self._encode_aot = dict(self.cost_model.executables)
+        self.warm_start(buckets=tuple(sorted(probed)))
+        self.telemetry = FlushTelemetry(sc.telemetry_window)
+        defaults = TunedKnobs(max_wait_chunks=sc.max_wait_chunks,
+                              interleave_depth=sc.interleave_depth)
+        self.controller = Controller(
+            self.cost_model, self.telemetry, defaults,
+            ControllerConfig(retune_every=sc.retune_every))
+        return self.controller
+
     # -- the serving loop --------------------------------------------------
 
     def serve(self, verbose: bool = False) -> dict[int, StreamResult]:
@@ -423,8 +519,17 @@ class StreamServer:
     def _serve_loop(self, live, by_sid, rnd, offset, t0,
                     verbose) -> dict[int, StreamResult]:
         sc = self.serve_cfg
+        ctl = self.controller
+        retuned_at = 0
         with use_sharding(self.mesh, DATA_RULES if self.mesh else None):
             while any(not s.drained for s in live):
+                # the controller owns the re-timing knobs when present;
+                # kn is re-read every round so a step() lands immediately
+                kn = ctl.knobs if ctl is not None else None
+                max_wait = (kn.max_wait_chunks if kn is not None
+                            else sc.max_wait_chunks)
+                depth = (kn.interleave_depth if kn is not None
+                         else sc.interleave_depth)
                 rot = live[offset:] + live[:offset]
                 offset = (offset + 1) % len(live)
                 per = {s.sid: [] for s in rot}
@@ -447,14 +552,26 @@ class StreamServer:
                                 select=lambda key, sid=s.sid:
                                 key[1] == sid))
                             s.drained = True
-                if sc.max_wait_chunks > 0:
-                    late.extend(self.batcher.flush_stale(
-                        rnd - sc.max_wait_chunks))
-                for fb in interleave_rounds([per[s.sid] for s in rot]):
+                if max_wait > 0:
+                    late.extend(self.batcher.flush_stale(rnd - max_wait))
+                if kn is not None and kn.flush_threshold:
+                    late.extend(self.batcher.flush_filled(
+                        lambda key: kn.flush_threshold.get(
+                            key[0] if isinstance(key, tuple) else key,
+                            self.batcher.microbatch)))
+                self._round = rnd
+                for fb in interleave_rounds([per[s.sid] for s in rot],
+                                            depth):
                     self._finish(fb, by_sid)
                 for fb in late:
                     self._finish(fb, by_sid)
                 rnd += 1
+                if ctl is not None:
+                    done = sum(s.acct.frames for s in live)
+                    if done - retuned_at >= sc.retune_every:
+                        ctl.step(self.batcher.queue_stats(), done,
+                                 time.time() - t0)
+                        retuned_at = done
                 if verbose and rnd % sc.report_every == 0:
                     dt = time.time() - t0
                     done = sum(s.acct.frames for s in live)
@@ -519,9 +636,17 @@ class StreamServer:
             tokens.shape, ("batch", None, None), self._ctx))
 
     def _finish(self, fb, by_sid: dict[int, StreamSession]) -> None:
+        # scheduling round tag rides on an instance field, not a parameter:
+        # the signature is a stable seam tests stub out
+        rnd = getattr(self, "_round", 0)
         k = fb.bucket[0] if isinstance(fb.bucket, tuple) else fb.bucket
+        timed = self.controller is not None
+        t0 = time.perf_counter() if timed else 0.0
         tokens = self._place(fb.tokens)
-        if self.serve_cfg.one_shape:
+        aot = self._encode_aot.get(k)
+        if aot is not None:
+            logits = aot(self.params, tokens)
+        elif self.serve_cfg.one_shape:
             logits = self._encode_one[k](self.params, tokens)
         else:
             logits = self._encode(self.params, tokens)
@@ -535,9 +660,20 @@ class StreamServer:
             rows, fidxs = owners.setdefault(sid, ([], []))
             rows.append(row)
             fidxs.append(fidx)
+        if timed:
+            # observed flush latency: launch to materialized result. The
+            # sync costs the autotuned path its async overlap — accepted,
+            # it is what makes the telemetry the controller calibrates
+            # against an honest per-flush number.
+            preds.block_until_ready()
+            wall = time.perf_counter() - t0
+            self.controller.record_flush(k, fb.n_real, len(owners), wall,
+                                         rnd)
         for sid, (rows, fidxs) in owners.items():
             sess = by_sid[sid]
             sess.record_flush(k, len(rows))
+            if timed:
+                sess.acct.add_flush_wall(k, wall)
             sess.add_deferred(fidxs, preds if len(owners) == 1
                               else preds[np.asarray(rows)])
         self.flush_log.append((tuple(sorted(owners)), k, fb.n_real))
@@ -627,6 +763,17 @@ def main(argv=None):
     ap.add_argument("--no-warm-start", action="store_true",
                     help="skip the eager jit-ladder warm-up (first flushes "
                          "then pay their compiles)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="serving control plane: route-probe the ladder, "
+                         "price hit buckets with the HLO cost model (the "
+                         "compiles double as AOT encode executables), then "
+                         "re-tune the scheduling knobs online with "
+                         "hysteresis + safety clamp")
+    ap.add_argument("--retune-every", type=int, default=32,
+                    help="frames between controller evaluations")
+    ap.add_argument("--assert-converged", action="store_true",
+                    help="exit nonzero unless the controller calibrated "
+                         "and settled (the CI smoke gate)")
     ap.add_argument("--mesh", default="auto", choices=["auto", "off"],
                     help="shard the encode batch axis over visible devices")
     ap.add_argument("--json", default="",
@@ -655,7 +802,8 @@ def main(argv=None):
         mask_refresh=args.mask_refresh,
         delta_threshold=args.delta_threshold, one_shape=args.one_shape,
         max_wait_chunks=args.max_wait, mix_streams=args.mix_streams,
-        warm_start=False, mesh=args.mesh, bit_plan=bit_plan)
+        warm_start=False, mesh=args.mesh, bit_plan=bit_plan,
+        autotune=args.autotune, retune_every=args.retune_every)
     server = StreamServer(cfg, server_cfg)
     print(f"[server] {cfg.name} {cfg.img_size}x{cfg.img_size} "
           f"backend={server.policy.resolve_backend()} "
@@ -681,7 +829,15 @@ def main(argv=None):
         print(f"[server] bit calibration -> per-layer plan {list(plan)} "
               f"(mean {sum(plan) / len(plan):.2f} bits, "
               f"target {args.bit_budget:g})")
-    if not args.no_warm_start:
+    if args.autotune:
+        server.autotune_prepare(args.calib_frames or None)
+        print(f"[server] autotune: priced buckets "
+              f"{sorted(server.cost_model.costs)} "
+              f"(ladder {list(server.ladder.sizes)}), "
+              f"{len(server._encode_aot)} AOT executables, "
+              f"non-encode jits warmed in {server.warm_s:.2f}s")
+        print(server.cost_model.render())
+    elif not args.no_warm_start:
         server.warm_start()
         print(f"[server] jit ladder warmed in {server.warm_s:.2f}s "
               f"({len(server.ladder.sizes)} buckets)")
@@ -696,6 +852,15 @@ def main(argv=None):
           f"in {wall:.2f}s -> {agg_fps:.1f} frames/s "
           f"(warm-up {server.warm_s:.2f}s, "
           f"{len(server.flush_log)} encode launches)")
+    if server.controller is not None:
+        print("[server]", server.controller.report())
+        assert server.controller.clamp_violations == 0, (
+            "controller applied knobs outside the safety clamp: "
+            f"{server.controller.clamp_violations} violations")
+        if args.assert_converged:
+            assert server.controller.converged, (
+                "controller did not converge: "
+                + server.controller.report())
 
     if args.json:
         payload = {

@@ -76,6 +76,11 @@ class StreamResult:
     dense_kfps_per_watt: float = 0.0
     mean_bits: float = 0.0       # mean planned weight width (8.0 = uniform
     #                              int8; < 8 under a mixed-precision plan)
+    flush_wall_ms: dict = field(default_factory=dict)  # bucket -> mean
+    #                              *measured* host ms per flush (only
+    #                              populated when the server timed flushes,
+    #                              i.e. under --autotune) — the observed
+    #                              counterpart of the modeled latency
     predictions: dict = field(default_factory=dict)   # frame_idx -> class
 
     @property
@@ -198,6 +203,9 @@ class StreamSession:
         res.bucket_hits = (self.hist.as_dict() if self.hist is not None
                            else dict(self.acct.bucket_frames))
         res.bucket_launches = dict(self.acct.bucket_launches)
+        res.flush_wall_ms = {
+            int(k): self.acct.measured_flush_s(k) * 1e3
+            for k in self.acct.flush_wall_n if self.acct.flush_wall_n[k]}
         res.kfps_per_watt = self.acct.kfps_per_watt
         res.mean_frame_uj = self.acct.mean_frame.total_uj
         res.dense_kfps_per_watt = self.acct.dense_baseline_kfps_per_watt()

@@ -1,0 +1,283 @@
+"""Serving control plane tests: HLO cost model pricing + AOT parity, the
+telemetry ring buffer, calibration accuracy on synthetic observations,
+hysteresis / clamp / watchdog guard rails, the scheduler's threshold-flush
+surface, and end-to-end autotuned-vs-static prediction parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import VideoStream, video_fleet
+from repro.serving.control import (Controller, ControllerConfig,
+                                   FlushTelemetry, TunedKnobs)
+from repro.serving.engine import _smoke_cfg
+from repro.serving.scheduler import MicroBatcher
+from repro.serving.server import ServerConfig, StreamServer
+from repro.serving.session import ServingConfig
+
+
+def _autotuned_server(sc: ServingConfig, n_streams: int = 2,
+                      frames: int = 12, **overrides) -> StreamServer:
+    cfg = _smoke_cfg("bf16")
+    srv = StreamServer(cfg, ServerConfig.from_serving(
+        sc, warm_start=False, autotune=True, **overrides), n_classes=10)
+    for i, st in enumerate(video_fleet(n_streams, img_size=cfg.img_size,
+                                       patch=cfg.patch, cut_every=32)):
+        srv.add_session(st, n_frames=frames, start=16 * i)
+    srv.autotune_prepare()
+    return srv
+
+
+# --------------------------------------------------------------------------
+# cost model: pricing sanity + AOT executable parity
+# --------------------------------------------------------------------------
+
+def test_cost_model_prices_probed_buckets():
+    """Natural routing: every probed bucket gets a priced BucketCost with
+    positive FLOPs/bytes/latency/energy, and cost grows with bucket size."""
+    srv = _autotuned_server(ServingConfig(microbatch=2, chunk=4))
+    cm = srv.cost_model
+    assert cm is not None and cm.costs, "probe must price >= 1 bucket"
+    for k in srv.ladder.sizes:                 # lazy pricing fills the rest
+        cm.ensure(k)
+    ks = sorted(cm.costs)
+    for k in ks:
+        c = cm.costs[k]
+        assert c.flops > 0 and c.hbm_bytes > 0
+        assert c.device_s > 0 and c.energy_uj > 0 and c.photonic_us > 0
+        assert c.microbatch == 2
+    flops = [cm.costs[k].flops for k in ks]
+    uj = [cm.costs[k].energy_uj for k in ks]
+    assert flops == sorted(flops), "more kept patches -> more FLOPs"
+    assert uj == sorted(uj), "more kept patches -> more photonic energy"
+    assert "pred us" in cm.render()
+
+
+def test_cost_model_ensure_rejects_off_ladder_bucket():
+    srv = _autotuned_server(ServingConfig(microbatch=2, chunk=4))
+    with pytest.raises(KeyError):
+        srv.cost_model.ensure(max(srv.ladder.sizes) + 1)
+
+
+def test_aot_executable_matches_jit_bitwise():
+    """The cost model's compiled executables serve as the AOT encode path;
+    they must produce bit-identical logits to the jit ladder."""
+    srv = _autotuned_server(ServingConfig(microbatch=2, chunk=4))
+    if srv.mesh is not None:
+        pytest.skip(f"{len(jax.devices())} visible devices -> mesh-sharded "
+                    "encode owns the ladder; AOT install is single-device")
+    assert srv._encode_aot, "off-mesh autotune must install AOT executables"
+    k = sorted(srv._encode_aot)[0]
+    img = srv.cfg.img_size
+    toks = srv._embed(srv.params, jnp.zeros((4, img, img, 3), jnp.float32))
+    toks = toks[:2, :k, :]
+    np.testing.assert_array_equal(
+        np.asarray(srv._encode_aot[k](srv.params, toks)),
+        np.asarray(srv._encode(srv.params, toks)))
+
+
+# --------------------------------------------------------------------------
+# telemetry ring buffer
+# --------------------------------------------------------------------------
+
+def test_telemetry_window_evicts_oldest():
+    tel = FlushTelemetry(window=4)
+    for i in range(6):
+        tel.record(bucket=8, n_real=2, microbatch=4, n_streams=1,
+                   wall_s=float(i))
+    assert len(tel) == 4                       # window holds the newest 4
+    assert tel.total_recorded == 6 and tel.seq == 6
+    assert tel.latencies(8) == [2.0, 3.0, 4.0, 5.0]
+    assert tel.latencies(8, min_seq=4) == [4.0, 5.0]
+    assert tel.occupancy() == pytest.approx(0.5)
+    assert tel.median_latency(8) == pytest.approx(3.5)
+    assert tel.median_latency(99) is None
+
+
+def test_telemetry_per_bucket_views():
+    tel = FlushTelemetry(window=8)
+    tel.record(4, 4, 4, 2, 0.1)
+    tel.record(8, 2, 4, 1, 0.2)
+    tel.record(8, 4, 4, 3, 0.3)
+    by = tel.by_bucket()
+    assert sorted(by) == [4, 8] and len(by[8]) == 2
+    assert tel.occupancy(8) == pytest.approx(0.75)
+    assert tel.mean_streams() == pytest.approx(2.0)
+    with pytest.raises(ValueError):
+        FlushTelemetry(window=0)
+
+
+# --------------------------------------------------------------------------
+# calibration on synthetic observations
+# --------------------------------------------------------------------------
+
+class _StubCostModel:
+    """Known raw predictions, no compiles."""
+
+    def __init__(self, preds: dict, microbatch: int = 4):
+        self.microbatch = microbatch
+        self.costs = dict(preds)
+        self._builders = {}
+        self._preds = preds
+
+    def predicted_flush_s(self, bucket: int) -> float:
+        return self._preds[bucket]
+
+
+def _stub_controller(preds=None, cc=None, window=64):
+    cm = _StubCostModel(preds or {4: 1e-5, 8: 2e-5, 16: 4e-5})
+    return Controller(cm, FlushTelemetry(window), TunedKnobs(),
+                      cc or ControllerConfig())
+
+
+def test_calibration_recovers_linear_map():
+    """obs = 3 * pred + 0.01 exactly -> the fit recovers (a, b) and the
+    calibrated predictions land within 1% of the observations."""
+    ctl = _stub_controller()
+    for k, p in ctl.cost_model._preds.items():
+        for i in range(6):                     # > burn_in + min_samples
+            ctl.record_flush(k, n_real=4, n_streams=2,
+                             wall_s=3.0 * p + 0.01)
+    assert ctl.calibrate() and ctl.calibrated
+    a, b = ctl._fit
+    assert a == pytest.approx(3.0, rel=1e-6)
+    assert b == pytest.approx(0.01, rel=1e-6)
+    for k, p in ctl.cost_model._preds.items():
+        assert ctl.predict_flush_s(k) == pytest.approx(3.0 * p + 0.01,
+                                                       rel=0.01)
+    assert ctl.median_rel_error(holdout=False) == pytest.approx(0.0,
+                                                                abs=1e-6)
+
+
+def test_calibration_single_bucket_fits_through_origin():
+    ctl = _stub_controller(preds={8: 2e-5})
+    for _ in range(4):
+        ctl.record_flush(8, 4, 1, wall_s=6e-5)
+    assert ctl.calibrate()
+    a, b = ctl._fit
+    assert b == 0.0 and ctl.predict_flush_s(8) == pytest.approx(6e-5)
+
+
+def test_holdout_split_scores_only_post_fit_observations():
+    ctl = _stub_controller(preds={8: 2e-5})
+    for _ in range(4):
+        ctl.record_flush(8, 4, 1, wall_s=6e-5)
+    ctl.calibrate()
+    assert ctl.median_rel_error() is None      # nothing recorded since fit
+    ctl.record_flush(8, 4, 1, wall_s=12e-5)    # workload shifted 2x
+    assert ctl.median_rel_error() == pytest.approx(0.5)
+
+
+# --------------------------------------------------------------------------
+# guard rails: hysteresis, clamp, watchdog
+# --------------------------------------------------------------------------
+
+def test_hysteresis_defers_then_applies():
+    """A persistent low-occupancy signal must survive ``hysteresis``
+    consecutive steps before the knobs move."""
+    ctl = _stub_controller(cc=ControllerConfig(hysteresis=2))
+    for k, _ in ctl.cost_model._preds.items():
+        for _ in range(6):
+            ctl.record_flush(k, n_real=2, n_streams=2, wall_s=1e-4)  # 50%
+    assert ctl.step({}, 16, 1.0) is False      # pending, not applied
+    assert ctl.applied_retunes == 0
+    assert ctl.knobs.key() == ctl.defaults.key()
+    assert ctl.step({}, 32, 2.0) is True       # second identical rec lands
+    assert ctl.applied_retunes == 1
+    assert ctl.knobs.max_wait_chunks > 0
+    assert ctl.knobs.flush_threshold           # partial buckets got one
+    assert ctl.converged                       # applied == fixed point
+    assert ctl.clamp_violations == 0
+
+
+def test_full_occupancy_recommends_defaults():
+    ctl = _stub_controller()
+    for k in ctl.cost_model._preds:
+        for _ in range(4):
+            ctl.record_flush(k, n_real=4, n_streams=2, wall_s=1e-4)
+    assert ctl.step({}, 16, 1.0) is False
+    assert ctl.knobs.key() == ctl.defaults.key()
+    assert ctl.converged
+
+
+def test_clamp_forces_box_and_counts():
+    ctl = _stub_controller()
+    wild = TunedKnobs(max_wait_chunks=99, interleave_depth=0,
+                      flush_threshold={8: 999, 16: 0})
+    out = ctl._clamp(wild)
+    assert ctl._in_bounds(out) and not ctl._in_bounds(wild)
+    assert 0 <= out.max_wait_chunks <= ctl.cc.max_wait_bound
+    assert out.interleave_depth == 1
+    assert out.flush_threshold == {8: 4, 16: 2}
+    assert ctl.clamp_engaged == 1 and ctl.clamp_violations == 0
+
+
+def test_watchdog_reverts_and_freezes():
+    """Tuned knobs that lose >= safety_margin of the default-knob fps must
+    revert to the defaults and freeze the controller."""
+    ctl = _stub_controller()
+    assert ctl.step({}, 100, 1.0) is False     # baseline: 100 fps
+    assert ctl._baseline_fps == pytest.approx(100.0)
+    ctl.knobs.set_to(TunedKnobs(max_wait_chunks=2))   # tuned knobs live
+    assert ctl.step({}, 110, 2.0) is True      # 10 fps << 75 fps floor
+    assert ctl.frozen
+    assert ctl.knobs.key() == ctl.defaults.key()
+    assert not ctl.converged                   # frozen is never converged
+    assert ctl.step({}, 120, 3.0) is False     # frozen: holds defaults
+
+
+# --------------------------------------------------------------------------
+# scheduler: threshold flush + queue stats (the knobs' mechanism)
+# --------------------------------------------------------------------------
+
+def test_flush_filled_threshold_and_queue_stats():
+    mb = MicroBatcher(microbatch=4)
+    mb.push_many(8, jnp.ones((3, 2, 2)), [0, 1, 2], now=5)
+    mb.push_many(16, jnp.ones((1, 4, 2)), [3], now=6)
+    assert mb.queue_stats() == {8: (3, 5), 16: (1, 6)}
+    assert mb.rows(8) == 3 and mb.rows(99) == 0
+    out = mb.flush_filled(lambda k: 3)
+    assert len(out) == 1 and out[0].bucket == 8 and out[0].n_real == 3
+    assert out[0].tokens.shape[0] == 4         # padded to the micro-batch
+    assert mb.rows(8) == 0 and mb.rows(16) == 1
+    # thresholds at/above the micro-batch never fire here
+    assert mb.flush_filled(lambda k: 4) == []
+
+
+# --------------------------------------------------------------------------
+# end-to-end: autotuned serving changes timing, never predictions
+# --------------------------------------------------------------------------
+
+def test_autotune_prediction_parity_with_static_server():
+    cfg = _smoke_cfg("bf16")
+    sc = ServingConfig(microbatch=2, chunk=4, force_bucket=0.5)
+    frames, n_streams = 12, 2
+
+    def _serve(autotune: bool):
+        srv = StreamServer(cfg, ServerConfig.from_serving(
+            sc, warm_start=False, autotune=autotune, retune_every=4),
+            n_classes=10)
+        sessions = [srv.add_session(st, n_frames=frames, start=16 * i)
+                    for i, st in enumerate(video_fleet(
+                        n_streams, img_size=cfg.img_size, patch=cfg.patch,
+                        cut_every=32))]
+        if autotune:
+            srv.autotune_prepare()
+        else:
+            srv.warm_start()
+        results = srv.serve()
+        return srv, [results[s.sid] for s in sessions]
+
+    srv_a, auto = _serve(True)
+    _, static = _serve(False)
+    for i, (ra, rs) in enumerate(zip(auto, static)):
+        assert ra.predictions == rs.predictions, (
+            f"stream {i}: autotuning must never change predictions")
+        assert ra.flush_wall_ms, "timed flushes must surface per bucket"
+        assert not rs.flush_wall_ms, "untimed server must not fabricate"
+        assert all(v > 0 for v in ra.flush_wall_ms.values())
+    ctl = srv_a.controller
+    assert ctl.clamp_violations == 0
+    assert ctl.calibrated
+    assert len(srv_a.telemetry) > 0

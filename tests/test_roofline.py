@@ -107,6 +107,95 @@ ENTRY %main (p: f32[1024]) -> f32[1024] {
     assert cost.coll_by_op["collective-permute"] == pytest.approx(nb)
 
 
+def test_while_trip_count_fallback_from_cond_constant():
+    """A while whose backend_config lost ``known_trip_count`` must recover
+    the bound from the cond computation's compare-against-constant — the
+    parsed constant carries its literal as the sole *operand*."""
+    hlo = """
+HloModule wtest
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %d)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  ROOT %w = (s32[], f32[8,8]) while(%arg), condition=%cond, body=%body
+}
+"""
+    cost = analyze_module(hlo)
+    assert cost.flops == 5 * 2 * 8 * 8 * 8
+
+
+def test_synthetic_conditional_exact_half():
+    """branch_computations={compute, identity} must average to exactly
+    half the dot's FLOPs."""
+    hlo = """
+HloModule ctest
+
+%btrue (x: f32[16,16]) -> f32[16,16] {
+  %x = f32[16,16]{1,0} parameter(0)
+  ROOT %d = f32[16,16]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%bfalse (y: f32[16,16]) -> f32[16,16] {
+  ROOT %y = f32[16,16]{1,0} parameter(0)
+}
+
+ENTRY %main (b: s32[], x: f32[16,16]) -> f32[16,16] {
+  %b = s32[] parameter(0)
+  %x = f32[16,16]{1,0} parameter(1)
+  ROOT %c = f32[16,16]{1,0} conditional(%b, %x, %x), branch_computations={%btrue, %bfalse}
+}
+"""
+    cost = analyze_module(hlo)
+    assert cost.flops == 0.5 * 2 * 16 * 16 * 16
+
+
+def test_real_vit_encode_flops_and_bytes_bracket_analytic():
+    """The serving control plane prices encode buckets from this analyzer:
+    on a real lowered tiny-ViT token encode the parsed FLOPs must bracket
+    the analytic 2*sum(M*K*N) event count (within the slack XLA's extra
+    dots — classifier head, fused epilogues — can add), HBM bytes must at
+    least read the encoder weights once and stay bounded, and an f32
+    lowering must report zero int8 FLOPs."""
+    from repro.models.vit import (forward_vit_tokens, init_vit,
+                                  vit_matmul_shapes)
+    from repro.configs.opto_vit import get_config as vit_config
+    from repro.configs.base import smoke_variant
+
+    cfg = smoke_variant(vit_config("tiny"))
+    params = init_vit(jax.random.PRNGKey(0), cfg, n_classes=10)
+    n_patches = (cfg.img_size // cfg.patch) ** 2
+    k, batch = max(1, n_patches // 2), 2
+    toks = jax.ShapeDtypeStruct((batch, k, cfg.d_model), jnp.float32)
+    cost = analyze_module(_lower_text(
+        lambda p, t: forward_vit_tokens(p, t, cfg)[0], params, toks))
+
+    # per-frame analytic dots, encoder only (entry 0 is the patch embed,
+    # which happened upstream of the token forward)
+    analytic = batch * sum(2 * m * kk * n for m, kk, n
+                           in vit_matmul_shapes(cfg, kept_patches=k)[1:])
+    assert analytic <= cost.flops <= 3 * analytic
+    d, dff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    weight_bytes = L * (4 * d * d + 2 * d * dff) * 4      # f32 encoder
+    assert weight_bytes <= cost.bytes <= 50 * weight_bytes
+    assert cost.int8_flops == 0
+
+
 def test_conditional_branches_averaged():
     """lax.cond branches average — the causal block-skip accounting."""
     x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
