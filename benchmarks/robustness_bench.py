@@ -1,0 +1,302 @@
+"""Robustness differential suite: clean-vs-noisy serving under drift.
+
+The calibrated noise layer (core/noise.py ``NoiseSpec`` + ``DriftState``)
+models the paper's device reality at the Q = 5000 / 8-bit operating point:
+the WDM crosstalk floor, ~1% fabrication-process variation, shot noise on
+the balanced-photodetector readout, and thermal resonance drift that
+accumulates per frame until an MR re-tune pulls the rings back on grid.
+This bench gates the three claims that make that layer a *serving* feature
+rather than a noise study:
+
+  1. **Calibrated operating point is usable**: clean-vs-noisy prediction
+     agreement at the static Q = 5000 point (no drift) is >= 95% on every
+     backend combo the server dispatches — photonic_sim, photonic_pallas
+     composed, and the fused flash+FFN path (which under noise falls back
+     to the composed analog dispatch by design). Measured on a *trained*
+     smoke model: random-init logits are near-tied and their argmax flips
+     under any perturbation, so random-init "agreement" measures logit
+     degeneracy, not robustness (the mixed_precision_bench lesson).
+  2. **Drift degrades, monotonically in the large**: agreement and
+     accuracy are swept over pinned common-mode drift values spanning the
+     benign-to-catastrophic range of the Lorentzian linewidth
+     (delta ~= 0.155 nm at Q = 5000); the endpoint (0.4 nm) must sit
+     strictly below the on-resonance level.
+  3. **Recalibration restores**: a served stream whose DriftState drifts
+     past ``recal_bound_nm`` triggers the server's online re-tune
+     (re-running the quantize-once ``prepare_params`` cache and resetting
+     the drift). The gate: >= 1 recalibration fires, and post-recal
+     agreement returns to within 1% of the pre-drift level — while the
+     same stream served *without* recalibration decays in its late
+     window. Clean and noisy servers share routing (the RoI gate stays
+     clean by default), so agreement is frame-by-frame comparable.
+
+Results merge into BENCH_serving.json under "robustness".
+
+    PYTHONPATH=src python -m benchmarks.robustness_bench           # full
+    PYTHONPATH=src python -m benchmarks.robustness_bench --smoke   # CI fast
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backend import prepare_params
+from repro.core.noise import DriftState, NoiseSpec, scoped
+from repro.data.pipeline import ImageStream, VideoStream, quadrant_labels
+from repro.models.vit import forward_vit, init_vit
+from repro.serving.engine import _smoke_cfg
+from repro.serving.server import ServerConfig, StreamServer
+
+AGREEMENT_GATE = 0.95
+COMBOS = [("photonic_sim", "", ""),
+          ("photonic_pallas", "", ""),
+          ("photonic_pallas", "flash", "fused")]
+DRIFTS = (0.0, 0.05, 0.1, 0.2, 0.4)
+# static calibrated point (gate 1) and the drift sweep's wander (gate 2)
+SPEC_CAL = NoiseSpec()
+SPEC_CURVE = NoiseSpec(wander_sigma_nm=0.02)
+# serving drift: 0.005 nm/frame against a 0.06 nm re-tune bound -> a
+# recalibration every 12 frames, always inside the benign fraction of the
+# linewidth (through-gain >= 0.87 at the bound)
+SPEC_SERVE = NoiseSpec(drift_rate_nm=0.005, wander_sigma_nm=0.01,
+                       recal_bound_nm=0.06)
+TRAIN_STEPS = 300
+EVAL_BATCHES = 8                # 8 x 32 = 256 frames per agreement gate
+SERVE_FRAMES = 144              # recal gate: 12 re-tunes, 0.69%/frame
+#                                 agreement granularity (the 1% restoration
+#                                 gate needs sub-1% resolution)
+OUT_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+
+
+def _train_smoke(steps=TRAIN_STEPS, seed=0):
+    """Fit the planted-box quadrant task so predictions carry real margins.
+
+    Params are initialized under the *serving* config (MGNet included) but
+    trained dense on the bf16 backend: the gate's scores stay random-init
+    (zero gradient), which is fine — the bench's metric is agreement, and
+    the serving gate runs clean under noise either way."""
+    cfg_mg = _smoke_cfg("photonic_pallas")
+    cfg_tr = cfg_mg.with_(mgnet=False, matmul_backend="bf16")
+    stream = ImageStream(img_size=cfg_mg.img_size, global_batch=32,
+                         n_classes=8, patch=cfg_mg.patch, seed=seed)
+    params = init_vit(jax.random.PRNGKey(seed), cfg_mg, n_classes=4)
+
+    def loss_fn(p, images, labels):
+        lg, _ = forward_vit(p, images, cfg_tr)
+        lf = lg.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lf, -1)
+        gold = jnp.take_along_axis(lf, labels[:, None], -1)[:, 0]
+        return (lse - gold).mean()
+
+    @jax.jit
+    def step(p, images, labels):
+        _, g = jax.value_and_grad(loss_fn)(p, images, labels)
+        return jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g)
+
+    for i in range(steps):
+        b = stream.batch_at(i)
+        params = step(params, b["images"], quadrant_labels(b["patch_mask"]))
+    return params, stream
+
+
+def _combo_cfg(backend, attn, ffn, spec=None):
+    """Dense (gate-free) eval config for one backend combo."""
+    cfg = _smoke_cfg(backend, attn, ffn).with_(mgnet=False)
+    return cfg.with_(noise=spec) if spec is not None else cfg
+
+
+def _eval(prep, cfg, stream, n_batches, spec=None, drift=None, seed=11):
+    """Predictions (+ gold) over held-out batches; noisy when ``spec``."""
+    if spec is None:
+        fwd = jax.jit(lambda p, im: forward_vit(p, im, cfg)[0])
+
+        def logits(im, j):
+            return fwd(prep, im)
+    else:
+        nfwd = jax.jit(lambda p, im, ns: scoped(
+            ns, lambda: forward_vit(p, im, cfg)[0]))
+        state = DriftState.init(seed)
+        if drift is not None:
+            state = state.with_drift(drift)
+        states = []
+        for _ in range(n_batches):
+            states.append(state)
+            state = state.advance(spec, 32)
+            if drift is not None:        # pinned sweep: fresh keys, fixed d
+                state = state.with_drift(drift)
+
+        def logits(im, j):
+            return nfwd(prep, im, states[j])
+
+    preds, gold = [], []
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # fused->composed fallback notices
+        for j in range(n_batches):
+            b = stream.batch_at(1000 + j)        # held-out batches
+            preds.append(np.argmax(np.asarray(logits(b["images"], j)), -1))
+            gold.append(np.asarray(quadrant_labels(b["patch_mask"])))
+    return np.concatenate(preds), np.concatenate(gold)
+
+
+def _agreement_gates(params, stream, smoke) -> dict:
+    """Gate 1: clean-vs-noisy agreement per backend combo."""
+    prep = prepare_params(params, bits=8)
+    combos = COMBOS[1:2] if smoke else COMBOS
+    n_batches = 4 if smoke else EVAL_BATCHES
+    rows = {}
+    for backend, attn, ffn in combos:
+        name = "+".join(x for x in (backend, attn, ffn) if x)
+        cfg_c = _combo_cfg(backend, attn, ffn)
+        p_c, gold = _eval(prep, cfg_c, stream, n_batches)
+        p_n, _ = _eval(prep, _combo_cfg(backend, attn, ffn, SPEC_CAL),
+                       stream, n_batches, spec=SPEC_CAL)
+        agree = float((p_n == p_c).mean())
+        acc_c = float((p_c == gold).mean())
+        acc_n = float((p_n == gold).mean())
+        print(f"  {name:<32} clean acc {acc_c:.3f} | noisy acc {acc_n:.3f} "
+              f"| agreement {agree:.4f} ({len(p_c)} frames)")
+        assert agree >= AGREEMENT_GATE, (
+            f"clean-vs-noisy agreement on {name} at the calibrated Q=5000 "
+            f"point must be >= {AGREEMENT_GATE:.0%}; measured {agree:.4f}")
+        rows[name] = {"agreement": agree, "acc_clean": acc_c,
+                      "acc_noisy": acc_n, "frames": int(len(p_c))}
+    return rows
+
+
+def _drift_curve(params, stream) -> dict:
+    """Gate 2: agreement/accuracy under pinned common-mode drift."""
+    prep = prepare_params(params, bits=8)
+    cfg_c = _combo_cfg(*COMBOS[1][:3])
+    cfg_n = _combo_cfg(*COMBOS[1][:3], spec=SPEC_CURVE)
+    p_c, gold = _eval(prep, cfg_c, stream, EVAL_BATCHES)
+    curve = {}
+    for d in DRIFTS:
+        p_n, _ = _eval(prep, cfg_n, stream, EVAL_BATCHES,
+                       spec=SPEC_CURVE, drift=d)
+        curve[d] = {"agreement": float((p_n == p_c).mean()),
+                    "accuracy": float((p_n == gold).mean())}
+        print(f"  drift {d:4.2f} nm: agreement {curve[d]['agreement']:.4f} "
+              f"| accuracy {curve[d]['accuracy']:.3f}")
+    assert curve[DRIFTS[-1]]["agreement"] < curve[0.0]["agreement"], (
+        f"{DRIFTS[-1]} nm of uncompensated drift (beyond the Q=5000 "
+        f"linewidth) must degrade agreement below the on-resonance level; "
+        f"measured {curve[DRIFTS[-1]]['agreement']:.4f} vs "
+        f"{curve[0.0]['agreement']:.4f}")
+    return {str(d): v for d, v in curve.items()}
+
+
+def _serve_preds(params, spec, n_frames, stream_seed=5):
+    cfg = _smoke_cfg("photonic_pallas").with_(noise=spec)
+    sc = ServerConfig(warm_start=False, mesh="off", chunk=8, microbatch=4)
+    srv = StreamServer(cfg, sc, params=params, seed=0)
+    st = VideoStream(img_size=cfg.img_size, patch=cfg.patch,
+                     seed=stream_seed, cut_every=16)
+    s = srv.add_session(st, n_frames=n_frames)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        res = srv.serve()[s.sid]
+    return np.array([res.predictions[i] for i in range(n_frames)]), srv, res
+
+
+def _recal_serving(params, smoke) -> dict:
+    """Gate 3: drift past the bound fires the online re-tune and restores
+    agreement; the same stream without recalibration decays.
+
+    "Pre-drift level" is the *undrifted* noisy server's full-run agreement
+    vs the clean server — the same fpv/shot/wander stochastics with the
+    drift channel off, measured over all frames so the 1% restoration gate
+    has sub-1% resolution (a per-cycle window of 12 frames quantizes
+    agreement in 8.3% steps; a single thin-margin frame would swamp it)."""
+    n = SERVE_FRAMES
+    p_clean, _, _ = _serve_preds(params, None, n)
+    spec_base = NoiseSpec(wander_sigma_nm=SPEC_SERVE.wander_sigma_nm)
+    p_base, _, _ = _serve_preds(params, spec_base, n)
+    a_pre = float((p_base == p_clean).mean())
+    p_rec, srv, res = _serve_preds(params, SPEC_SERVE, n)
+    agree = (p_rec == p_clean)
+    a_rec = float(agree.mean())
+    print(f"  recal serving ({n} frames, bound "
+          f"{SPEC_SERVE.recal_bound_nm:g} nm): {srv.recalibrations} "
+          f"re-tunes | pre-drift (undrifted) agreement {a_pre:.4f} | "
+          f"drifting+recal {a_rec:.4f} | billed {res.recalibrations} "
+          f"to the stream")
+    assert srv.recalibrations >= 1, (
+        "drift past recal_bound_nm must trigger at least one online "
+        "recalibration")
+    assert res.recalibrations == srv.recalibrations, (
+        "every re-tune must be billed to the live stream's accounting")
+    assert a_rec >= a_pre - 0.01 - 1e-9, (
+        f"agreement under drift with recalibration must stay within 1% of "
+        f"the pre-drift level; {a_rec:.4f} vs {a_pre:.4f}")
+    out = {"frames": n, "recalibrations": int(srv.recalibrations),
+           "agreement_pre_drift": a_pre, "agreement_recal": a_rec}
+
+    if not smoke:
+        # counterfactual: same stream, same drift, no re-tune bound — the
+        # rings walk out to n * rate nm and the late window decays
+        spec_off = NoiseSpec(drift_rate_nm=SPEC_SERVE.drift_rate_nm,
+                             wander_sigma_nm=SPEC_SERVE.wander_sigma_nm)
+        p_off, _, _ = _serve_preds(params, spec_off, n)
+        off = (p_off == p_clean)
+        off_full, off_late = float(off.mean()), float(off[-24:].mean())
+        rec_late = float(agree[-24:].mean())
+        print(f"  without recalibration: drift reaches "
+              f"{n * spec_off.drift_rate_nm:.2f} nm, agreement "
+              f"{off_full:.4f} full / {off_late:.4f} late window "
+              f"(vs {rec_late:.4f} with re-tuning)")
+        assert off_late < rec_late, (
+            f"unbounded drift must decay the late window below the "
+            f"recalibrated server's; {off_late:.4f} vs {rec_late:.4f}")
+        out.update({"agreement_no_recal": off_full,
+                    "agreement_late_no_recal": off_late,
+                    "agreement_late_recal": rec_late,
+                    "final_drift_no_recal_nm": n * spec_off.drift_rate_nm})
+    return out
+
+
+def run(smoke: bool = False) -> dict:
+    print("\n== robustness: calibrated device noise, drift, recalibration ==")
+    params, stream = _train_smoke(steps=150 if smoke else TRAIN_STEPS)
+    payload = {"spec": {"q_factor": SPEC_CAL.q_factor,
+                        "fpv_sigma": SPEC_CAL.fpv_sigma,
+                        "shot_sigma": SPEC_CAL.shot_sigma,
+                        "wander_sigma_nm": SPEC_CURVE.wander_sigma_nm}}
+    payload["agreement"] = _agreement_gates(params, stream, smoke)
+    if smoke:
+        payload["recalibration"] = _recal_serving(params, smoke=True)
+        print("  (smoke mode: drift curve + BENCH json skipped)")
+        return payload
+    payload["drift_curve"] = _drift_curve(params, stream)
+    payload["recalibration"] = _recal_serving(params, smoke=False)
+
+    merged = {}
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            merged = json.load(f)
+    merged["robustness"] = payload
+    with open(OUT_JSON, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"  wrote {OUT_JSON} [robustness]")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="one-combo agreement gate + short recal serving "
+                         "(fast CI): skips the drift sweep, the "
+                         "no-recalibration counterfactual and the JSON "
+                         "merge")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,8 +19,8 @@ from benchmarks import (attention_bench, bench_backend_cache,
                         controller_bench, ffn_bench, fig8_energy,
                         fig9_latency, fig10_11_mgnet,
                         mixed_precision_bench, multistream_bench,
-                        roofline_table, serving_bench, table1_qat,
-                        table4_kfps)
+                        robustness_bench, roofline_table, serving_bench,
+                        table1_qat, table4_kfps)
 
 ALL = {
     "fig8": fig8_energy.run,
@@ -44,6 +44,9 @@ ALL = {
     # serving control plane: calibration medrelerr + autotune fps gates
     # ("controller" key in BENCH_serving.json)
     "controller": controller_bench.run,
+    # clean-vs-noisy agreement, accuracy-under-drift, drift-triggered
+    # recalibration ("robustness" key in BENCH_serving.json)
+    "robustness": robustness_bench.run,
 }
 
 HISTORY = os.environ.get("BENCH_HISTORY_JSONL", "BENCH_history.jsonl")

@@ -105,6 +105,12 @@ class ArchConfig:
     #                                      () = uniform quant_bits. Feeds
     #                                      prepare_params(bit_plan=...) and
     #                                      ExecPolicy.bit_plan
+    noise: object = None                 # calibrated device-noise operating
+    #                                      point (core/noise.py NoiseSpec,
+    #                                      a frozen/hashable dataclass) or
+    #                                      None = clean. Feeds
+    #                                      ExecPolicy.noise; typed loosely
+    #                                      to keep configs import-light
 
     # perf-hillclimb knobs (EXPERIMENTS.md §Perf; all default to the
     # paper-faithful baseline behaviour)

@@ -121,13 +121,13 @@ class ExecPolicy:
 
     __slots__ = ("quant_bits", "photonic", "training", "dot_out_native",
                  "backend", "interpret", "attn_backend", "ffn_backend",
-                 "bit_plan")
+                 "bit_plan", "noise")
 
     def __init__(self, quant_bits: int = 0, photonic: bool = False,
                  training: bool = True, dot_out_native: bool = False,
                  backend: str = "", interpret: bool = True,
                  attn_backend: str = "", ffn_backend: str = "",
-                 bit_plan=None):
+                 bit_plan=None, noise=None):
         self.quant_bits = quant_bits
         self.photonic = photonic
         self.training = training
@@ -138,6 +138,10 @@ class ExecPolicy:
         self.ffn_backend = ffn_backend
         self.bit_plan = (tuple(bit_plan) if isinstance(bit_plan, list)
                          else bit_plan) or None
+        # calibrated device-noise operating point (core/noise.py NoiseSpec,
+        # hashable) — None is the clean path, bitwise identical to a policy
+        # built before the field existed
+        self.noise = noise
 
     @staticmethod
     def from_cfg(cfg, training: bool = True) -> "ExecPolicy":
@@ -148,7 +152,8 @@ class ExecPolicy:
                           getattr(cfg, "pallas_interpret", True),
                           getattr(cfg, "attn_backend", "") or "",
                           getattr(cfg, "ffn_backend", "") or "",
-                          getattr(cfg, "bit_plan", None) or None)
+                          getattr(cfg, "bit_plan", None) or None,
+                          getattr(cfg, "noise", None))
 
     def resolve_backend(self) -> str:
         if self.backend:
@@ -168,6 +173,25 @@ class ExecPolicy:
     def is_photonic(self) -> bool:
         return self.resolve_backend().startswith("photonic")
 
+    def without_noise(self) -> "ExecPolicy":
+        """Clean copy of this policy (noise stripped); self when already
+        clean, so clean policies keep object identity."""
+        if self.noise is None:
+            return self
+        return ExecPolicy(self.quant_bits, self.photonic, self.training,
+                          self.dot_out_native, self.backend, self.interpret,
+                          self.attn_backend, self.ffn_backend, self.bit_plan,
+                          None)
+
+    def gate_policy(self) -> "ExecPolicy":
+        """Policy for the MGNet RoI gate: by default the gate runs *clean*
+        even under noise (its tiny electronic-side matmuls would otherwise
+        make the routing — and hence every bucket shape — stochastic);
+        ``NoiseSpec.noisy_gate`` opts the gate into the noise model."""
+        if self.noise is None or self.noise.noisy_gate:
+            return self
+        return self.without_noise()
+
     def fingerprint(self) -> tuple:
         """Hashable identity of every dispatch-relevant knob — the jit
         cache key for policy-closing compiled entry points (models/vit.py
@@ -175,13 +199,14 @@ class ExecPolicy:
         return (self.resolve_backend(), self.resolve_attn_backend(),
                 self.resolve_ffn_backend(), self.quant_bits,
                 bool(self.interpret), bool(self.training),
-                bool(self.dot_out_native), self.bit_plan)
+                bool(self.dot_out_native), self.bit_plan, self.noise)
 
     def __repr__(self):
+        noise = ", noise=on" if self.noise is not None else ""
         return (f"ExecPolicy(backend={self.resolve_backend()!r}, "
                 f"attn={self.resolve_attn_backend()!r}, "
                 f"ffn={self.resolve_ffn_backend()!r}, "
-                f"bits={self.quant_bits}, training={self.training})")
+                f"bits={self.quant_bits}, training={self.training}{noise})")
 
 
 _DEFAULT = ExecPolicy()
@@ -590,6 +615,79 @@ def _photonic_pallas_matmul(x, w, p: ExecPolicy):
 
 
 # --------------------------------------------------------------------------
+# calibrated device-noise dispatch (ExecPolicy.noise)
+# --------------------------------------------------------------------------
+
+def _noisy_matmul(x, w, p: ExecPolicy):
+    """One noisy path for every backend — the registry entries stay the
+    clean contract and the dispatch is not forked per backend.
+
+    Weight-stationary MR banks take the transmission error (crosstalk floor
+    + FPV + Lorentzian drift/wander, core/noise.py); the readout takes shot
+    noise and an optional range-limited ADC. Photonic backends walk the
+    analog float-code schedule (sub-LSB noise cannot ride through int8
+    codes); bf16/qat apply the multiplier to their effective float weight.
+    Keys come from the active noise scope — a DriftState installed by the
+    serving entry points via ``noise.scoped`` — so successive frames draw
+    fresh patterns and a pinned state reproduces bitwise.
+    """
+    from repro.core import noise as noise_mod
+
+    spec = p.noise
+    kc, kf, drift = noise_mod.next_call_keys(spec)
+    backend = p.resolve_backend()
+    mr = spec.mr()
+
+    def _mult(shape):
+        return noise_mod.transmission_error(
+            kc, shape, mr, spec.fpv_sigma, fpv_key=kf, drift_nm=drift,
+            wander_sigma_nm=spec.wander_sigma_nm)
+
+    if backend.startswith("photonic"):
+        bits = _weight_bits(w, p)
+        wq, sw = _resolve_wq(w, bits)
+        mult = _mult(wq.shape)
+        if backend == "photonic_pallas":
+            from repro.kernels import ops as kernel_ops
+            y = kernel_ops.photonic_matmul_prequant_noisy(
+                x.astype(jnp.float32), wq, sw.reshape(-1), mult,
+                noise_mod.shot_key(kc), bits=bits,
+                shot_sigma=spec.shot_sigma,
+                adc_bits=bits if spec.adc_quantize_output else 0,
+                chunk=_WAVELENGTHS)
+            return y.astype(x.dtype)
+        from repro.core.photonic import analog_accumulate
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        sx = quant.absmax_scale(x2, bits=bits)
+        xq = quant.quantize(x2, sx, bits=bits)
+        acc = analog_accumulate(xq, wq.astype(jnp.float32) * mult,
+                                chunk=_WAVELENGTHS)
+        y = acc * sx * sw.reshape(1, -1)
+        y = noise_mod.readout_noise(y, spec, kc, bits=bits)
+        return y.reshape(*lead, _out_dim(w)).astype(x.dtype)
+
+    # bf16 / qat: transmission error on the effective float weight
+    bits = p.quant_bits or 8
+    if isinstance(w, QuantizedWeight):
+        wf = w.dequantize()
+        xf = x.astype(jnp.float32)
+    elif backend == "qat":
+        fq = quant.fake_quant_ste if p.training else quant.fake_quant
+        wf = fq(w.astype(jnp.float32), bits=bits,
+                axis=tuple(range(w.ndim - 1)))
+        xf = fq(x.astype(jnp.float32), bits=bits, axis=None)
+    else:
+        wf = w.astype(jnp.float32)
+        xf = x.astype(jnp.float32)
+    y = jax.lax.dot_general(xf, wf * _mult(wf.shape),
+                            (((x.ndim - 1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = noise_mod.readout_noise(y, spec, kc, bits=bits)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
 # the single matmul entry point
 # --------------------------------------------------------------------------
 
@@ -599,6 +697,8 @@ def matmul(x: jnp.ndarray, w, policy: ExecPolicy | None = None) -> jnp.ndarray:
     x: (..., d_in); w: (d_in, d_out) array or cached ``QuantizedWeight``.
     """
     p = policy or _DEFAULT
+    if p.noise is not None:
+        return _noisy_matmul(x, w, p)
     return get_backend(p.resolve_backend())(x, w, p)
 
 
@@ -769,6 +869,10 @@ def _fused_ffn_ineligible_reason(w1, w2, p: ExecPolicy) -> str | None:
     ``_fused_prequant_eligible`` for the MHSA block). w1 and w2 may carry
     *different* widths: the kernel quantizes the input at w1's width and
     requantizes the hidden state at w2's, exactly the composed numerics."""
+    if p.noise is not None:
+        return ("calibrated device noise is active (ExecPolicy.noise) — "
+                "the fused int8 kernel is the clean digital contract; "
+                "noisy execution runs the composed analog dispatch")
     if p.resolve_backend() != "photonic_pallas":
         return (f"matmul backend is {p.resolve_backend()!r}, fused kernel "
                 f"needs 'photonic_pallas'")

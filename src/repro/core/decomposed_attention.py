@@ -84,6 +84,10 @@ def _fused_prequant_ineligible_reason(params: dict,
     (possibly different — mixed-precision plans) <= 8-bit widths. Else a
     human-readable reason for the composed fallback."""
     p = policy or ExecPolicy()
+    if p.noise is not None:
+        return ("calibrated device noise is active (ExecPolicy.noise) — "
+                "the fused prequant kernel is the clean digital contract; "
+                "noisy execution runs the composed analog dispatch")
     if p.resolve_attn_backend() != "flash":
         return (f"attention backend is {p.resolve_attn_backend()!r}, "
                 f"fused prequant needs 'flash'")

@@ -24,6 +24,8 @@ from __future__ import annotations
 
 import functools
 import math
+import threading
+from contextlib import contextmanager
 from dataclasses import dataclass
 
 import jax
@@ -38,6 +40,17 @@ __all__ = [
     "resolution_bits",
     "required_q_factor",
     "transmission_error",
+    "mr_detune_gain",
+    "drifted_noise_floor",
+    "NoiseSpec",
+    "DriftState",
+    "noise_scope",
+    "scoped",
+    "scope_salt",
+    "current_scope",
+    "next_call_keys",
+    "shot_key",
+    "readout_noise",
 ]
 
 
@@ -87,10 +100,23 @@ def noise_power(cfg: MRConfig, p_in: jnp.ndarray | None = None) -> jnp.ndarray:
     return phi @ p_in
 
 
+@functools.lru_cache(maxsize=None)
 def resolution_bits(cfg: MRConfig) -> float:
-    """Achievable bit resolution = log2(1 / max|P_noise|)."""
-    p_noise = noise_power(cfg)
-    levels = 1.0 / float(jnp.max(jnp.abs(p_noise)))
+    """Achievable bit resolution = log2(1 / max|P_noise|).
+
+    Computed host-side (float32 numpy, mirroring the jnp formula) so it
+    stays a *static* python constant even when called from inside a jit
+    trace — ``transmission_error``'s crosstalk floor must not become a
+    tracer. Cached per (hashable, frozen) MRConfig."""
+    n = cfg.n_channels
+    lam = (cfg.center_nm
+           + (np.arange(n, dtype=np.float32) - (n - 1) / 2.0)
+           * np.float32(cfg.spacing_nm))
+    delta = lam / np.float32(2.0 * cfg.q_factor)
+    diff2 = (lam[:, None] - lam[None, :]) ** 2
+    phi = (delta[:, None] ** 2) / (diff2 + delta[:, None] ** 2)
+    phi = phi * (1.0 - np.eye(n, dtype=np.float32))
+    levels = 1.0 / float(np.abs(phi.sum(axis=1)).max())
     return math.log2(levels)
 
 
@@ -98,9 +124,12 @@ def required_q_factor(target_bits: float = 8.0, cfg: MRConfig | None = None,
                       q_lo: float = 100.0, q_hi: float = 1e6) -> float:
     """Bisect the minimum Q-factor achieving ``target_bits`` resolution.
 
-    Reproduces the paper's finding that 8-bit needs Q ~= 5000 (the exact
-    number depends on the grid spacing; with the 0.8 nm/32ch grid the
-    crossover lands in the low thousands, same order as the paper).
+    Reproduces the paper's finding that 8-bit needs Q ~= 5000. The exact
+    crossover depends on the grid spacing, which the paper leaves open: the
+    default ``MRConfig`` is the calibrated 4.8 nm / 32-channel grid, on which
+    the 8-bit crossover lands just under Q = 5000 — pinned by
+    ``tests/test_noise.py::test_paper_claim_8bit_needs_q5000``. (A DWDM
+    0.8 nm grid would instead need Q ~= 28k; see the module header.)
     """
     base = cfg or MRConfig()
 
@@ -121,24 +150,276 @@ def required_q_factor(target_bits: float = 8.0, cfg: MRConfig | None = None,
     return hi
 
 
+# Fold constants deriving the independent per-component subkeys from one call
+# key. `fold_in` (rather than `split`) keeps the crosstalk uniform drawn from
+# the caller's key unchanged, so the fpv_sigma=0 path stays bitwise identical
+# to the pre-fix behaviour while the FPV/wander/shot draws decorrelate.
+_FPV_FOLD = 0x46505601    # "FPV"
+_WANDER_FOLD = 0x574E4401  # "WND"
+_SHOT_FOLD = 0x53484F01    # "SHO"
+
+
+def mr_detune_gain(cfg: MRConfig, detune_nm) -> jnp.ndarray:
+    """Lorentzian through-transmission of an MR bank detuned by ``detune_nm``.
+
+    g(d) = delta^2 / (d^2 + delta^2) with delta = lambda/(2Q): unity on
+    resonance, falling off over one linewidth. At the calibrated Q = 5000
+    operating point delta ~= 0.155 nm, so 0.05-0.15 nm of thermal drift is
+    the regime where accuracy degrades and 0.5 nm is catastrophic.
+    """
+    delta = cfg.center_nm / (2.0 * cfg.q_factor)
+    d = jnp.asarray(detune_nm, jnp.float32)
+    return (delta * delta) / (d * d + delta * delta)
+
+
+def drifted_noise_floor(cfg: MRConfig, drift_nm) -> jnp.ndarray:
+    """Worst-channel crosstalk power when every ring drifts by ``drift_nm``.
+
+    Traced analogue of ``2^-resolution_bits(cfg)`` (which it equals at
+    drift 0): the ring resonances shift against the fixed laser grid, so the
+    inter-channel detunings |lambda_i + drift - lambda_j| shrink on one side
+    and the crosstalk sum grows with |drift|.
+    """
+    lam = wavelength_grid(cfg)
+    delta = lam / (2.0 * cfg.q_factor)
+    drift = jnp.asarray(drift_nm, jnp.float32)
+    diff2 = (lam[:, None] + drift - lam[None, :]) ** 2
+    phi = (delta[:, None] ** 2) / (diff2 + delta[:, None] ** 2)
+    phi = phi * (1.0 - jnp.eye(cfg.n_channels))
+    return jnp.max(phi @ jnp.ones((cfg.n_channels,)))
+
+
 def transmission_error(key: jax.Array, shape: tuple[int, ...],
                        cfg: MRConfig | None = None,
-                       fpv_sigma: float = 0.0) -> jnp.ndarray:
+                       fpv_sigma: float = 0.0, *,
+                       fpv_key: jax.Array | None = None,
+                       drift_nm=None,
+                       wander_sigma_nm: float = 0.0) -> jnp.ndarray:
     """Multiplicative weight-transmission error for the photonic matmul sim.
 
-    Two components:
+    Components:
       * deterministic crosstalk floor: worst-case noise power of the WDM grid
-        (bounded by 2^-resolution_bits) treated as a uniform error bound;
+        (2^-resolution_bits, or its drift-widened traced analogue) treated as
+        a uniform error bound;
       * fabrication-process variation (FPV): gaussian perturbation of the
-        effective transmission with std ``fpv_sigma`` (0 disables).
+        effective transmission with std ``fpv_sigma`` (0 disables). Drawn from
+        ``fpv_key`` when given (a device-static key, so the FPV pattern is a
+        property of the chip, not of time), else from a subkey folded out of
+        ``key`` — independent of the crosstalk uniform, which consumes ``key``
+        directly (the historical ``split(key)[0]`` derivation reused the
+        already-consumed key and correlated the two draws);
+      * thermal drift + resonance wander (only when ``drift_nm`` is not None):
+        each weight's MR sits at detuning ``drift_nm + wander_sigma_nm * N``,
+        and its transmission is scaled by the Lorentzian ``mr_detune_gain``.
+        Common-mode drift alone mostly rescales logits (benign for argmax);
+        the per-element wander rides the Lorentzian slope, so dispersion —
+        the part that flips predictions — grows with |drift|.
 
-    Returns a multiplier M with E[M] = 1; apply as ``w_effective = w * M``.
+    Returns a multiplier M; apply as ``w_effective = w * M``. With
+    ``drift_nm=None`` (the default) the floor is the static python constant
+    and the fpv_sigma=0 path is bitwise identical to the pre-drift model.
     """
     cfg = cfg or MRConfig()
-    floor = 2.0 ** (-resolution_bits(cfg))
-    u = jax.random.uniform(key, shape, minval=-floor, maxval=floor)
-    m = 1.0 + u
+    if drift_nm is None:
+        floor = 2.0 ** (-resolution_bits(cfg))
+        m = 1.0 + jax.random.uniform(key, shape, minval=-floor, maxval=floor)
+    else:
+        floor = drifted_noise_floor(cfg, drift_nm)
+        u = jax.random.uniform(key, shape)
+        m = 1.0 + (2.0 * u - 1.0) * floor
+        detune = jnp.asarray(drift_nm, jnp.float32)
+        if wander_sigma_nm > 0.0:
+            wkey = jax.random.fold_in(key, _WANDER_FOLD)
+            detune = detune + wander_sigma_nm * jax.random.normal(wkey, shape)
+        m = m * mr_detune_gain(cfg, detune)
     if fpv_sigma > 0.0:
-        key2 = jax.random.split(key)[0]
-        m = m * (1.0 + fpv_sigma * jax.random.normal(key2, shape))
+        if fpv_key is None:
+            fpv_key = jax.random.fold_in(key, _FPV_FOLD)
+        m = m * (1.0 + fpv_sigma * jax.random.normal(fpv_key, shape))
     return m
+
+
+# ---------------------------------------------------------------------------
+# Calibrated noise-injection layer: NoiseSpec + time-indexed DriftState
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NoiseSpec:
+    """Calibrated device-noise operating point (hashable: jit-cache safe).
+
+    The defaults are the paper's Q = 5000 / 8-bit point: the crosstalk floor
+    of the calibrated 4.8 nm grid, ~1% fabrication-process variation, and
+    0.5% shot noise on the balanced-photodetector readout. Drift, wander and
+    recalibration are off unless set — they define the *time-varying* part of
+    the model that ``DriftState`` evolves per frame.
+    """
+
+    q_factor: float = 5000.0       # MR quality factor (crosstalk floor)
+    fpv_sigma: float = 0.01        # device-static fabrication variation
+    shot_sigma: float = 0.005      # per-readout shot noise on the BPD
+    drift_rate_nm: float = 0.0     # common-mode thermal drift per frame
+    wander_sigma_nm: float = 0.0   # per-element fast resonance wander
+    recal_bound_nm: float = 0.0    # drift bound triggering MR re-tuning (0=off)
+    adc_quantize_output: bool = False  # range-limited ADC on the readout
+    noisy_gate: bool = False       # also perturb the MGNet RoI gate matmuls
+    seed: int = 0                  # FPV pattern seed (a property of the chip)
+
+    def mr(self) -> MRConfig:
+        return MRConfig(q_factor=self.q_factor)
+
+
+@jax.tree_util.register_pytree_node_class
+class DriftState:
+    """Time-indexed device state: PRNG lineage + accumulated thermal drift.
+
+    A pytree of scalars, so it passes through jit/AOT boundaries as a traced
+    argument (no retrace as it evolves). ``frame`` indexes time — every draw
+    folds it into the key, so successive frames see fresh noise while a
+    pinned state reproduces bitwise. ``drift_nm`` is the accumulated
+    common-mode resonance shift; ``advance`` grows it at the spec's rate and
+    recalibration (MR re-tuning) resets it to zero.
+    """
+
+    def __init__(self, key: jax.Array, frame, drift_nm):
+        self.key = key
+        self.frame = frame
+        self.drift_nm = drift_nm
+
+    @classmethod
+    def init(cls, seed: int = 0) -> "DriftState":
+        return cls(jax.random.PRNGKey(seed), jnp.int32(0), jnp.float32(0.0))
+
+    def advance(self, spec: NoiseSpec, frames: int = 1) -> "DriftState":
+        return DriftState(self.key, self.frame + jnp.int32(frames),
+                          self.drift_nm + jnp.float32(frames * spec.drift_rate_nm))
+
+    def with_drift(self, nm) -> "DriftState":
+        return DriftState(self.key, self.frame, jnp.float32(nm))
+
+    def reset_drift(self) -> "DriftState":
+        return self.with_drift(0.0)
+
+    def tree_flatten(self):
+        return (self.key, self.frame, self.drift_nm), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"DriftState(frame={self.frame}, drift_nm={self.drift_nm})"
+
+
+# ---------------------------------------------------------------------------
+# Noise scope: per-call-site key threading for the backend dispatch
+# ---------------------------------------------------------------------------
+#
+# The backend dispatch (core/backend.py) has no key parameter — threading one
+# through every matmul/linear/attend signature would fork the whole call tree.
+# Instead a thread-local *scope* carries the DriftState; each noisy dispatch
+# asks `next_call_keys` for its keys, which fold (state.key, state.frame, the
+# active salts, a per-scope call counter) into a unique stream per call site.
+#
+# Install the scope INSIDE the traced entry function (see `scoped`): the scope
+# is then created fresh per trace, so the call counter deterministically
+# restarts at 0 — retraces and eager replays of the same function body assign
+# identical per-site keys, and cached executions reproduce bitwise for equal
+# (params, inputs, DriftState).
+
+_scope_tls = threading.local()
+
+
+class _NoiseScope:
+    __slots__ = ("state", "salts", "counter")
+
+    def __init__(self, state: DriftState):
+        self.state = state
+        self.salts: tuple = ()
+        self.counter = 0
+
+
+@contextmanager
+def noise_scope(state: DriftState):
+    """Install ``state`` as the active noise scope for the calling thread."""
+    prev = getattr(_scope_tls, "scope", None)
+    _scope_tls.scope = _NoiseScope(state)
+    try:
+        yield _scope_tls.scope
+    finally:
+        _scope_tls.scope = prev
+
+
+def scoped(state: DriftState, fn):
+    """Run ``fn()`` under a fresh noise scope — the jit-lambda entry point."""
+    with noise_scope(state):
+        return fn()
+
+
+def current_scope() -> _NoiseScope | None:
+    return getattr(_scope_tls, "scope", None)
+
+
+@contextmanager
+def scope_salt(salt):
+    """Fold an extra salt (e.g. a scanned layer index) into subsequent keys.
+
+    No-op when no scope is active, so clean paths can share the code. The
+    salt may be a traced int32 scalar — `fold_in` accepts tracers, which is
+    how every layer of a `lax.scan`-shared encoder body gets its own draws.
+    """
+    sc = current_scope()
+    if sc is None:
+        yield
+        return
+    prev = sc.salts
+    sc.salts = prev + (salt,)
+    try:
+        yield
+    finally:
+        sc.salts = prev
+
+
+def next_call_keys(spec: NoiseSpec):
+    """Keys for one noisy matmul dispatch: (draw key, FPV key, drift_nm).
+
+    The draw key is unique per (frame, salt chain, call site) — time-varying
+    noise. The FPV key folds the same salts/counter into the *spec seed*
+    lineage instead, so the fabrication pattern each call site sees is fixed
+    across frames: a property of the chip, not of time.
+    """
+    sc = current_scope()
+    if sc is None:
+        raise RuntimeError(
+            "ExecPolicy.noise is set but no noise scope is active. Noisy "
+            "dispatch draws its keys from a DriftState installed via "
+            "repro.core.noise.noise_scope(state) / scoped(state, fn) — the "
+            "serving entry points do this; direct forward calls must wrap "
+            "themselves. (This replaces the old silent PRNGKey(0) fallback "
+            "that froze the error pattern.)")
+    n = sc.counter
+    sc.counter += 1
+    k = jax.random.fold_in(sc.state.key, sc.state.frame)
+    kf = jax.random.PRNGKey(spec.seed)
+    for s in sc.salts:
+        k = jax.random.fold_in(k, s)
+        kf = jax.random.fold_in(kf, s)
+    return jax.random.fold_in(k, n), jax.random.fold_in(kf, n), sc.state.drift_nm
+
+
+def shot_key(key: jax.Array) -> jax.Array:
+    """Readout-noise subkey folded out of a call's draw key."""
+    return jax.random.fold_in(key, _SHOT_FOLD)
+
+
+def readout_noise(y: jnp.ndarray, spec: NoiseSpec, key: jax.Array,
+                  bits: int = 8) -> jnp.ndarray:
+    """Shot noise on the BPD accumulate + optional range-limited ADC requant."""
+    if spec.shot_sigma > 0.0:
+        y = y * (1.0 + spec.shot_sigma
+                 * jax.random.normal(shot_key(key), y.shape))
+    if spec.adc_quantize_output:
+        from repro.core import quant
+        s = quant.absmax_scale(y, bits=bits)
+        y = quant.dequantize(quant.quantize(y, s, bits=bits), s)
+    return y

@@ -36,6 +36,7 @@ from repro.core.noise import MRConfig, transmission_error
 __all__ = [
     "OpticalCoreConfig",
     "PhotonicOpStats",
+    "analog_accumulate",
     "photonic_matmul_sim",
     "photonic_matmul_exact",
 ]
@@ -131,9 +132,43 @@ def photonic_matmul_exact(x: jnp.ndarray, w: jnp.ndarray,
     return acc.astype(jnp.float32) * sx * sw
 
 
+def analog_accumulate(xq: jnp.ndarray, wqf: jnp.ndarray,
+                      chunk: int = 32) -> jnp.ndarray:
+    """Float-code chunk walk of the Fig. 6 schedule over perturbed weights.
+
+    xq: (M, K) quantized activation codes, wqf: (K, N) *float* weight codes
+    (integer codes times an analog transmission multiplier — sub-LSB noise
+    cannot ride through the int8 kernel, so noisy execution walks the same
+    K-chunk schedule on floats). Shared by ``photonic_matmul_sim``'s noisy
+    branch and the noisy backend/kernel dispatch.
+    """
+    m = xq.shape[0]
+    n = wqf.shape[1]
+    xqf = _pad_to(xq.astype(jnp.float32), chunk, axis=1)
+    wqf = _pad_to(wqf.astype(jnp.float32), chunk, axis=0)
+    n_kchunks = xqf.shape[1] // chunk
+
+    # (n_kchunks, M, chunk) input chunks; (n_kchunks, chunk, N) weight tiles.
+    x_chunks = xqf.reshape(m, n_kchunks, chunk).transpose(1, 0, 2)
+    w_chunks = wqf.reshape(n_kchunks, chunk, n)
+
+    def step(acc, xw):
+        xc, wc = xw
+        # One optical cycle per (row, K-chunk): the 32 products per arm
+        # are summed *optically* by the BPD; arms give all N tile cols.
+        acc = acc + xc @ wc
+        return acc, None
+
+    acc, _ = jax.lax.scan(step, jnp.zeros((m, n), jnp.float32),
+                          (x_chunks, w_chunks))
+    return acc
+
+
 def photonic_matmul_sim(x: jnp.ndarray, w: jnp.ndarray,
                         cfg: OpticalCoreConfig | None = None,
-                        noise_key: jax.Array | None = None) -> jnp.ndarray:
+                        noise_key: jax.Array | None = None,
+                        drift_nm=None,
+                        wander_sigma_nm: float = 0.0) -> jnp.ndarray:
     """Tile-walking simulator of the optical core (Fig. 6 schedule).
 
     x: (M, K) activations, w: (K, N) weights, returns (M, N) float32.
@@ -141,7 +176,12 @@ def photonic_matmul_sim(x: jnp.ndarray, w: jnp.ndarray,
     The walk is express as a scan over K-chunks of 32 (wavelength dimension)
     with all N-chunks of 64 (arms) evaluated in parallel per step — exactly
     the chunk-accumulate order of the paper. With ``cfg.apply_noise`` the MR
-    transmission error (crosstalk floor + FPV) multiplies the tuned weights.
+    transmission error (crosstalk floor + FPV, plus Lorentzian drift/wander
+    when ``drift_nm`` is given) multiplies the tuned weights; ``noise_key``
+    is then REQUIRED. The historical silent ``PRNGKey(0)`` fallback froze
+    the error pattern across every call — "drift" that never drifted — so a
+    missing key is now an error. Serving derives per-call keys from a
+    ``DriftState`` (core/noise.py) frame counter.
     """
     cfg = cfg or OpticalCoreConfig()
     m, k = x.shape
@@ -159,27 +199,16 @@ def photonic_matmul_sim(x: jnp.ndarray, w: jnp.ndarray,
         # noise-free walk below shares the integer chunk schedule with the
         # photonic_sim backend (core/backend.py).
         if noise_key is None:
-            noise_key = jax.random.PRNGKey(0)
+            raise ValueError(
+                "photonic_matmul_sim(apply_noise=True) requires an explicit "
+                "noise_key: pass one derived from a DriftState/frame counter "
+                "(repro.core.noise) so successive calls draw fresh error "
+                "patterns. The old implicit PRNGKey(0) default made every "
+                "noisy call observe one frozen pattern.")
         wqf = wq.astype(jnp.float32) * transmission_error(
-            noise_key, wq.shape, cfg.mr, cfg.fpv_sigma)
-        xqf = _pad_to(xq.astype(jnp.float32), cfg.n_wavelengths, axis=1)
-        wqf = _pad_to(wqf, cfg.n_wavelengths, axis=0)
-        kw = cfg.n_wavelengths
-        n_kchunks = xqf.shape[1] // kw
-
-        # (n_kchunks, M, kw) input chunks; (n_kchunks, kw, N) weight tiles.
-        x_chunks = xqf.reshape(m, n_kchunks, kw).transpose(1, 0, 2)
-        w_chunks = wqf.reshape(n_kchunks, kw, n)
-
-        def step(acc, xw):
-            xc, wc = xw
-            # One optical cycle per (row, K-chunk): the 32 products per arm
-            # are summed *optically* by the BPD; arms give all N tile cols.
-            acc = acc + xc @ wc
-            return acc, None
-
-        acc, _ = jax.lax.scan(step, jnp.zeros((m, n), jnp.float32),
-                              (x_chunks, w_chunks))
+            noise_key, wq.shape, cfg.mr, cfg.fpv_sigma,
+            drift_nm=drift_nm, wander_sigma_nm=wander_sigma_nm)
+        acc = analog_accumulate(xq, wqf, chunk=cfg.n_wavelengths)
     else:
         from repro.core.backend import int_accumulate_sim
         acc = int_accumulate_sim(xq, wq,

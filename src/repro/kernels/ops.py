@@ -23,7 +23,8 @@ from repro.kernels.flash_decode import flash_decode
 from repro.kernels.fused_ffn import fused_ffn
 from repro.kernels.photonic_matmul import photonic_matmul_int8
 
-__all__ = ["photonic_matmul", "photonic_matmul_prequant", "fused_attention",
+__all__ = ["photonic_matmul", "photonic_matmul_prequant",
+           "photonic_matmul_prequant_noisy", "fused_attention",
            "fused_roi_attention_prequant", "fused_ffn", "flash_decode",
            "pad_to"]
 
@@ -65,6 +66,44 @@ def photonic_matmul_prequant(x: jax.Array, wq: jax.Array, sw: jax.Array, *,
     out = photonic_matmul_int8(xq, wqp, sx.reshape(()), swp,
                                bm=bm, bn=bn, bk=bk, interpret=interpret)
     return out[:m, :n].reshape(*lead, n)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "shot_sigma",
+                                             "adc_bits", "chunk"))
+def photonic_matmul_prequant_noisy(x: jax.Array, wq: jax.Array,
+                                   sw: jax.Array, mult: jax.Array,
+                                   readout_key: jax.Array, *,
+                                   bits: int = 8, shot_sigma: float = 0.0,
+                                   adc_bits: int = 0, chunk: int = 32
+                                   ) -> jax.Array:
+    """Noisy companion of ``photonic_matmul_prequant`` for the interpret-mode
+    Pallas serving path.
+
+    The int8 kernel is the *clean digital contract* — a sub-LSB analog
+    transmission error cannot ride through integer codes — so noisy
+    execution walks the same wavelength-chunk schedule on float codes
+    (core/photonic.py: ``analog_accumulate``) with the MR multiplier
+    ``mult`` (K, N) applied to the tuned bank, then adds shot noise and an
+    optional range-limited ADC requant on the readout. ``mult`` and
+    ``readout_key`` are explicit traced arguments: this wrapper is itself
+    jitted, so the caller's noise draws must cross the boundary as inputs,
+    never as closed-over tracers.
+    """
+    from repro.core.photonic import analog_accumulate
+    lead = x.shape[:-1]
+    k, n = wq.shape
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+
+    sx = quant.absmax_scale(x2, bits=bits)
+    xq = quant.quantize(x2, sx, bits=bits)
+    acc = analog_accumulate(xq, wq.astype(jnp.float32) * mult, chunk=chunk)
+    y = acc * sx * sw[None, :]
+    if shot_sigma > 0.0:
+        y = y * (1.0 + shot_sigma * jax.random.normal(readout_key, y.shape))
+    if adc_bits:
+        s = quant.absmax_scale(y, bits=adc_bits)
+        y = quant.dequantize(quant.quantize(y, s, bits=adc_bits), s)
+    return y.reshape(*lead, n)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk",

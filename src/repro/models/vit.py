@@ -41,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import mgnet as mgnet_mod
+from repro.core import noise as noise_mod
 from repro.core.decomposed_attention import mhsa_decomposed, mhsa_standard
 from repro.core.mgnet import MGNetConfig, mgnet_scores, patchify
 from repro.distributed.sharding import shard
@@ -219,11 +220,24 @@ def _encode_tokens_impl(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
     # the same static count the flash attention backend skips with
     ffn_live = attn_kv
 
+    noisy = policy.noise is not None
+
     def body(carry, lp):
         return encoder_layer_step(carry, lp, cfg, policy, mask, attn_kv,
                                   ffn_live), None
 
-    fn = jax.checkpoint(body) if cfg.remat else body
+    def body_noisy(carry, lp_li):
+        # the scan shares ONE traced body across layers, so without a
+        # per-layer salt every layer would observe the same noise draws
+        # (the frozen-pattern bug at scan granularity); folding the
+        # scanned layer index into the scope keys decorrelates them
+        lp, li = lp_li
+        with noise_mod.scope_salt(li):
+            return encoder_layer_step(carry, lp, cfg, policy, mask,
+                                      attn_kv, ffn_live), None
+
+    fn = jax.checkpoint(body_noisy if noisy else body) if cfg.remat \
+        else (body_noisy if noisy else body)
     # segmented scan: runs of equal per-layer bit signature each scan as
     # one unit, so a mixed-precision plan still traces a handful of scans
     # inside ONE jit (uniform caches segment to today's single scan).
@@ -232,7 +246,12 @@ def _encode_tokens_impl(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
     for lo, hi in _bit_segments(params["blocks"], cfg.n_layers):
         seg = (params["blocks"] if (lo, hi) == (0, cfg.n_layers)
                else _slice_blocks(params["blocks"], lo, hi))
-        x, _ = jax.lax.scan(fn, x, seg)
+        if noisy:
+            # xs gains the global layer index ONLY under noise, so the
+            # clean graph (and its bitwise contract) is untouched
+            x, _ = jax.lax.scan(fn, x, (seg, jnp.arange(lo, hi)))
+        else:
+            x, _ = jax.lax.scan(fn, x, seg)
     x = layernorm(x, params["final_ln_g"], params["final_ln_b"], cfg.norm_eps)
     return linear(x[:, 0], params["head"], policy=policy)
 
@@ -245,6 +264,11 @@ def _fused_encoder_ineligible_reason(params: dict, cfg: ArchConfig,
     bits (uniform *or* a mixed per-layer plan: the segmented scan slices
     mixed stacks into equal-bits runs before the fused entries see them)
     — else a human-readable reason for the composed fallback."""
+    if policy.noise is not None:
+        return ("calibrated device noise is active (ExecPolicy.noise) — "
+                "the fused single-jit encoder is the clean digital "
+                "contract; noisy execution runs the composed analog "
+                "dispatch")
     if not (policy.resolve_backend() == "photonic_pallas"
             and policy.resolve_attn_backend() == "flash"
             and policy.resolve_ffn_backend() == "fused"):
@@ -358,8 +382,10 @@ def forward_vit(params: dict, images: jnp.ndarray, cfg: ArchConfig,
     if cfg.mgnet and cfg.mgnet_keep_ratio < 1.0:
         mcfg = MGNetConfig(patch=cfg.patch, img_size=cfg.img_size,
                            embed=cfg.mgnet_embed, heads=cfg.mgnet_heads)
-        # MGNet shares the optical cores with the backbone: same policy.
-        scores = mgnet_scores(params["mgnet"], images, mcfg, policy)  # (B, N)
+        # MGNet shares the optical cores with the backbone: same policy
+        # (modulo the gate's default-clean noise stance — gate_policy).
+        scores = mgnet_scores(params["mgnet"], images, mcfg,
+                              policy.gate_policy())  # (B, N)
         kept = max(1, int(cfg.mgnet_keep_ratio * n))
         x, _ = mgnet_mod.select_topk_patches(scores, x, kept)
 

@@ -40,7 +40,8 @@ from repro.core.energy import (EnergyReport, accumulate_matmuls,
                                latency_of_stats, scale_for_bits)
 from repro.models.vit import vit_matmul_shapes
 
-__all__ = ["StreamAccounting", "bucket_report", "mgnet_report"]
+__all__ = ["StreamAccounting", "bucket_report", "mgnet_report",
+           "retune_report"]
 
 
 def _nonlin_elems(cfg: ArchConfig, n_tokens: int) -> int:
@@ -117,6 +118,43 @@ def mgnet_report(cfg: ArchConfig) -> EnergyReport:
     return rep
 
 
+def retune_report(cfg: ArchConfig,
+                  layer_bits: Iterable[int] | None = None) -> EnergyReport:
+    """Energy of one full-model MR re-tuning pass (drift-triggered online
+    recalibration): every weight-stationary bank's codes are re-driven once
+    — one tuning event + one tuning-DAC conversion per MR, at the dense
+    (full kept-patch) tile grid. The activation-activation score/PV
+    matmuls are dynamically tuned every cycle anyway and pay nothing extra.
+    ``layer_bits`` scales each layer's tuning energy to its planned width,
+    mirroring ``_mixed_bits_report``."""
+    from repro.core.photonic import PhotonicOpStats
+
+    shapes = vit_matmul_shapes(cfg)
+
+    def tune_only(sel_shapes):
+        stats, _ = accumulate_matmuls(sel_shapes)
+        t = stats.mr_tunings
+        return energy_of_stats(PhotonicOpStats(mr_tunings=t,
+                                               dac_conversions=t))
+
+    rep = tune_only(shapes[:1])            # patch embed bank
+    lb = (tuple(int(b) for b in layer_bits)
+          if layer_bits is not None else None)
+    per_layer = (len(shapes) == 1 + 8 * cfg.n_layers)
+    if lb is not None and per_layer:
+        for li, bits in enumerate(lb):
+            chunk = shapes[1 + 8 * li: 1 + 8 * (li + 1)]
+            rep += scale_for_bits(
+                tune_only([chunk[i] for i in _WEIGHT_IDX]), bits)
+    elif per_layer:
+        for li in range(cfg.n_layers):
+            chunk = shapes[1 + 8 * li: 1 + 8 * (li + 1)]
+            rep += tune_only([chunk[i] for i in _WEIGHT_IDX])
+    else:                                   # non-standard shape list
+        rep += tune_only(shapes[1:])
+    return rep
+
+
 class StreamAccounting:
     """Accumulates per-frame EnergyReports bucket-by-bucket.
 
@@ -161,6 +199,8 @@ class StreamAccounting:
         self.flush_wall_n: Counter = Counter()
         self._per_bucket: dict[int, EnergyReport] = {}
         self._mgnet: EnergyReport | None = None
+        self.recal_events = 0
+        self._retune: EnergyReport | None = None
 
     def _bucket_report(self, k: int) -> EnergyReport:
         """Per-frame report for a k-patch encode, cached — the ladder is
@@ -185,6 +225,15 @@ class StreamAccounting:
     def add_mgnet(self, n_invocations: int) -> None:
         self.total += self._mgnet_report().scaled(n_invocations)
         self.scored_frames += n_invocations
+
+    def add_recalibration(self) -> None:
+        """Bill one drift-triggered MR re-tuning pass (the software
+        recalibration's hardware analogue, ``retune_report``) to this
+        stream's running energy total."""
+        if self._retune is None:
+            self._retune = retune_report(self.cfg, self.layer_bits)
+        self.total += self._retune
+        self.recal_events += 1
 
     def add_flush_wall(self, bucket: int, wall_s: float) -> None:
         """Record one flush's measured host wall seconds at this bucket.

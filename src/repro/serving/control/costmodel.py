@@ -89,14 +89,22 @@ class EncodeCostModel:
         sc, cfg = server.serve_cfg, server.cfg
         cm = cls(sc.microbatch, hw=hw)
         # token dtype without running the embed: eval_shape on the same
-        # callable the server's ingest path jits
+        # callable the server's ingest path jits. The shape probe strips
+        # any noise spec — noise multiplies by f32, never changes avals,
+        # and abstract tracing must not demand a live noise scope.
+        spol = getattr(server.policy, "without_noise",
+                       lambda: server.policy)()
         tok = jax.eval_shape(
-            lambda p, f: embed_patches(p, f, cfg, server.policy),
+            lambda p, f: embed_patches(p, f, cfg, spol),
             server.params,
             jax.ShapeDtypeStruct(
                 (sc.chunk, cfg.img_size, cfg.img_size, 3), jnp.float32))
         d, dt = tok.shape[-1], tok.dtype
         layer_bits = getattr(server, "layer_bits", None)
+        # noisy servers' encode jits take the DriftState as an extra
+        # trailing arg — the AOT lowering must match the serve-time call
+        # signature (duck-typed: fake test servers need no hook)
+        extra_fn = getattr(server, "_encode_extra_args", None)
 
         def _builder(k: int):
             def build():
@@ -104,7 +112,8 @@ class EncodeCostModel:
                 fn = (server._encode_one[k] if sc.one_shape
                       else server._encode)
                 sds = jax.ShapeDtypeStruct((sc.microbatch, kv, d), dt)
-                return fn, (server.params, sds), kv
+                extra = tuple(extra_fn()) if extra_fn is not None else ()
+                return fn, (server.params, sds) + extra, kv
             return build
 
         for k in server.ladder.sizes:

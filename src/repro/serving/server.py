@@ -64,6 +64,8 @@ from repro.configs.base import ArchConfig
 from repro.core.backend import (ExecPolicy, available_backends,
                                 prepare_params)
 from repro.core.mgnet import MGNetConfig, mask_budget, mgnet_scores
+from repro.core.noise import DriftState, NoiseSpec
+from repro.core.noise import scoped as _noise_scoped
 from repro.data.pipeline import VideoStream, video_fleet
 from repro.distributed.sharding import (DATA_RULES, ShardingCtx,
                                         named_sharding, use_sharding)
@@ -166,6 +168,17 @@ class StreamServer:
         self.cfg = cfg
         self.serve_cfg = server_cfg or ServerConfig()
         self.policy = ExecPolicy.from_cfg(cfg, training=False)
+        # calibrated device noise (cfg.noise: core/noise.py NoiseSpec).
+        # The DriftState is server-owned — one device, one thermal history
+        # shared by every stream — and is threaded through the jit ladder
+        # as an explicit traced argument (``_nargs``), so its per-flush
+        # evolution never retraces anything.
+        self.noise: NoiseSpec | None = getattr(cfg, "noise", None)
+        self.drift = (DriftState.init(self.noise.seed)
+                      if self.noise is not None else None)
+        self._host_drift_nm = 0.0
+        self.recalibrations = 0
+        self._active_plan = None
         self.n_patches = (cfg.img_size // cfg.patch) ** 2
         self.ladder = BucketLadder.from_fractions(
             self.n_patches, self.serve_cfg.bucket_fractions)
@@ -197,14 +210,35 @@ class StreamServer:
                      if self.mesh is not None else None)
 
         cfg_, pol = cfg, self.policy
-        self._embed = jax.jit(
-            lambda p, f: embed_patches(p, f, cfg_, pol))
-        self._score = jax.jit(
-            lambda p, f: mgnet_scores(p["mgnet"], f, self.mcfg, pol))
-        self._encode = jax.jit(
-            lambda p, t: forward_vit_tokens(p, t, cfg_, pol)[0])
-        self._encode_dense = jax.jit(
-            lambda p, f, m: forward_vit_masked(p, f, m, cfg_, pol)[0])
+        gpol = pol.gate_policy()
+        if self.noise is None:
+            self._embed = jax.jit(
+                lambda p, f: embed_patches(p, f, cfg_, pol))
+            self._encode = jax.jit(
+                lambda p, t: forward_vit_tokens(p, t, cfg_, pol)[0])
+            self._encode_dense = jax.jit(
+                lambda p, f, m: forward_vit_masked(p, f, m, cfg_, pol)[0])
+        else:
+            # every noisy entry takes the DriftState as one extra traced
+            # argument and installs the noise scope INSIDE the traced body
+            # (`scoped`): the per-call-site key counter then restarts per
+            # trace, so retraces, eager replays and cached executions all
+            # assign identical keys for equal (params, inputs, DriftState)
+            self._embed = jax.jit(lambda p, f, ns: _noise_scoped(
+                ns, lambda: embed_patches(p, f, cfg_, pol)))
+            self._encode = jax.jit(lambda p, t, ns: _noise_scoped(
+                ns, lambda: forward_vit_tokens(p, t, cfg_, pol)[0]))
+            self._encode_dense = jax.jit(lambda p, f, m, ns: _noise_scoped(
+                ns, lambda: forward_vit_masked(p, f, m, cfg_, pol)[0]))
+        if self.noise is not None and self.noise.noisy_gate:
+            self._score = jax.jit(lambda p, f, ns: _noise_scoped(
+                ns, lambda: mgnet_scores(p["mgnet"], f, self.mcfg, gpol)))
+        else:
+            # default: the RoI gate scores clean even under noise (see
+            # ExecPolicy.gate_policy) — routing and bucket shapes stay
+            # deterministic, so clean-vs-noisy runs compare frame-by-frame
+            self._score = jax.jit(
+                lambda p, f: mgnet_scores(p["mgnet"], f, self.mcfg, gpol))
         # one stable descending argsort per chunk (the ordering
         # select_topk_patches defines), then per-bucket static slices of it
         # — not a fresh full-chunk sort + gather per unique bucket
@@ -215,9 +249,15 @@ class StreamServer:
             for k in self.ladder.sizes}
         self._encode_one = {}
         if self.serve_cfg.one_shape:
-            def _one(k: int):
-                return jax.jit(lambda p, t: forward_vit_tokens(
-                    p, t, cfg_, pol, kv_len=k)[0])
+            if self.noise is None:
+                def _one(k: int):
+                    return jax.jit(lambda p, t: forward_vit_tokens(
+                        p, t, cfg_, pol, kv_len=k)[0])
+            else:
+                def _one(k: int):
+                    return jax.jit(lambda p, t, ns: _noise_scoped(
+                        ns, lambda: forward_vit_tokens(
+                            p, t, cfg_, pol, kv_len=k)[0]))
             self._encode_one = {k: _one(int(k)) for k in self.ladder.sizes}
 
         self._sessions: list[StreamSession] = []
@@ -238,6 +278,7 @@ class StreamServer:
         per-layer energy view threaded to each session's accounting."""
         from repro.core import bitalloc
         bits = self.cfg.quant_bits or 8
+        self._active_plan = plan      # recalibrate() re-tunes under it
         nplan = bitalloc.normalize_bit_plan(plan, self.cfg.n_layers,
                                             default=bits)
         self.policy.bit_plan = bitalloc.plan_key(nplan)
@@ -263,7 +304,61 @@ class StreamServer:
         return s
 
     def _score_fn(self, frames):
+        if self.noise is not None and self.noise.noisy_gate:
+            return self._score(self.params, frames, self.drift)
         return self._score(self.params, frames)
+
+    # -- calibrated device noise + drift-triggered recalibration ----------
+
+    def _nargs(self) -> tuple:
+        """Extra trailing args for the embed/encode jits: the DriftState
+        under noise, nothing otherwise — call sites stay unforked."""
+        return (self.drift,) if self.noise is not None else ()
+
+    # duck-typed hook for EncodeCostModel's builders: the AOT lowering must
+    # match the serve-time call signature, extra noise args included
+    _encode_extra_args = _nargs
+
+    def inject_drift(self, nm: float) -> None:
+        """Add ``nm`` of resonance drift on top of the accumulated state —
+        a thermal step/transient for robustness experiments."""
+        if self.noise is None:
+            raise ValueError("inject_drift needs cfg.noise set")
+        self.drift = self.drift.with_drift(
+            self.drift.drift_nm + jnp.float32(nm))
+        self._host_drift_nm += float(nm)
+
+    def _advance_drift(self, frames: int, extra_sessions=()) -> None:
+        if self.noise is None or frames <= 0:
+            return
+        self.drift = self.drift.advance(self.noise, frames)
+        # host-side mirror of the deterministic (rate x frames) component:
+        # the per-flush bound check must not sync the device
+        self._host_drift_nm += frames * self.noise.drift_rate_nm
+        if (self.noise.recal_bound_nm > 0.0
+                and self._host_drift_nm >= self.noise.recal_bound_nm):
+            self.recalibrate(extra_sessions)
+
+    def recalibrate(self, extra_sessions=()) -> None:
+        """Online MR re-tuning: re-run the quantize-once ``prepare_params``
+        cache from the raw weights under the active plan and zero the
+        accumulated drift — the software analogue of re-locking every MR
+        bank onto its wavelength. Billed to every live session's energy
+        accounting as one full-model tuning pass."""
+        if self.policy.is_photonic():
+            aot = self._encode_aot
+            self.params = self._prepare(self._active_plan)
+            # same raw weights + same plan -> identical codes, avals and
+            # treedef: the cost model's AOT executables stay valid (unlike
+            # calibrate_bits, which changes the plan and must drop them)
+            self._encode_aot = aot
+        if self.drift is not None:
+            self.drift = self.drift.reset_drift()
+        self._host_drift_nm = 0.0
+        self.recalibrations += 1
+        for s in list(self._sessions) + list(extra_sessions):
+            if not s.finished:
+                s.acct.add_recalibration()
 
     # -- warm-start jit ladder ---------------------------------------------
 
@@ -283,8 +378,8 @@ class StreamServer:
         with use_sharding(self.mesh, DATA_RULES if self.mesh else None):
             zf = jnp.zeros((sc.chunk, cfg.img_size, cfg.img_size, 3),
                            jnp.float32)
-            toks = self._embed(self.params, zf)            # (C, N, d)
-            self._score(self.params, zf).block_until_ready()
+            toks = self._embed(self.params, zf, *self._nargs())  # (C, N, d)
+            self._score_fn(zf).block_until_ready()
             zs = jnp.asarray(np.zeros((sc.chunk, self.n_patches),
                                       np.float32))
             order = self._order(zs)                        # (C, N) i32
@@ -298,7 +393,7 @@ class StreamServer:
                 zt = jnp.zeros((sc.microbatch,) + src.shape[1:], src.dtype)
                 zt = self._place(zt)
                 enc = (self._encode_one[k] if sc.one_shape else self._encode)
-                enc(self.params, zt).block_until_ready()
+                enc(self.params, zt, *self._nargs()).block_until_ready()
         self.warm_s = time.time() - t0
         return self.warm_s
 
@@ -419,9 +514,13 @@ class StreamServer:
         n = calib_frames or self.serve_cfg.chunk
         frames = jnp.asarray(
             src.stream.frames_at(src.start, n)["frames"], jnp.float32)
-        tokens = embed_patches(self.params, frames, self.cfg, self.policy)
+        # sensitivity calibration runs clean even under noise: the plan
+        # should rank layers by their quantization sensitivity, not by one
+        # arbitrary noise draw
+        cpol = self.policy.without_noise()
+        tokens = embed_patches(self.params, frames, self.cfg, cpol)
         plan = bitalloc.calibrate_bit_plan(
-            self._raw_params, tokens, self.cfg, self.policy,
+            self._raw_params, tokens, self.cfg, cpol,
             target_mean_bits=target_mean_bits, candidates=candidates,
             default=self.cfg.quant_bits or 8)
         self.params = self._prepare(plan)
@@ -598,7 +697,8 @@ class StreamServer:
         scores_np, n_scored = s.cache.gate(batch["frames_host"], idxs,
                                            self._score_fn, eligible=valid)
         s.acct.add_mgnet(n_scored)
-        toks = self._embed(self.params, frames)            # (C, N, d)
+        toks = self._embed(self.params, frames,
+                           *self._nargs())                 # (C, N, d)
         # budget decision on host: scores are already host-resident from
         # the mask cache, and mask_budget stays in numpy for them
         if sc.force_bucket > 0:
@@ -645,11 +745,11 @@ class StreamServer:
         tokens = self._place(fb.tokens)
         aot = self._encode_aot.get(k)
         if aot is not None:
-            logits = aot(self.params, tokens)
+            logits = aot(self.params, tokens, *self._nargs())
         elif self.serve_cfg.one_shape:
-            logits = self._encode_one[k](self.params, tokens)
+            logits = self._encode_one[k](self.params, tokens, *self._nargs())
         else:
-            logits = self._encode(self.params, tokens)
+            logits = self._encode(self.params, tokens, *self._nargs())
         # encodes are billed at bucket k: the packed prefix is contiguous,
         # so the accelerator's static schedule streams only the k live rows
         # through every core. Padded rows ([n_real:]) are never predicted
@@ -677,6 +777,9 @@ class StreamServer:
             sess.add_deferred(fidxs, preds if len(owners) == 1
                               else preds[np.asarray(rows)])
         self.flush_log.append((tuple(sorted(owners)), k, fb.n_real))
+        # the device ages by the frames this flush pushed through it; the
+        # flush itself observed the pre-advance state
+        self._advance_drift(fb.n_real)
 
     # -- single-stream dense baseline --------------------------------------
 
@@ -701,10 +804,12 @@ class StreamServer:
             s.acct.add_mgnet(n_scored)
             mask = (jax.nn.sigmoid(jnp.asarray(scores_np))
                     > self.mcfg.t_reg).astype(jnp.float32)
-            logits = self._encode_dense(self.params, frames, mask)
+            logits = self._encode_dense(self.params, frames, mask,
+                                        *self._nargs())
             s.acct.add_encode(self.n_patches, int(valid.sum()))
             s.add_deferred([int(i) for i in idxs],
                            jnp.argmax(logits, -1))
+            self._advance_drift(int(valid.sum()), extra_sessions=(s,))
         res = s.finish(time.time() - t0)
         res.bucket_hits = {self.n_patches: res.frames}
         return res
@@ -776,6 +881,31 @@ def main(argv=None):
                          "and settled (the CI smoke gate)")
     ap.add_argument("--mesh", default="auto", choices=["auto", "off"],
                     help="shard the encode batch axis over visible devices")
+    ap.add_argument("--noise", action="store_true",
+                    help="run with calibrated device noise (FPV + shot + "
+                         "MR drift, core/noise.py NoiseSpec); off = clean, "
+                         "bitwise-identical dispatch")
+    ap.add_argument("--fpv-sigma", type=float, default=0.01,
+                    help="fabrication process variation sigma (static "
+                         "per-trace multiplicative weight noise)")
+    ap.add_argument("--shot-sigma", type=float, default=0.005,
+                    help="per-readout shot/thermal noise sigma")
+    ap.add_argument("--q-factor", type=float, default=5000.0,
+                    help="MR quality factor of the noise operating point")
+    ap.add_argument("--drift-rate-nm", type=float, default=0.0,
+                    help="resonance drift accumulated per served frame (nm)")
+    ap.add_argument("--wander-sigma-nm", type=float, default=0.0,
+                    help="per-element resonance wander sigma around the "
+                         "common-mode drift (nm)")
+    ap.add_argument("--recal-bound-nm", type=float, default=0.0,
+                    help="> 0: trigger online recalibration (requantize + "
+                         "drift reset, billed as an MR re-tune) when "
+                         "accumulated drift crosses this bound")
+    ap.add_argument("--adc-quant", action="store_true",
+                    help="quantize noisy readouts through the 8-bit ADC "
+                         "transfer function")
+    ap.add_argument("--noise-seed", type=int, default=0,
+                    help="seed of the device-noise RNG lineage")
     ap.add_argument("--json", default="",
                     help="write per-session + aggregate results to this path")
     args = ap.parse_args(argv)
@@ -791,6 +921,13 @@ def main(argv=None):
                          mgnet=True).with_(matmul_backend=args.backend,
                                            attn_backend=args.attn_backend,
                                            ffn_backend=args.ffn_backend)
+    if args.noise:
+        cfg = cfg.with_(noise=NoiseSpec(
+            q_factor=args.q_factor, fpv_sigma=args.fpv_sigma,
+            shot_sigma=args.shot_sigma, drift_rate_nm=args.drift_rate_nm,
+            wander_sigma_nm=args.wander_sigma_nm,
+            recal_bound_nm=args.recal_bound_nm,
+            adc_quantize_output=args.adc_quant, seed=args.noise_seed))
 
     bit_plan = ()
     if args.bit_plan:
@@ -811,7 +948,10 @@ def main(argv=None):
           f"ffn={server.policy.resolve_ffn_backend()} "
           f"bits={list(server.layer_bits) if server.layer_bits else (cfg.quant_bits or 8)} "
           f"ladder={list(server.ladder.sizes)} of {server.n_patches} patches "
-          f"mesh={'x'.join(str(n) for n in server.mesh.devices.shape) if server.mesh else 'off'}")
+          f"mesh={'x'.join(str(n) for n in server.mesh.devices.shape) if server.mesh else 'off'}"
+          + (f" noise=Q{server.noise.q_factor:g}"
+             f"/fpv{server.noise.fpv_sigma:g}/shot{server.noise.shot_sigma:g}"
+             if server.noise is not None else ""))
 
     streams = video_fleet(args.streams, img_size=cfg.img_size,
                           patch=cfg.patch, cut_every=args.cut_every)
@@ -852,6 +992,9 @@ def main(argv=None):
           f"in {wall:.2f}s -> {agg_fps:.1f} frames/s "
           f"(warm-up {server.warm_s:.2f}s, "
           f"{len(server.flush_log)} encode launches)")
+    if server.noise is not None:
+        print(f"[server] noise: drift {server._host_drift_nm:.3f} nm "
+              f"residual, {server.recalibrations} recalibrations")
     if server.controller is not None:
         print("[server]", server.controller.report())
         assert server.controller.clamp_violations == 0, (
@@ -869,12 +1012,21 @@ def main(argv=None):
             "ladder": list(server.ladder.sizes),
             "layer_bits": (list(server.layer_bits)
                            if server.layer_bits else None),
+            "noise": (None if server.noise is None else {
+                "q_factor": server.noise.q_factor,
+                "fpv_sigma": server.noise.fpv_sigma,
+                "shot_sigma": server.noise.shot_sigma,
+                "drift_rate_nm": server.noise.drift_rate_nm,
+                "recal_bound_nm": server.noise.recal_bound_nm,
+                "recalibrations": server.recalibrations,
+            }),
             "sessions": {
                 str(s.sid): {
                     "frames": results[s.sid].frames,
                     "fps": results[s.sid].fps,
                     "kfps_per_watt": results[s.sid].kfps_per_watt,
                     "mean_bits": results[s.sid].mean_bits,
+                    "recalibrations": results[s.sid].recalibrations,
                     "bucket_hits": results[s.sid].bucket_hits,
                     "predictions": results[s.sid].predictions,
                 } for s in sessions},

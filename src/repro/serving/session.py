@@ -81,6 +81,9 @@ class StreamResult:
     #                              populated when the server timed flushes,
     #                              i.e. under --autotune) — the observed
     #                              counterpart of the modeled latency
+    recalibrations: int = 0      # drift-triggered MR re-tunes billed to
+    #                              this stream (0 unless the server runs a
+    #                              NoiseSpec with recal_bound_nm > 0)
     predictions: dict = field(default_factory=dict)   # frame_idx -> class
 
     @property
@@ -211,5 +214,6 @@ class StreamSession:
         res.dense_kfps_per_watt = self.acct.dense_baseline_kfps_per_watt()
         res.mean_bits = (sum(self.layer_bits) / len(self.layer_bits)
                          if self.layer_bits else 8.0)
+        res.recalibrations = self.acct.recal_events
         self.finished = True
         return res

@@ -5,8 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.noise import (MRConfig, crosstalk_matrix, noise_power,
-                              required_q_factor, resolution_bits,
+from repro.core.noise import (_FPV_FOLD, DriftState, MRConfig, NoiseSpec,
+                              crosstalk_matrix, drifted_noise_floor,
+                              mr_detune_gain, next_call_keys, noise_power,
+                              noise_scope, required_q_factor,
+                              resolution_bits, scope_salt,
                               transmission_error, wavelength_grid)
 
 
@@ -63,3 +66,135 @@ def test_transmission_error_fpv_widens():
     base = transmission_error(key, (4096,), MRConfig())
     fpv = transmission_error(key, (4096,), MRConfig(), fpv_sigma=0.05)
     assert float(jnp.std(fpv)) > float(jnp.std(base))
+
+
+def test_fpv_key_independence_regression():
+    """Regression for the PRNG key-reuse bug: the FPV gaussian was drawn
+    from ``jax.random.split(key)[0]`` of the key the crosstalk uniform had
+    *already consumed* — correlating the two components. The fix derives
+    the FPV subkey by ``fold_in`` so (a) the fpv_sigma=0 path is bitwise
+    unchanged, (b) the FPV sample changed vs the buggy derivation, and
+    (c) the components decorrelate."""
+    key = jax.random.PRNGKey(7)
+    cfg = MRConfig()
+    shape = (8192,)
+    floor = 2.0 ** (-resolution_bits(cfg))
+
+    # (a) fpv_sigma=0: exactly the historical single-draw formula
+    base = transmission_error(key, shape, cfg)
+    expect = 1.0 + jax.random.uniform(key, shape, minval=-floor,
+                                      maxval=floor)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(expect))
+
+    # the derived key is actually distinct from the consumed one
+    fkey = jax.random.fold_in(key, _FPV_FOLD)
+    assert not np.array_equal(np.asarray(fkey), np.asarray(key))
+    assert not np.array_equal(np.asarray(fkey),
+                              np.asarray(jax.random.split(key)[0]))
+
+    # (b) the FPV component matches the fold derivation, not the buggy one
+    sigma = 0.05
+    fpv = transmission_error(key, shape, cfg, fpv_sigma=sigma)
+    comp = np.asarray(fpv) / np.asarray(base) - 1.0
+    want = sigma * jax.random.normal(fkey, shape)
+    np.testing.assert_allclose(comp, np.asarray(want), atol=1e-6)
+    buggy = sigma * jax.random.normal(jax.random.split(key)[0], shape)
+    assert float(np.abs(comp - np.asarray(buggy)).max()) > 1e-3
+
+    # (c) decorrelated from the crosstalk uniform
+    u = np.asarray(base) - 1.0
+    corr = float(np.corrcoef(u, comp)[0, 1])
+    assert abs(corr) < 0.05, corr
+
+
+def test_fpv_explicit_key_overrides_fold():
+    """A device-static ``fpv_key`` pins the FPV pattern regardless of the
+    per-call draw key — the chip's fabrication does not change per frame."""
+    cfg = MRConfig()
+    fkey = jax.random.PRNGKey(42)
+    a = transmission_error(jax.random.PRNGKey(0), (512,), cfg,
+                           fpv_sigma=0.05, fpv_key=fkey)
+    b = transmission_error(jax.random.PRNGKey(1), (512,), cfg,
+                           fpv_sigma=0.05, fpv_key=fkey)
+    ca = np.asarray(a) / np.asarray(transmission_error(
+        jax.random.PRNGKey(0), (512,), cfg)) - 1.0
+    cb = np.asarray(b) / np.asarray(transmission_error(
+        jax.random.PRNGKey(1), (512,), cfg)) - 1.0
+    np.testing.assert_allclose(ca, cb, atol=1e-6)
+
+
+def test_mr_detune_gain_lorentzian():
+    cfg = MRConfig()
+    assert float(mr_detune_gain(cfg, 0.0)) == 1.0
+    gains = [float(mr_detune_gain(cfg, d)) for d in (0.05, 0.1, 0.2, 0.5)]
+    assert gains == sorted(gains, reverse=True)
+    # half-gain at one linewidth delta = lambda/(2Q) ~= 0.155 nm at Q=5000
+    delta = cfg.center_nm / (2.0 * cfg.q_factor)
+    np.testing.assert_allclose(float(mr_detune_gain(cfg, delta)), 0.5,
+                               rtol=1e-6)
+    # 0.5 nm (paper's catastrophic regime) kills most of the transmission
+    assert gains[-1] < 0.1
+
+
+def test_drifted_noise_floor_matches_static_at_zero():
+    cfg = MRConfig()
+    static = 2.0 ** (-resolution_bits(cfg))
+    np.testing.assert_allclose(float(drifted_noise_floor(cfg, 0.0)), static,
+                               rtol=1e-6)
+    f1 = float(drifted_noise_floor(cfg, 1.0))
+    f2 = float(drifted_noise_floor(cfg, 2.0))
+    assert static < f1 < f2
+
+
+def test_noise_spec_hashable_and_jit_safe():
+    a = NoiseSpec()
+    b = NoiseSpec()
+    assert hash(a) == hash(b) and a == b
+    assert hash(NoiseSpec(q_factor=2000.0)) != hash(a) or \
+        NoiseSpec(q_factor=2000.0) != a
+    assert a.mr().q_factor == a.q_factor
+
+
+def test_drift_state_advance_and_reset():
+    spec = NoiseSpec(drift_rate_nm=0.01)
+    st = DriftState.init(0)
+    assert int(st.frame) == 0 and float(st.drift_nm) == 0.0
+    st2 = st.advance(spec, 8)
+    assert int(st2.frame) == 8
+    np.testing.assert_allclose(float(st2.drift_nm), 0.08, rtol=1e-5)
+    st3 = st2.reset_drift()
+    assert float(st3.drift_nm) == 0.0 and int(st3.frame) == 8
+    # registered pytree: flattens to scalars (jit-argument safe)
+    leaves = jax.tree_util.tree_leaves(st2)
+    assert len(leaves) == 3
+
+
+def test_next_call_keys_requires_scope_and_is_per_call():
+    spec = NoiseSpec()
+    with pytest.raises(RuntimeError, match="no noise scope"):
+        next_call_keys(spec)
+    with noise_scope(DriftState.init(0)):
+        k1, f1, d = next_call_keys(spec)
+        k2, f2, _ = next_call_keys(spec)
+        assert not np.array_equal(np.asarray(k1), np.asarray(k2))
+        assert not np.array_equal(np.asarray(f1), np.asarray(f2))
+        with scope_salt(3):
+            k3, _, _ = next_call_keys(spec)
+        assert not np.array_equal(np.asarray(k2), np.asarray(k3))
+    # a fresh scope over the same state replays the same key sequence
+    with noise_scope(DriftState.init(0)):
+        k1b, f1b, _ = next_call_keys(spec)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k1b))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f1b))
+
+
+def test_frame_advance_changes_draw_key_not_fpv_key():
+    """Time moves the noise draws but never the fabrication pattern."""
+    spec = NoiseSpec(drift_rate_nm=0.0)
+    st = DriftState.init(0)
+    with noise_scope(st):
+        k0, f0, _ = next_call_keys(spec)
+    with noise_scope(st.advance(spec, 1)):
+        k1, f1, _ = next_call_keys(spec)
+    assert not np.array_equal(np.asarray(k0), np.asarray(k1))
+    np.testing.assert_array_equal(np.asarray(f0), np.asarray(f1))

@@ -52,6 +52,66 @@ def test_noise_injection_increases_error():
     assert float(jnp.abs(noisy - clean).max()) > 0
 
 
+def test_apply_noise_requires_explicit_key():
+    """Regression: ``noise_key=None`` used to silently default to
+    ``PRNGKey(0)``, freezing one error pattern across every call — "drift"
+    that never drifted. A missing key is now an error."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    with pytest.raises(ValueError, match="noise_key"):
+        photonic_matmul_sim(x, w, OpticalCoreConfig(apply_noise=True))
+
+
+def test_noisy_frames_differ_pinned_key_reproduces():
+    """Two successive frames (distinct keys) draw fresh error patterns;
+    the same key reproduces bitwise."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    cfg = OpticalCoreConfig(apply_noise=True, fpv_sigma=0.02)
+    base = jax.random.PRNGKey(9)
+    f0 = photonic_matmul_sim(x, w, cfg,
+                             noise_key=jax.random.fold_in(base, 0))
+    f1 = photonic_matmul_sim(x, w, cfg,
+                             noise_key=jax.random.fold_in(base, 1))
+    assert float(jnp.abs(f0 - f1).max()) > 0
+    f0b = photonic_matmul_sim(x, w, cfg,
+                              noise_key=jax.random.fold_in(base, 0))
+    np.testing.assert_array_equal(np.asarray(f0), np.asarray(f0b))
+
+
+def test_adc_quantize_output_differential():
+    """Range-limited ADC readout vs the integer-exact matmul: the requant
+    error is bounded by half an output quantization step."""
+    from repro.core import quant
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 96))
+    w = jax.random.normal(jax.random.PRNGKey(1), (96, 48))
+    exact = photonic_matmul_exact(x, w)
+    adc = photonic_matmul_sim(
+        x, w, OpticalCoreConfig(adc_quantize_output=True))
+    step = float(quant.absmax_scale(exact, bits=8))
+    diff = float(jnp.abs(adc - exact).max())
+    assert 0 < diff <= 0.5 * step + 1e-6, (diff, step)
+
+
+def test_noisy_sim_jit_vs_eager_deterministic():
+    """fpv_sigma > 0 under jit: repeated jitted calls are bitwise equal;
+    jit-vs-eager agree to float tolerance (XLA fuses differently, so
+    bitwise equality across compilation modes is not the contract)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    cfg = OpticalCoreConfig(apply_noise=True, fpv_sigma=0.02)
+    key = jax.random.PRNGKey(5)
+    fn = jax.jit(lambda a, b, k: photonic_matmul_sim(a, b, cfg,
+                                                     noise_key=k))
+    j1 = fn(x, w, key)
+    j2 = fn(x, w, key)
+    np.testing.assert_array_equal(np.asarray(j1), np.asarray(j2))
+    eager = photonic_matmul_sim(x, w, cfg, noise_key=key)
+    np.testing.assert_allclose(np.asarray(j1), np.asarray(eager),
+                               rtol=1e-5, atol=1e-5)
+
+
 class TestMatmulStats:
     def test_single_tile(self):
         cfg = OpticalCoreConfig()
