@@ -1,0 +1,205 @@
+"""Chaos gates: serving must survive injected faults without changing math.
+
+The fault layer (serving/faults.py ``FaultSpec`` + ``FaultInjector``) is
+only worth having if the recovery paths it exercises are *provably*
+transparent: a retry, a quarantine, or a restore that perturbed predictions
+would be a silent correctness bug wearing a resilience costume. Every gate
+here is therefore bitwise, leaning on the session-pure micro-batch
+invariant (each launch's w8a8 absmax scope is one session's frames, so
+launch order and co-tenancy never touch per-session numerics):
+
+  A. **Transient faults are free (minus latency)**: with a 10% transient
+     flush-fault rate every session still completes, every prediction is
+     bitwise identical to the fault-free run, and aggregate fps stays
+     >= 0.7x fault-free (retries + backoff are the only cost).
+  B. **Quarantine is surgical**: hard-failing one session mid-stream
+     leaves every other session's predictions bitwise identical to a run
+     where the failed session was *never registered* — its result comes
+     back ``poisoned`` with the failure reason, nobody else notices.
+  C. **Crash-restore is exact**: a server killed mid-serve (injected
+     ``ServerCrash``) and resumed from its round-cadence checkpoint via
+     ``serve_with_restarts`` reproduces the uninterrupted run's
+     predictions bitwise, for every session.
+
+Gates run clean (no NoiseSpec): under noise the server-owned DriftState
+couples sessions through flush order, which is physical (one device, one
+thermal history) but breaks the never-registered counterfactual of gate B.
+
+Results merge into BENCH_serving.json under "faults".
+
+    PYTHONPATH=src python -m benchmarks.fault_bench            # full
+    PYTHONPATH=src python -m benchmarks.fault_bench --smoke    # CI fast
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import warnings
+
+import numpy as np
+
+from repro.data.pipeline import video_fleet
+from repro.serving.engine import _smoke_cfg
+from repro.serving.faults import FaultSpec, serve_with_restarts
+from repro.serving.server import ServerConfig, StreamServer
+
+FPS_RATIO_GATE = 0.7
+FLUSH_FAULT_RATE = 0.10
+OUT_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+
+
+def _server(cfg, **kw):
+    base = dict(warm_start=True, mesh="off", chunk=8, microbatch=4)
+    base.update(kw)
+    return StreamServer(cfg, ServerConfig(**base))
+
+
+def _serve_all(srv, streams, n_frames):
+    sessions = [srv.add_session(st, n_frames=n_frames) for st in streams]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        results = srv.serve()
+    return {s.sid: results[s.sid] for s in sessions}
+
+
+def _preds(res, n_frames):
+    return np.array([res.predictions[i] for i in range(n_frames)])
+
+
+def _gate_transient(cfg, streams, n_frames, base) -> dict:
+    """Gate A: 10% transient flush faults -> bitwise + fps >= 0.7x."""
+    srv = _server(cfg, faults=FaultSpec(flush_fault_rate=FLUSH_FAULT_RATE,
+                                        seed=7))
+    res = _serve_all(srv, streams, n_frames)
+    retries = sum(r.retries for r in res.values())
+    assert retries > 0, (
+        f"a {FLUSH_FAULT_RATE:.0%} transient flush-fault rate over "
+        f"{len(srv.flush_log)} flushes injected nothing — the chaos gate "
+        f"is not exercising the retry path")
+    for sid, r in res.items():
+        assert not r.poisoned, (
+            f"session {sid} was quarantined under purely transient faults "
+            f"({r.failure}) — retries should have absorbed them")
+        np.testing.assert_array_equal(
+            _preds(r, n_frames), _preds(base[sid], n_frames),
+            err_msg=f"session {sid}: transient-fault retries changed "
+                    f"predictions — the retry path is not transparent")
+    fps_base = sum(r.frames for r in base.values()) / base[0].wall_s
+    fps_fault = sum(r.frames for r in res.values()) / res[0].wall_s
+    ratio = fps_fault / fps_base
+    print(f"  transient: {retries} retries over {len(srv.flush_log)} "
+          f"flushes | {fps_fault:.1f} vs {fps_base:.1f} frames/s "
+          f"({ratio:.2f}x) | predictions bitwise identical")
+    assert ratio >= FPS_RATIO_GATE, (
+        f"aggregate fps under {FLUSH_FAULT_RATE:.0%} transient flush "
+        f"faults must stay >= {FPS_RATIO_GATE}x fault-free; measured "
+        f"{ratio:.2f}x ({fps_fault:.1f} vs {fps_base:.1f} frames/s)")
+    return {"retries": int(retries), "fps_ratio": float(ratio),
+            "fps_faulty": float(fps_fault), "fps_clean": float(fps_base)}
+
+
+def _gate_isolation(cfg, streams, n_frames) -> dict:
+    """Gate B: hard-fail one session -> others match never-registered."""
+    victim = 1
+    srv = _server(cfg, faults=FaultSpec(hard_fail_session=victim,
+                                        hard_fail_at_chunk=1, seed=3))
+    res = _serve_all(srv, streams, n_frames)
+    assert res[victim].poisoned and res[victim].failure, (
+        f"session {victim} was hard-failed but its result is not poisoned")
+    # counterfactual: the victim's stream never existed. Sids shift, so
+    # sessions are matched by *stream*, which is what identifies them.
+    survivors = [i for i in range(len(streams)) if i != victim]
+    ref = _serve_all(_server(cfg), [streams[i] for i in survivors],
+                     n_frames)
+    ref_in_order = [ref[sid] for sid in sorted(ref)]  # registration order
+    for i, r in zip(survivors, ref_in_order):
+        np.testing.assert_array_equal(
+            _preds(res[i], n_frames), _preds(r, n_frames),
+            err_msg=f"stream {i}: a co-tenant session's hard failure "
+                    f"leaked into this session's predictions")
+    print(f"  isolation: session {victim} poisoned "
+          f"({res[victim].failure!r}), {len(survivors)} survivors bitwise "
+          f"identical to never-registered run")
+    return {"victim": victim, "failure": res[victim].failure,
+            "survivors": len(survivors)}
+
+
+def _gate_restore(cfg, streams, n_frames, base) -> dict:
+    """Gate C: crash mid-serve, resume from checkpoint -> bitwise."""
+    with tempfile.TemporaryDirectory() as root:
+        def make_server(attempt):
+            # attempt 0 carries the crash bomb; the resumed server must
+            # not re-arm it (a fresh injector would re-fire every attempt)
+            faults = (FaultSpec(crash_at_round=2, seed=5)
+                      if attempt == 0 else None)
+            return _server(cfg, faults=faults, checkpoint_dir=root,
+                           checkpoint_every=1)
+
+        def register(srv):
+            for st in streams:
+                srv.add_session(st, n_frames=n_frames)
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            res, restarts, _ = serve_with_restarts(
+                make_server, register, root,
+                streams=dict(enumerate(streams)))
+    assert restarts == 1, (
+        f"the injected crash must kill exactly the first attempt; "
+        f"observed {restarts} restarts")
+    for sid, r in base.items():
+        assert res[sid].frames == r.frames, (
+            f"session {sid} served {res[sid].frames} frames after restore, "
+            f"{r.frames} uninterrupted — frames were lost or replayed")
+        np.testing.assert_array_equal(
+            _preds(res[sid], n_frames), _preds(r, n_frames),
+            err_msg=f"session {sid}: crash-restore diverged from the "
+                    f"uninterrupted run — the checkpoint is not bitwise")
+    print(f"  restore: crashed at round 2, {restarts} restart, "
+          f"{len(base)} sessions bitwise identical to uninterrupted run")
+    return {"restarts": int(restarts), "sessions": len(base)}
+
+
+def run(smoke: bool = False) -> dict:
+    print("\n== faults: injected chaos vs bitwise serving guarantees ==")
+    cfg = _smoke_cfg("")
+    n_streams = 2 if smoke else 3
+    n_frames = 24 if smoke else 48
+    streams = video_fleet(n_streams, img_size=cfg.img_size, patch=cfg.patch)
+    base = _serve_all(_server(cfg), streams, n_frames)
+
+    payload = {"streams": n_streams, "frames_per_stream": n_frames,
+               "flush_fault_rate": FLUSH_FAULT_RATE}
+    payload["transient"] = _gate_transient(cfg, streams, n_frames, base)
+    payload["restore"] = _gate_restore(cfg, streams, n_frames, base)
+    if smoke:
+        print("  (smoke mode: isolation gate + BENCH json skipped)")
+        return payload
+    payload["isolation"] = _gate_isolation(cfg, streams, n_frames)
+
+    merged = {}
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            merged = json.load(f)
+    merged["faults"] = payload
+    with open(OUT_JSON, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"  wrote {OUT_JSON} [faults]")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 streams x 24 frames, transient + restore gates "
+                         "only (fast CI); skips the isolation gate and the "
+                         "JSON merge")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,8 +16,8 @@ import sys
 import time
 
 from benchmarks import (attention_bench, bench_backend_cache,
-                        controller_bench, ffn_bench, fig8_energy,
-                        fig9_latency, fig10_11_mgnet,
+                        controller_bench, fault_bench, ffn_bench,
+                        fig8_energy, fig9_latency, fig10_11_mgnet,
                         mixed_precision_bench, multistream_bench,
                         robustness_bench, roofline_table, serving_bench,
                         table1_qat, table4_kfps)
@@ -47,6 +47,10 @@ ALL = {
     # clean-vs-noisy agreement, accuracy-under-drift, drift-triggered
     # recalibration ("robustness" key in BENCH_serving.json)
     "robustness": robustness_bench.run,
+    # chaos gates: transient-fault bitwise transparency + fps floor,
+    # per-session quarantine isolation, crash-and-restore exactness
+    # ("faults" key in BENCH_serving.json)
+    "faults": fault_bench.run,
 }
 
 HISTORY = os.environ.get("BENCH_HISTORY_JSONL", "BENCH_history.jsonl")

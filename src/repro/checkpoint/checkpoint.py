@@ -31,7 +31,8 @@ import numpy as np
 
 from repro.distributed.sharding import ShardingCtx, named_sharding
 
-__all__ = ["save", "restore", "async_save", "latest_step", "CheckpointManager"]
+__all__ = ["save", "restore", "async_save", "load_meta", "restore_flat",
+           "latest_step", "CheckpointManager"]
 
 
 def _flatten(tree, is_leaf=None):
@@ -134,6 +135,30 @@ def restore(path: str, like: Any, ctx: ShardingCtx | None = None,
     tree = jax.tree_util.tree_unflatten(
         treedef, [leaves[keys_in_order.index(k)] for k in flat_like])
     return tree, meta["step"]
+
+
+def load_meta(path: str) -> dict:
+    """The checkpoint's meta.json (step, keys, shapes/dtypes, extra) —
+    enough to decide *what* a snapshot holds without loading any leaf."""
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f)
+
+
+def restore_flat(path: str) -> tuple[dict, int, dict]:
+    """Self-describing restore: rebuild the flat ``{key: np.ndarray}``
+    dict straight from meta.json — no ``like`` template needed, which is
+    what a serving checkpoint requires (its session set, deferred counts
+    and queued-row shapes are only known to the snapshot itself).
+    Checksum-verified like ``restore``; leaves stay host numpy. Returns
+    ``(arrays, step, extra)``."""
+    meta = load_meta(path)
+    host = {}
+    for k in meta["keys"]:
+        fn = os.path.join(path, k.replace("/", "__") + ".npy")
+        host[k] = _coerce_dtype(np.load(fn), meta["dtypes"].get(k, ""))
+    if meta["checksum"] != _checksum(host):
+        raise IOError(f"checkpoint {path} failed checksum (torn write?)")
+    return host, meta["step"], meta.get("extra", {})
 
 
 def async_save(path: str, tree: Any, step: int = 0,

@@ -76,13 +76,18 @@ class StragglerDetector:
         ds = self._durations
         flagged = False
         if len(ds) >= 10:
-            srt = sorted(ds[-self.window:])
+            srt = sorted(ds)
             med = srt[len(srt) // 2]
             mad = sorted(abs(d - med) for d in srt)[len(srt) // 2]
             if duration_s > med + self.k * max(mad, 1e-6):
                 flagged = True
                 self.flags.append((step, duration_s, med))
         ds.append(duration_s)
+        # keep only the newest ``window`` samples: the estimate was always
+        # windowed, but the raw history grew without bound on a long-lived
+        # server (the serving flush watchdog records forever)
+        if len(ds) > self.window:
+            del ds[: len(ds) - self.window]
         return flagged
 
     class timer:

@@ -6,6 +6,8 @@ account). ``repro.serving.server`` is the multi-stream session server
 from repro.serving.accounting import StreamAccounting
 from repro.serving.buckets import BucketHistogram, BucketLadder
 from repro.serving.engine import ServingEngine, main
+from repro.serving.faults import (FaultInjector, FaultSpec, ServeError,
+                                  SessionFailure, serve_with_restarts)
 from repro.serving.mask_cache import TemporalMaskCache
 from repro.serving.scheduler import FrameBatch, MicroBatcher
 from repro.serving.server import ServerConfig, StreamServer
@@ -14,4 +16,5 @@ from repro.serving.session import ServingConfig, StreamResult, StreamSession
 __all__ = ["ServingEngine", "ServingConfig", "StreamResult", "BucketLadder",
            "BucketHistogram", "TemporalMaskCache", "MicroBatcher",
            "FrameBatch", "StreamAccounting", "StreamServer", "ServerConfig",
-           "StreamSession", "main"]
+           "StreamSession", "FaultSpec", "FaultInjector", "ServeError",
+           "SessionFailure", "serve_with_restarts", "main"]

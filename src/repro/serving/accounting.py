@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import warnings
 from collections import Counter
+from dataclasses import fields as _dc_fields
 from typing import Iterable
 
 from repro.configs.base import ArchConfig
@@ -250,6 +251,48 @@ class StreamAccounting:
         k = int(bucket)
         n = self.flush_wall_n[k]
         return self.flush_wall_s[k] / n if n else None
+
+    # -- checkpoint/migration ---------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of the accumulated accounting (everything a
+        restored session needs to keep billing where it left off; the
+        per-bucket report caches rebuild lazily from cfg). Counter keys
+        become strings here — JSON objects only key on strings — and
+        ``load_state`` turns them back into ints."""
+        return {
+            "total": {f.name: getattr(self.total, f.name)
+                      for f in _dc_fields(self.total)},
+            "frames": self.frames,
+            "scored_frames": self.scored_frames,
+            "bucket_frames": {str(k): v
+                              for k, v in self.bucket_frames.items()},
+            "bucket_launches": {str(k): v
+                                for k, v in self.bucket_launches.items()},
+            "flush_wall_s": {str(k): v
+                             for k, v in self.flush_wall_s.items()},
+            "flush_wall_n": {str(k): v
+                             for k, v in self.flush_wall_n.items()},
+            "recal_events": self.recal_events,
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore ``state_dict()`` output into this (freshly built)
+        accounting; cfg/ladder/bit-plan identity is the caller's contract
+        (the server's checkpoint compatibility check)."""
+        self.total = EnergyReport(**{k: float(v)
+                                     for k, v in state["total"].items()})
+        self.frames = int(state["frames"])
+        self.scored_frames = int(state["scored_frames"])
+        self.bucket_frames = Counter(
+            {int(k): int(v) for k, v in state["bucket_frames"].items()})
+        self.bucket_launches = Counter(
+            {int(k): int(v) for k, v in state["bucket_launches"].items()})
+        self.flush_wall_s = {int(k): float(v)
+                             for k, v in state["flush_wall_s"].items()}
+        self.flush_wall_n = Counter(
+            {int(k): int(v) for k, v in state["flush_wall_n"].items()})
+        self.recal_events = int(state["recal_events"])
 
     def dead_buckets(self) -> tuple[int, ...]:
         """Ladder entries no frame was ever routed to (empty when no

@@ -12,6 +12,12 @@ Each observation also carries a monotonically increasing ``seq`` stamped
 at record time, so the controller can tell observations recorded *after*
 its last calibration from the ones the fit was trained on — the honest
 held-out split behind ``Controller.median_rel_error``.
+
+With a ``StragglerDetector`` attached (the server's ``watchdog`` knob),
+the ring doubles as a flush watchdog: every recorded observation feeds
+the detector's robust median+MAD estimate, and flushes that run
+anomalously long (a stalling device, an injected stall fault) land in
+``straggler_flags`` — graceful degradation's detection half.
 """
 
 from __future__ import annotations
@@ -19,6 +25,8 @@ from __future__ import annotations
 import statistics
 from collections import deque
 from dataclasses import dataclass
+
+from repro.distributed.fault_tolerance import StragglerDetector
 
 __all__ = ["FlushObs", "FlushTelemetry"]
 
@@ -43,13 +51,16 @@ class FlushObs:
 class FlushTelemetry:
     """Ring buffer of ``FlushObs`` with per-bucket views."""
 
-    def __init__(self, window: int = 256):
+    def __init__(self, window: int = 256,
+                 straggler: StragglerDetector | None = None):
         if window < 1:
             raise ValueError("telemetry window must be >= 1")
         self.window = window
         self._buf: deque = deque(maxlen=window)
         self._seq = 0
         self.total_recorded = 0
+        self.straggler = straggler
+        self.straggler_flags: list[FlushObs] = []
 
     def record(self, bucket: int, n_real: int, microbatch: int,
                n_streams: int, wall_s: float, rnd: int = 0) -> FlushObs:
@@ -58,6 +69,9 @@ class FlushTelemetry:
         self._seq += 1
         self.total_recorded += 1
         self._buf.append(obs)
+        if self.straggler is not None and self.straggler.record(obs.seq,
+                                                                obs.wall_s):
+            self.straggler_flags.append(obs)
         return obs
 
     # -- views -------------------------------------------------------------

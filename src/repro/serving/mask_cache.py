@@ -108,3 +108,30 @@ class TemporalMaskCache:
     def reuse_rate(self) -> float:
         tot = self.scored_frames + self.reused_frames
         return self.reused_frames / tot if tot else 0.0
+
+    # -- checkpoint/migration ---------------------------------------------
+
+    def state_dict(self) -> dict:
+        """Snapshot the gating walk's full state: the reference frame and
+        its scores (arrays, or None before anything was scored), the
+        reference index, and the reuse counters. A restored cache makes
+        the *same* refresh-vs-reuse decision on the next frame the
+        original would have — the bitwise-resume requirement."""
+        return {
+            "ref_frame": (None if self._ref_frame is None
+                          else np.asarray(self._ref_frame)),
+            "ref_scores": (None if self._ref_scores is None
+                           else np.asarray(self._ref_scores)),
+            "ref_idx": int(self._ref_idx),
+            "scored_frames": int(self.scored_frames),
+            "reused_frames": int(self.reused_frames),
+        }
+
+    def load_state(self, state: dict) -> None:
+        self._ref_frame = (None if state["ref_frame"] is None
+                           else np.asarray(state["ref_frame"]))
+        self._ref_scores = (None if state["ref_scores"] is None
+                            else np.asarray(state["ref_scores"]))
+        self._ref_idx = int(state["ref_idx"])
+        self.scored_frames = int(state["scored_frames"])
+        self.reused_frames = int(state["reused_frames"])

@@ -145,6 +145,36 @@ class MicroBatcher:
                 out.append(self._take(k, pad=True))
         return out
 
+    def discard(self, select: Callable[[Hashable], bool]) -> int:
+        """Drop every queue whose key matches ``select`` without flushing
+        it — the quarantine path: a hard-failed session's queued frames
+        must never reach the device (their launches would be billed and
+        their padding would waste flush slots). Returns rows dropped."""
+        doomed = [k for k in self._queues if select(k)]
+        dropped = 0
+        for k in doomed:
+            dropped += self._rows(k)
+            del self._queues[k]
+        return dropped
+
+    def export(self, select: Callable[[Hashable], bool] | None = None
+               ) -> list:
+        """Non-destructive snapshot of queued entries as
+        ``(key, tokens, frame_idx, now, is_row)`` tuples, queue order
+        preserved — the checkpoint/migration surface. Re-``push``-ing the
+        entries into an empty batcher in export order reconstructs the
+        exact queue state (same groups, same ``now`` ticks), which is what
+        keeps a restored serve's per-launch absmax scopes — and therefore
+        its predictions — bitwise identical (pad-flushing partials at
+        checkpoint time would change them)."""
+        out = []
+        for k in sorted(self._queues, key=str):
+            if select is not None and not select(k):
+                continue
+            for t, ix, now, is_row in self._queues[k]:
+                out.append((k, t, list(ix), now, is_row))
+        return out
+
     def rows(self, key: Hashable) -> int:
         """Rows currently queued under ``key`` (0 for unknown keys)."""
         return self._rows(key)

@@ -52,6 +52,8 @@ from __future__ import annotations
 import argparse
 import functools
 import json
+import os
+import shutil
 import time
 import warnings
 from dataclasses import dataclass, fields as _dc_fields
@@ -60,6 +62,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.checkpoint import latest_step, restore_flat
+from repro.checkpoint.checkpoint import save as _ckpt_save
 from repro.configs.base import ArchConfig
 from repro.core.backend import (ExecPolicy, available_backends,
                                 prepare_params)
@@ -67,12 +71,16 @@ from repro.core.mgnet import MGNetConfig, mask_budget, mgnet_scores
 from repro.core.noise import DriftState, NoiseSpec
 from repro.core.noise import scoped as _noise_scoped
 from repro.data.pipeline import VideoStream, video_fleet
+from repro.distributed.fault_tolerance import StragglerDetector
 from repro.distributed.sharding import (DATA_RULES, ShardingCtx,
                                         named_sharding, use_sharding)
 from repro.launch.mesh import make_serving_mesh
 from repro.models.vit import (embed_patches, forward_vit_masked,
                               forward_vit_tokens, init_vit)
 from repro.serving.buckets import BucketLadder
+from repro.serving.faults import (CheckpointFault, FatalFault, FaultInjector,
+                                  FaultSpec, ServeError, ServerCrash,
+                                  SessionFailure, TransientFault)
 from repro.serving.mask_cache import TemporalMaskCache
 from repro.serving.scheduler import MicroBatcher
 from repro.serving.session import (ServingConfig, StreamResult,
@@ -144,6 +152,29 @@ class ServerConfig(ServingConfig):
     #                              per rotation pass (the controller's
     #                              tunable counterpart)
     telemetry_window: int = 256  # flush-observation ring-buffer size
+    faults: FaultSpec | None = None  # deterministic fault injection
+    #                              (serving/faults.py); None keeps the loop
+    #                              on the exact fault-free instruction
+    #                              stream — zero overhead, zero RNG
+    retry_limit: int = 3         # transient-fault retries per flush before
+    #                              the owning session is quarantined
+    retry_backoff_s: float = 0.002  # base of the bounded exponential
+    #                              backoff between flush retries (doubles
+    #                              per attempt, capped at 1s; 0 disables)
+    watchdog: bool = False       # time every flush (block_until_ready —
+    #                              costs the async overlap, like autotune)
+    #                              and feed a StragglerDetector through the
+    #                              telemetry ring: anomalously slow flushes
+    #                              land in ``server.straggler_flags``
+    max_pending_rows: int = 0    # > 0: bound the shared batcher; an ingest
+    #                              chunk arriving above the bound is load-
+    #                              shed (dropped, counted per session) —
+    #                              the overload response that keeps queue
+    #                              memory and latency bounded
+    checkpoint_dir: str = ""     # root for periodic serve-loop snapshots
+    checkpoint_every: int = 0    # > 0: checkpoint every N scheduling
+    #                              rounds (needs checkpoint_dir)
+    checkpoint_keep: int = 3     # newest snapshots retained per root
 
     @staticmethod
     def from_serving(sc: ServingConfig, **overrides) -> "ServerConfig":
@@ -265,6 +296,18 @@ class StreamServer:
         self.batcher: MicroBatcher | None = None
         self.flush_log: list[tuple] = []   # (owner sids, bucket k, n_real)
         self.warm_s = 0.0
+        # fault tolerance: the injector exists only under a FaultSpec (the
+        # fault-free loop must stay on the pre-fault-layer instruction
+        # stream — see tests/test_serving_faults.py's bitwise pin)
+        self.faults: FaultSpec | None = self.serve_cfg.faults
+        self._injector = (FaultInjector(self.faults)
+                          if self.faults is not None else None)
+        self._watchdog = bool(self.serve_cfg.watchdog)
+        if self._watchdog and not self.serve_cfg.autotune:
+            self.telemetry = self._make_telemetry()
+        self.checkpoint_failures = 0
+        self._inflight: dict | None = None  # paused serve() loop state
+        self._resume: tuple | None = None   # (rnd, offset) from a restore
         # autotune mode compiles its own (probed-only) jit set inside
         # autotune_prepare — an eager full-ladder warm-up would pay for
         # exactly the dead-bucket compiles the probe exists to skip
@@ -556,8 +599,7 @@ class StreamServer:
 
         Returns the controller."""
         from repro.serving.control import (Controller, ControllerConfig,
-                                           EncodeCostModel, FlushTelemetry,
-                                           TunedKnobs)
+                                           EncodeCostModel, TunedKnobs)
         sc = self.serve_cfg
         probed = self._route_probe(calib_frames)
         if sc.force_bucket > 0:
@@ -573,7 +615,7 @@ class StreamServer:
             # lowering, so the jit ladder keeps ownership there.
             self._encode_aot = dict(self.cost_model.executables)
         self.warm_start(buckets=tuple(sorted(probed)))
-        self.telemetry = FlushTelemetry(sc.telemetry_window)
+        self.telemetry = self._make_telemetry()
         defaults = TunedKnobs(max_wait_chunks=sc.max_wait_chunks,
                               interleave_depth=sc.interleave_depth)
         self.controller = Controller(
@@ -581,47 +623,127 @@ class StreamServer:
             ControllerConfig(retune_every=sc.retune_every))
         return self.controller
 
+    def _make_telemetry(self):
+        """Flush-observation ring; with the watchdog on it carries a
+        ``StragglerDetector`` so every timed flush feeds the median+MAD
+        slow-flush estimate (``straggler_flags``)."""
+        from repro.serving.control import FlushTelemetry
+        det = StragglerDetector() if self._watchdog else None
+        return FlushTelemetry(self.serve_cfg.telemetry_window,
+                              straggler=det)
+
+    @property
+    def straggler_flags(self) -> list:
+        """Flush observations the watchdog flagged as anomalously slow
+        (empty without ``watchdog=True`` / ``autotune`` telemetry)."""
+        return (list(self.telemetry.straggler_flags)
+                if self.telemetry is not None else [])
+
     # -- the serving loop --------------------------------------------------
 
-    def serve(self, verbose: bool = False) -> dict[int, StreamResult]:
+    def serve(self, verbose: bool = False,
+              max_rounds: int = 0) -> dict[int, StreamResult]:
         """Serve every registered (unfinished) session to completion,
         interleaved round-robin; returns ``{sid: StreamResult}``. Wall
         time is shared: every result's ``wall_s`` is the loop's span, so
         per-session fps reflects multiplexed service and the *aggregate*
-        fps is ``sum(frames) / wall``."""
+        fps is ``sum(frames) / wall``.
+
+        ``max_rounds > 0`` **pauses** after that many scheduling rounds
+        and returns ``{}`` with the loop state (sessions, queued rows,
+        round/rotation cursors) held in flight — the deterministic stop
+        the checkpoint/migration surfaces operate at; calling ``serve()``
+        again resumes exactly where it paused.
+
+        Failure semantics (README "Failure semantics & fault injection"):
+        transient flush faults retry with bounded exponential backoff;
+        fatal/exhausted failures quarantine only the owning session (its
+        ``StreamResult`` comes back ``poisoned`` with the reason) while
+        every other session serves to completion. Any *unexpected*
+        exception still fails the whole serve, but re-raises as a
+        ``ServeError`` attributing the failing bucket/sessions/round and
+        carrying partial results for sessions that had fully drained."""
         sc = self.serve_cfg
-        live = [s for s in self._sessions if not s.finished]
-        if not live:
-            return {}
-        for s in live:
-            s.open()
-        self.batcher = MicroBatcher(sc.microbatch)
-        self.flush_log = []
+        if self._inflight is None:
+            live = [s for s in self._sessions if not s.finished]
+            if not live:
+                return {}
+            for s in live:
+                s.open()
+            self.batcher = MicroBatcher(sc.microbatch)
+            self.flush_log = []
+            rnd, offset = self._resume if self._resume else (0, 0)
+            self._resume = None
+            st = {"live": live, "rnd": rnd, "offset": offset,
+                  "wall_s": 0.0, "retuned_at": 0,
+                  "early": self._restore_pending(live)}
+            self._inflight = st
+        else:
+            st = self._inflight
+        live = st["live"]
         by_sid = {s.sid: s for s in live}
-        rnd, offset = 0, 0
         t0 = time.time()
         try:
-            return self._serve_loop(live, by_sid, rnd, offset, t0, verbose)
-        except BaseException:
-            # a mid-serve failure poisons the half-served sessions: their
-            # accounting/mask-cache state is partial, and re-opening them
-            # on the next serve() would re-ingest from frame 0 and
-            # double-count — they are abandoned instead
+            done = self._serve_loop(st, by_sid, t0, verbose, max_rounds)
+        except BaseException as e:
+            # an unexpected mid-serve failure poisons the half-served
+            # sessions: their accounting/mask-cache state is partial, and
+            # re-opening them on the next serve() would re-ingest from
+            # frame 0 and double-count — they are abandoned. Sessions that
+            # had already fully drained lose nothing: their finished
+            # results ride out on the ServeError.
+            st["wall_s"] += time.time() - t0
+            wall = st["wall_s"]
+            partial = {s.sid: s.finish(wall) for s in live
+                       if s.drained and (s.failed_reason
+                                         or s.acct.frames == s.frames_seen)}
             for s in live:
                 s.finished = True
-            raise
-        finally:
-            # finished sessions leave the registry (long-lived servers and
-            # the engine shim's run-per-session pattern stay bounded)
+            self._inflight = None
             self._sessions = [s for s in self._sessions if not s.finished]
+            if isinstance(e, ServeError):
+                e.partial_results.update(partial)
+                raise
+            ctx = {"round": st["rnd"],
+                   "sessions": [s.sid for s in live if not s.drained]}
+            raise ServeError(
+                f"serve() died at round {ctx['round']} (sessions "
+                f"{ctx['sessions']} mid-stream): {e}", context=ctx,
+                partial_results=partial) from e
+        st["wall_s"] += time.time() - t0
+        if not done:
+            return {}           # paused by max_rounds; serve() resumes
+        wall = st["wall_s"]
+        results = {s.sid: s.finish(wall) for s in live}
+        self._inflight = None
+        # finished sessions leave the registry (long-lived servers and
+        # the engine shim's run-per-session pattern stay bounded)
+        self._sessions = [s for s in self._sessions if not s.finished]
+        return results
 
-    def _serve_loop(self, live, by_sid, rnd, offset, t0,
-                    verbose) -> dict[int, StreamResult]:
+    def _serve_loop(self, st, by_sid, t0, verbose, max_rounds) -> bool:
+        """Run scheduling rounds until every live session drains (returns
+        True) or ``max_rounds`` rounds elapse (returns False — paused).
+        Cursors (round, rotation offset) persist in ``st`` across pauses
+        and checkpoints."""
         sc = self.serve_cfg
         ctl = self.controller
-        retuned_at = 0
+        live = st["live"]
+        rounds = 0
         with use_sharding(self.mesh, DATA_RULES if self.mesh else None):
+            early, st["early"] = st.get("early") or [], []
+            if early:
+                # flushes that became ready while re-queuing a restored
+                # checkpoint's pending rows (cannot happen when the
+                # snapshot respected the < microbatch queue invariant,
+                # but a hand-edited snapshot must not lose frames)
+                self._round = st["rnd"]
+                for fb in early:
+                    self._safe_finish(fb, by_sid)
             while any(not s.drained for s in live):
+                if max_rounds and rounds >= max_rounds:
+                    return False
+                rnd = st["rnd"]
                 # the controller owns the re-timing knobs when present;
                 # kn is re-read every round so a step() lands immediately
                 kn = ctl.knobs if ctl is not None else None
@@ -629,13 +751,40 @@ class StreamServer:
                             else sc.max_wait_chunks)
                 depth = (kn.interleave_depth if kn is not None
                          else sc.interleave_depth)
+                offset = st["offset"]
                 rot = live[offset:] + live[:offset]
-                offset = (offset + 1) % len(live)
+                st["offset"] = (offset + 1) % len(live)
                 per = {s.sid: [] for s in rot}
                 late: list = []
                 for s in rot:
                     if s.ingest_done:
                         continue
+                    if (sc.max_pending_rows > 0 and self.batcher.pending
+                            >= sc.max_pending_rows):
+                        # load shedding: the queue bound is hit, so this
+                        # chunk is pulled off the sensor and dropped whole
+                        # (deferring it would deadlock: under max_wait=0 a
+                        # partial queue only fills from its own session's
+                        # future ingest)
+                        batch = s.next_batch()
+                        if batch is not None:
+                            s.shed(int((np.asarray(batch["frame_idx"])
+                                        < s.limit).sum()))
+                        continue
+                    if self._injector is not None:
+                        # fault check BEFORE next_batch: a raised fault
+                        # must never half-consume the prefetch iterator
+                        try:
+                            self._injector.ingest(s.sid, s.chunks_done,
+                                                  attempt=s.ingest_attempts)
+                        except TransientFault:
+                            s.ingest_attempts += 1
+                            s.retries += 1
+                            continue          # same chunk retries next round
+                        except FatalFault as e:
+                            self._fail_sessions((s.sid,), str(e), by_sid)
+                            continue
+                        s.ingest_attempts = 0
                     batch = s.next_batch()
                     if batch is not None:
                         per[s.sid].extend(self._ingest_chunk(s, batch, rnd))
@@ -661,30 +810,41 @@ class StreamServer:
                 self._round = rnd
                 for fb in interleave_rounds([per[s.sid] for s in rot],
                                             depth):
-                    self._finish(fb, by_sid)
+                    self._safe_finish(fb, by_sid)
                 for fb in late:
-                    self._finish(fb, by_sid)
-                rnd += 1
+                    self._safe_finish(fb, by_sid)
+                st["rnd"] = rnd + 1
+                rounds += 1
+                if self._injector is not None:
+                    self._injector.round_tick(rnd)   # may raise ServerCrash
+                if (sc.checkpoint_every > 0 and sc.checkpoint_dir
+                        and st["rnd"] % sc.checkpoint_every == 0):
+                    try:
+                        self.checkpoint()
+                    except CheckpointFault as e:
+                        # checkpoint I/O loss degrades gracefully: serving
+                        # continues on the last good snapshot
+                        self.checkpoint_failures += 1
+                        warnings.warn(f"checkpoint skipped: {e}",
+                                      stacklevel=2)
                 if ctl is not None:
                     done = sum(s.acct.frames for s in live)
-                    if done - retuned_at >= sc.retune_every:
+                    if done - st["retuned_at"] >= sc.retune_every:
                         ctl.step(self.batcher.queue_stats(), done,
                                  time.time() - t0)
-                        retuned_at = done
-                if verbose and rnd % sc.report_every == 0:
+                        st["retuned_at"] = done
+                if verbose and st["rnd"] % sc.report_every == 0:
                     dt = time.time() - t0
                     done = sum(s.acct.frames for s in live)
-                    print(f"[server] round {rnd:>4d}  {done:>5d} frames  "
-                          f"{done / dt:7.1f} frames/s aggregate  "
+                    print(f"[server] round {st['rnd']:>4d}  {done:>5d} "
+                          f"frames  {done / dt:7.1f} frames/s aggregate  "
                           f"(pending {self.batcher.pending}, "
                           f"{sum(not s.ingest_done for s in live)} "
                           f"streams ingesting)")
-        wall = time.time() - t0
-        results = {s.sid: s.finish(wall) for s in live}
         if verbose:
             for s in live:
                 print(f"[server] session {s.sid}:", s.acct.summary())
-        return results
+        return True
 
     def _ingest_chunk(self, s: StreamSession, batch: dict, rnd: int) -> list:
         """Gate one session chunk through *its* mask cache, embed on the
@@ -735,26 +895,108 @@ class StreamServer:
         return jax.device_put(tokens, named_sharding(
             tokens.shape, ("batch", None, None), self._ctx))
 
+    def _safe_finish(self, fb, by_sid: dict[int, StreamSession]) -> None:
+        """Execute one flush with per-session failure isolation. A
+        ``SessionFailure`` (injected fatal fault or exhausted retries)
+        quarantines only the owning sessions; any *other* exception means
+        the shared serving machinery itself broke, and is re-raised as a
+        ``ServeError`` attributing the failing bucket, sessions, frames
+        and round — the blanket except that used to lose all of that."""
+        owners = sorted({sid for sid, _ in fb.frame_idx})
+        if owners and all(by_sid[sid].failed_reason for sid in owners
+                          if sid in by_sid):
+            return            # stale flush of already-quarantined sessions
+        k = fb.bucket[0] if isinstance(fb.bucket, tuple) else fb.bucket
+        try:
+            self._finish(fb, by_sid)
+        except SessionFailure as e:
+            self._fail_sessions(e.sids, e.reason, by_sid)
+        except ServerCrash:
+            raise
+        except Exception as e:
+            rnd = getattr(self, "_round", 0)
+            frames = [f"{sid}:{fi}" for sid, fi in fb.frame_idx]
+            raise ServeError(
+                f"flush failed at bucket k={k} (sessions {owners}, frames "
+                f"{frames}, round {rnd}): {e}",
+                context={"bucket": k, "sessions": owners,
+                         "n_real": fb.n_real, "round": rnd}) from e
+
+    def _fail_sessions(self, sids, reason: str,
+                       by_sid: dict[int, StreamSession]) -> None:
+        """Quarantine the named sessions: mark them failed (their
+        ``StreamResult`` comes back ``poisoned`` with ``reason``), drop
+        their queued-but-unflushed frames so no further launch is billed
+        to them, and let every other session keep serving. Session-keyed
+        batcher queues make the discard surgical; under ``mix_streams``
+        queues are shared, so queued rows stay (their flushes skip the
+        failed owners' bookkeeping via ``failed_reason``)."""
+        fresh = [sid for sid in sids
+                 if sid in by_sid and not by_sid[sid].failed_reason]
+        if not fresh:
+            return
+        for sid in fresh:
+            by_sid[sid].fail(reason)
+        if not self.serve_cfg.mix_streams:
+            doomed = set(fresh)
+            self.batcher.discard(
+                lambda key: isinstance(key, tuple) and key[1] in doomed)
+        warnings.warn(f"quarantined session(s) {fresh}: {reason} — "
+                      f"remaining sessions keep serving", stacklevel=3)
+
     def _finish(self, fb, by_sid: dict[int, StreamSession]) -> None:
         # scheduling round tag rides on an instance field, not a parameter:
         # the signature is a stable seam tests stub out
         rnd = getattr(self, "_round", 0)
+        sc = self.serve_cfg
         k = fb.bucket[0] if isinstance(fb.bucket, tuple) else fb.bucket
-        timed = self.controller is not None
-        t0 = time.perf_counter() if timed else 0.0
-        tokens = self._place(fb.tokens)
-        aot = self._encode_aot.get(k)
-        if aot is not None:
-            logits = aot(self.params, tokens, *self._nargs())
-        elif self.serve_cfg.one_shape:
-            logits = self._encode_one[k](self.params, tokens, *self._nargs())
-        else:
-            logits = self._encode(self.params, tokens, *self._nargs())
-        # encodes are billed at bucket k: the packed prefix is contiguous,
-        # so the accelerator's static schedule streams only the k live rows
-        # through every core. Padded rows ([n_real:]) are never predicted
-        # or accounted.
-        preds = jnp.argmax(logits[:fb.n_real], -1)
+        inj = self._injector
+        tag = fb.frame_idx[0] if fb.frame_idx else (0, 0)
+        timed = self.controller is not None or self._watchdog
+        attempt = 0
+        while True:
+            try:
+                if inj is not None:
+                    inj.flush(k, tag, attempt=attempt)
+                t0 = time.perf_counter() if timed else 0.0
+                tokens = self._place(fb.tokens)
+                aot = self._encode_aot.get(k)
+                if aot is not None:
+                    logits = aot(self.params, tokens, *self._nargs())
+                elif sc.one_shape:
+                    logits = self._encode_one[k](self.params, tokens,
+                                                 *self._nargs())
+                else:
+                    logits = self._encode(self.params, tokens,
+                                          *self._nargs())
+                # encodes are billed at bucket k: the packed prefix is
+                # contiguous, so the accelerator's static schedule streams
+                # only the k live rows through every core. Padded rows
+                # ([n_real:]) are never predicted or accounted.
+                preds = jnp.argmax(logits[:fb.n_real], -1)
+                if inj is not None:
+                    stall = inj.stall_s(k, tag)
+                    if stall > 0:
+                        # injected straggler: the flush completes but slow
+                        # — the watchdog's detection target
+                        preds.block_until_ready()
+                        time.sleep(stall)
+                break
+            except TransientFault as e:
+                attempt += 1
+                for sid in {s for s, _ in fb.frame_idx}:
+                    if sid in by_sid:
+                        by_sid[sid].retries += 1
+                if attempt > sc.retry_limit:
+                    raise SessionFailure(
+                        sorted({s for s, _ in fb.frame_idx}),
+                        f"retry limit ({sc.retry_limit}) exhausted: {e}",
+                    ) from e
+                time.sleep(min(sc.retry_backoff_s * 2 ** (attempt - 1),
+                               1.0))
+            except FatalFault as e:
+                raise SessionFailure(sorted({s for s, _ in fb.frame_idx}),
+                                     str(e)) from e
         owners: dict[int, tuple[list, list]] = {}
         for row, (sid, fidx) in enumerate(fb.frame_idx):
             rows, fidxs = owners.setdefault(sid, ([], []))
@@ -767,8 +1009,13 @@ class StreamServer:
             # against an honest per-flush number.
             preds.block_until_ready()
             wall = time.perf_counter() - t0
-            self.controller.record_flush(k, fb.n_real, len(owners), wall,
-                                         rnd)
+            if self.controller is not None:
+                self.controller.record_flush(k, fb.n_real, len(owners),
+                                             wall, rnd)
+            elif self.telemetry is not None:
+                # watchdog-only path: feed the straggler detector directly
+                self.telemetry.record(k, fb.n_real, sc.microbatch,
+                                      len(owners), wall, rnd)
         for sid, (rows, fidxs) in owners.items():
             sess = by_sid[sid]
             sess.record_flush(k, len(rows))
@@ -780,6 +1027,248 @@ class StreamServer:
         # the device ages by the frames this flush pushed through it; the
         # flush itself observed the pre-advance state
         self._advance_drift(fb.n_real)
+
+    # -- checkpoint / restore / migration ----------------------------------
+
+    def _compat(self) -> dict:
+        """The configuration surface a snapshot is only valid under: any
+        mismatch between writer and reader changes routing, shapes, or
+        numerics, so restore refuses rather than silently diverging."""
+        sc = self.serve_cfg
+        return {
+            "img_size": self.cfg.img_size, "patch": self.cfg.patch,
+            "ladder": [int(k) for k in self.ladder.sizes],
+            "chunk": sc.chunk, "microbatch": sc.microbatch,
+            "mask_refresh": sc.mask_refresh,
+            "delta_threshold": sc.delta_threshold,
+            "one_shape": bool(sc.one_shape),
+            "fingerprint": str(self.policy.fingerprint()),
+            "noise": repr(self.noise),
+        }
+
+    def _check_compat(self, compat: dict) -> None:
+        mine = self._compat()
+        diffs = [f"{k}: snapshot={compat.get(k)!r} server={mine[k]!r}"
+                 for k in mine if compat.get(k) != mine[k]]
+        if diffs:
+            raise ValueError("snapshot is incompatible with this server "
+                             "(restore would not be bitwise): "
+                             + "; ".join(diffs))
+
+    def _pending_of(self, sid: int, remove: bool = False) -> list:
+        """This session's queued-but-unflushed batcher entries as plain
+        descriptors (tokens device->host). Exporting (not pad-flushing)
+        them is what preserves the per-launch absmax scopes of the flushes
+        they will eventually join — the bitwise-resume requirement."""
+        if self.batcher is None:
+            return []
+        sel = lambda key: isinstance(key, tuple) and key[1] == sid
+        out = []
+        for key, t, ix, now, is_row in self.batcher.export(sel):
+            out.append({"bucket": int(key[0]), "now": int(now),
+                        "is_row": bool(is_row),
+                        "fidx": [int(f) for _, f in ix],
+                        "tokens": np.asarray(jax.device_get(t))})
+        if remove and out:
+            self.batcher.discard(sel)
+        return out
+
+    def _snapshot(self, live, rnd: int, offset: int) -> tuple[dict, dict]:
+        """Flatten server + per-session state into (arrays, extra) for
+        ``repro.checkpoint.save``. Controller/autotune state is *not*
+        captured: a restored server re-warms and re-calibrates its control
+        plane (documented in README) — only prediction-bearing state must
+        round-trip bitwise."""
+        arrays: dict = {}
+        metas = []
+        for s in live:
+            s_arrays, meta = s.state_dict()
+            pend = self._pending_of(s.sid)
+            for j, p in enumerate(pend):
+                arrays[f"s{s.sid}/pend{j}"] = p.pop("tokens")
+            meta["pending"] = pend
+            for key, a in s_arrays.items():
+                arrays[f"s{s.sid}/{key}"] = a
+            metas.append(meta)
+        if self.drift is not None:
+            arrays["drift/key"] = np.asarray(self.drift.key)
+            arrays["drift/frame"] = np.asarray(self.drift.frame)
+            arrays["drift/nm"] = np.asarray(self.drift.drift_nm)
+        extra = {"sessions": metas, "rnd": int(rnd), "offset": int(offset),
+                 "recalibrations": int(self.recalibrations),
+                 "host_drift_nm": float(self._host_drift_nm),
+                 "next_sid": int(self._next_sid),
+                 "compat": self._compat()}
+        return arrays, extra
+
+    def checkpoint(self, root: str | None = None,
+                   step: int | None = None) -> str:
+        """Snapshot every live session (frame cursor, mask cache,
+        accounting, deferred predictions, queued rows) plus the server's
+        DriftState and loop cursors to ``root/step_<n>`` (atomic
+        tmp+rename via ``repro.checkpoint``). Valid mid-serve (between
+        rounds — ``serve(max_rounds=...)`` or the ``checkpoint_every``
+        cadence) or between serves. Returns the written path."""
+        sc = self.serve_cfg
+        root = root or sc.checkpoint_dir
+        if not root:
+            raise ValueError("checkpoint needs a root (checkpoint_dir "
+                             "config or the root argument)")
+        if sc.mix_streams:
+            raise ValueError(
+                "checkpoint is unsupported under mix_streams: queued rows "
+                "are cross-session, so per-session state cannot be "
+                "snapshotted without changing absmax scopes")
+        if self._inflight is not None:
+            st = self._inflight
+            live, rnd, offset = st["live"], st["rnd"], st["offset"]
+        else:
+            live = [s for s in self._sessions if not s.finished]
+            rnd, offset = 0, 0
+        arrays, extra = self._snapshot(live, rnd, offset)
+        step = int(rnd if step is None else step)
+        if self._injector is not None:
+            self._injector.checkpoint_io(step)   # may raise CheckpointFault
+        os.makedirs(root, exist_ok=True)
+        path = os.path.join(root, f"step_{step}")
+        _ckpt_save(path, arrays, step=step, extra=extra)
+        self._ckpt_gc(root)
+        return path
+
+    def _ckpt_gc(self, root: str) -> None:
+        keep = self.serve_cfg.checkpoint_keep
+        if keep <= 0:
+            return
+        steps = sorted((int(d.split("_", 1)[1]), d)
+                       for d in os.listdir(root)
+                       if d.startswith("step_")
+                       and d.split("_", 1)[1].isdigit())
+        for _, d in steps[:-keep]:
+            shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+
+    def restore_checkpoint(self, path_or_root: str,
+                           streams: dict | None = None) -> dict:
+        """Rebuild sessions from a snapshot written by ``checkpoint()``
+        into this (fresh) server; the next ``serve()`` resumes at the
+        snapshot's round/rotation cursors and produces the remaining
+        predictions bitwise identically to the uninterrupted run.
+
+        Accepts either a concrete ``step_<n>`` directory or a root (the
+        newest step is taken). ``streams`` maps sid -> VideoStream for
+        frame sources that did not serialize (a snapshot of a plain
+        ``VideoStream`` dataclass restores without it). Returns the
+        restored ``{sid: StreamSession}``."""
+        if self._inflight is not None:
+            raise ValueError("cannot restore into a mid-serve server")
+        if any(not s.finished for s in self._sessions):
+            raise ValueError("cannot restore into a server with live "
+                             "sessions (would collide with their sids)")
+        path = path_or_root
+        if not os.path.exists(os.path.join(path, "meta.json")):
+            step = latest_step(path_or_root)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoint under {path_or_root}")
+            path = os.path.join(path_or_root, f"step_{step}")
+        arrays, _, extra = restore_flat(path)
+        self._check_compat(extra.get("compat", {}))
+        streams = streams or {}
+        sessions: dict[int, StreamSession] = {}
+        for meta in extra["sessions"]:
+            sid = int(meta["sid"])
+            pre = f"s{sid}/"
+            sub = {k[len(pre):]: v for k, v in arrays.items()
+                   if k.startswith(pre)}
+            s = StreamSession.from_state(
+                sub, meta, self.serve_cfg, self.cfg, ladder=self.ladder,
+                layer_bits=self.layer_bits,
+                stream=streams.get(sid, streams.get(str(sid))))
+            sessions[sid] = s
+            self._sessions.append(s)
+        self._next_sid = max(int(extra.get("next_sid", 0)),
+                             max(sessions, default=-1) + 1)
+        if self.noise is not None and "drift/key" in arrays:
+            self.drift = DriftState(jnp.asarray(arrays["drift/key"]),
+                                    jnp.asarray(arrays["drift/frame"]),
+                                    jnp.asarray(arrays["drift/nm"]))
+            self._host_drift_nm = float(extra.get("host_drift_nm", 0.0))
+        self.recalibrations = int(extra.get("recalibrations", 0))
+        self._resume = (int(extra["rnd"]), int(extra["offset"]))
+        return sessions
+
+    def _restore_pending(self, live) -> list:
+        """Re-queue restored sessions' exported batcher rows (same groups,
+        same ``now`` ticks — see ``MicroBatcher.export``). Any flush that
+        becomes ready immediately is returned for execution before the
+        first resumed round (cannot happen for a snapshot that respected
+        the < microbatch queue invariant, but is handled anyway)."""
+        early = []
+        for s in live:
+            pend = getattr(s, "_pending_restore", None)
+            if not pend:
+                continue
+            for bucket, toks, fidx, now, is_row in pend:
+                key = (bucket, s.sid)
+                pairs = [(s.sid, int(f)) for f in fidx]
+                toks = jnp.asarray(toks)
+                if is_row:
+                    early.extend(self.batcher.push(key, toks, pairs[0],
+                                                   now=now))
+                else:
+                    early.extend(self.batcher.push_many(key, toks, pairs,
+                                                        now=now))
+            s._pending_restore = None
+        return early
+
+    # -- session migration -------------------------------------------------
+
+    def export_session(self, sid: int) -> dict:
+        """Extract one live session — its full state plus its queued
+        batcher rows — as a host-side snapshot dict for ``adopt_session``
+        on another server. The session leaves this server (its queues are
+        discarded after export; it is marked finished). Legal mid-serve
+        only while paused (``serve(max_rounds=...)`` returned ``{}``)."""
+        if self.serve_cfg.mix_streams:
+            raise ValueError("migration is unsupported under mix_streams")
+        s = next((s for s in self._sessions
+                  if s.sid == sid and not s.finished), None)
+        if s is None:
+            raise KeyError(f"no live session {sid}")
+        arrays, meta = s.state_dict()
+        meta["pending"] = self._pending_of(sid, remove=True)
+        if self._inflight is not None:
+            self._inflight["live"] = [x for x in self._inflight["live"]
+                                      if x.sid != sid]
+        self._sessions = [x for x in self._sessions if x.sid != sid]
+        s.finished = True
+        return {"arrays": arrays, "meta": meta, "compat": self._compat()}
+
+    def adopt_session(self, snapshot: dict, stream=None) -> StreamSession:
+        """Adopt a session exported by another server mid-stream. The
+        remaining predictions are bitwise identical to staying put:
+        micro-batches are session-pure, so numerics depend only on the
+        session's own frames and the (identical, compat-checked) weights
+        — not on which server launches them. Exception: under ``noise``,
+        the DriftState is server-owned shared thermal history, so a
+        migrated session sees the *destination's* drift trajectory (real
+        hardware would too — documented, not hidden)."""
+        if self._inflight is not None:
+            raise ValueError("cannot adopt mid-serve (pause first)")
+        if self.serve_cfg.mix_streams:
+            raise ValueError("migration is unsupported under mix_streams")
+        self._check_compat(snapshot["compat"])
+        meta = snapshot["meta"]
+        sid = int(meta["sid"])
+        if any(s.sid == sid and not s.finished for s in self._sessions):
+            raise ValueError(f"sid {sid} already live on this server")
+        s = StreamSession.from_state(snapshot["arrays"], meta,
+                                     self.serve_cfg, self.cfg,
+                                     ladder=self.ladder,
+                                     layer_bits=self.layer_bits,
+                                     stream=stream)
+        self._sessions.append(s)
+        self._next_sid = max(self._next_sid, sid + 1)
+        return s
 
     # -- single-stream dense baseline --------------------------------------
 
@@ -906,6 +1395,38 @@ def main(argv=None):
                          "transfer function")
     ap.add_argument("--noise-seed", type=int, default=0,
                     help="seed of the device-noise RNG lineage")
+    ap.add_argument("--flush-fault-rate", type=float, default=0.0,
+                    help="probability a flush site raises a (retryable) "
+                         "transient device fault")
+    ap.add_argument("--flush-fatal-rate", type=float, default=0.0,
+                    help="probability a flush site raises a fatal fault "
+                         "(quarantines the owning session)")
+    ap.add_argument("--ingest-fault-rate", type=float, default=0.0,
+                    help="probability an ingest chunk raises a transient "
+                         "fault (chunk retried next round)")
+    ap.add_argument("--stall-rate", type=float, default=0.0,
+                    help="probability a flush stalls (injected straggler)")
+    ap.add_argument("--stall-s", type=float, default=0.05,
+                    help="injected stall duration (seconds)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the fault-injection RNG lineage")
+    ap.add_argument("--hard-fail-session", type=int, default=-1,
+                    help=">= 0: hard-fail this session id at its first "
+                         "ingest (isolation demo)")
+    ap.add_argument("--retry-limit", type=int, default=3,
+                    help="transient-fault retries per flush before the "
+                         "owning session is quarantined")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="flush watchdog: median+MAD straggler detection "
+                         "over per-flush wall times")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="> 0: bound on queued micro-batch rows; ingest "
+                         "chunks arriving over the bound are shed")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="root directory for session checkpoints")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="> 0: snapshot every N scheduling rounds to "
+                         "--checkpoint-dir")
     ap.add_argument("--json", default="",
                     help="write per-session + aggregate results to this path")
     args = ap.parse_args(argv)
@@ -933,6 +1454,16 @@ def main(argv=None):
     if args.bit_plan:
         from repro.core.bitalloc import parse_bit_plan
         bit_plan = parse_bit_plan(args.bit_plan) or ()
+    faults = None
+    if (args.flush_fault_rate > 0 or args.flush_fatal_rate > 0
+            or args.ingest_fault_rate > 0 or args.stall_rate > 0
+            or args.hard_fail_session >= 0):
+        faults = FaultSpec(flush_fault_rate=args.flush_fault_rate,
+                           flush_fatal_rate=args.flush_fatal_rate,
+                           ingest_fault_rate=args.ingest_fault_rate,
+                           stall_rate=args.stall_rate, stall_s=args.stall_s,
+                           hard_fail_session=args.hard_fail_session,
+                           seed=args.fault_seed)
     server_cfg = ServerConfig(
         bucket_fractions=tuple(float(f) for f in args.buckets.split(",")),
         microbatch=args.microbatch, chunk=args.chunk,
@@ -940,7 +1471,11 @@ def main(argv=None):
         delta_threshold=args.delta_threshold, one_shape=args.one_shape,
         max_wait_chunks=args.max_wait, mix_streams=args.mix_streams,
         warm_start=False, mesh=args.mesh, bit_plan=bit_plan,
-        autotune=args.autotune, retune_every=args.retune_every)
+        autotune=args.autotune, retune_every=args.retune_every,
+        faults=faults, retry_limit=args.retry_limit,
+        watchdog=args.watchdog, max_pending_rows=args.max_pending,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every)
     server = StreamServer(cfg, server_cfg)
     print(f"[server] {cfg.name} {cfg.img_size}x{cfg.img_size} "
           f"backend={server.policy.resolve_backend()} "
@@ -986,7 +1521,9 @@ def main(argv=None):
     total = sum(r.frames for r in results.values())
     wall = max((r.wall_s for r in results.values()), default=0.0)
     for s in sessions:
-        print(f"[server] session {s.sid}:", results[s.sid].summary())
+        r = results[s.sid]
+        tag = f" POISONED ({r.failure})" if r.poisoned else ""
+        print(f"[server] session {s.sid}:", r.summary() + tag)
     agg_fps = total / wall if wall > 0 else 0.0
     print(f"[server] aggregate: {total} frames over {len(sessions)} streams "
           f"in {wall:.2f}s -> {agg_fps:.1f} frames/s "
@@ -995,6 +1532,11 @@ def main(argv=None):
     if server.noise is not None:
         print(f"[server] noise: drift {server._host_drift_nm:.3f} nm "
               f"residual, {server.recalibrations} recalibrations")
+    if server._injector is not None:
+        print(f"[server] faults: {server._injector.report()}")
+    if server._watchdog:
+        print(f"[server] watchdog: {len(server.straggler_flags)} "
+              f"straggler flushes flagged")
     if server.controller is not None:
         print("[server]", server.controller.report())
         assert server.controller.clamp_violations == 0, (
@@ -1020,6 +1562,8 @@ def main(argv=None):
                 "recal_bound_nm": server.noise.recal_bound_nm,
                 "recalibrations": server.recalibrations,
             }),
+            "faults": (None if server._injector is None
+                       else dict(server._injector.injected)),
             "sessions": {
                 str(s.sid): {
                     "frames": results[s.sid].frames,
@@ -1029,6 +1573,10 @@ def main(argv=None):
                     "recalibrations": results[s.sid].recalibrations,
                     "bucket_hits": results[s.sid].bucket_hits,
                     "predictions": results[s.sid].predictions,
+                    "poisoned": results[s.sid].poisoned,
+                    "failure": results[s.sid].failure,
+                    "retries": results[s.sid].retries,
+                    "shed_frames": results[s.sid].shed_frames,
                 } for s in sessions},
         }
         with open(args.json, "w") as f:

@@ -24,7 +24,7 @@ shim consume them; ``engine`` re-exports for compatibility.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field, is_dataclass
 
 import numpy as np
 
@@ -85,6 +85,14 @@ class StreamResult:
     #                              this stream (0 unless the server runs a
     #                              NoiseSpec with recal_bound_nm > 0)
     predictions: dict = field(default_factory=dict)   # frame_idx -> class
+    poisoned: bool = False       # session terminated early by an
+    #                              unrecoverable fault — predictions cover
+    #                              only the frames flushed before it died
+    failure: str = ""            # why (empty for a clean stream)
+    retries: int = 0             # transient-fault flush retries this
+    #                              stream's frames rode through
+    shed_frames: int = 0         # frames dropped by ingest load shedding
+    #                              (never gated, encoded or predicted)
 
     @property
     def fps(self) -> float:
@@ -136,9 +144,20 @@ class StreamSession:
         self.hist = BucketHistogram(ladder) if ladder is not None else None
         self.deferred: list = []     # (frame_idx list, argmax device array)
         self.frames_seen = 0         # valid frames ingested so far
+        self.chunks_done = 0         # ingest chunks consumed (the resume
+        #                              cursor: a restored session re-opens
+        #                              its stream here, not at frame 0)
         self.ingest_done = False
         self.drained = False
         self.finished = False
+        self.failed_reason = ""      # non-empty: quarantined by a fault
+        self.retries = 0             # transient-fault retries billed here
+        self.ingest_attempts = 0     # consecutive ingest-fault retries on
+        #                              the *current* chunk (resets on success)
+        self.shed_frames = 0         # frames dropped under overload
+        self._pending_restore: list | None = None  # queued micro-batch
+        #                              rows carried by a checkpoint, pushed
+        #                              back by the server at serve() start
         self._it = None
 
     # -- ingest ------------------------------------------------------------
@@ -154,10 +173,17 @@ class StreamSession:
         ``n_frames`` is not a chunk multiple, the trailing frames of the
         last chunk are gated but never routed, encoded, predicted or
         accounted (the ``valid`` mask the server applies).
+
+        Resume-aware: a session restored from a checkpoint re-opens at
+        ``chunks_done`` chunks past ``start`` — the stream is pure in
+        (seed, frame index), so the continuation's frames are exactly the
+        ones the interrupted run never consumed.
         """
         sc = self.serve_cfg
-        self._chunks_left = (self.n_frames + sc.chunk - 1) // sc.chunk
-        it = self.stream.chunks(sc.chunk, self.start)
+        total = (self.n_frames + sc.chunk - 1) // sc.chunk
+        self._chunks_left = total - self.chunks_done
+        it = self.stream.chunks(sc.chunk,
+                                self.start + self.chunks_done * sc.chunk)
         gen = (next(it) for _ in range(self._chunks_left))
         self._it = prefetch_to_device(gen, depth=sc.prefetch_depth,
                                       keys=("frames",))
@@ -173,9 +199,24 @@ class StreamSession:
             return None
         batch = next(self._it)
         self._chunks_left -= 1
+        self.chunks_done += 1
         if self._chunks_left == 0:
             self.ingest_done = True
         return batch
+
+    # -- failure / overload (written by the server) ------------------------
+
+    def fail(self, reason: str) -> None:
+        """Quarantine: no further ingest, no further flushes; already-
+        deferred predictions survive into the poisoned StreamResult."""
+        self.failed_reason = reason
+        self.ingest_done = True
+        self.drained = True
+
+    def shed(self, n: int) -> None:
+        """Bill ``n`` load-shed frames (pulled off the sensor but dropped
+        before gating — the overload response that keeps the queue bound)."""
+        self.shed_frames += n
 
     # -- per-flush bookkeeping (written by the server) ---------------------
 
@@ -215,5 +256,104 @@ class StreamSession:
         res.mean_bits = (sum(self.layer_bits) / len(self.layer_bits)
                          if self.layer_bits else 8.0)
         res.recalibrations = self.acct.recal_events
+        res.poisoned = bool(self.failed_reason)
+        res.failure = self.failed_reason
+        res.retries = self.retries
+        res.shed_frames = self.shed_frames
         self.finished = True
         return res
+
+    # -- checkpoint / migration --------------------------------------------
+
+    def state_dict(self) -> tuple[dict, dict]:
+        """Snapshot everything needed to resume this stream bitwise:
+        the ingest cursor, the mask cache's reference frame/scores, the
+        accumulated accounting and histogram, and the deferred (not yet
+        materialized) predictions. Returns ``(arrays, meta)`` — numpy
+        leaves separate from the JSON-able descriptor, the split
+        ``repro.checkpoint`` stores natively. The server adds the queued
+        micro-batch rows under ``meta["pending"]`` (they live in the
+        shared batcher, not here)."""
+        arrays: dict = {}
+        cs = self.cache.state_dict()
+        if cs["ref_frame"] is not None:
+            arrays["cache_ref_frame"] = cs["ref_frame"]
+            arrays["cache_ref_scores"] = cs["ref_scores"]
+        didx: list = []
+        dpred: list = []
+        for fidx, preds in self.deferred:
+            didx.extend(int(i) for i in fidx)
+            dpred.append(np.asarray(preds))
+        arrays["deferred_idx"] = np.asarray(didx, np.int64)
+        arrays["deferred_pred"] = (np.concatenate(dpred) if dpred
+                                   else np.zeros(0, np.int32))
+        meta = {
+            "sid": self.sid, "n_frames": self.n_frames, "start": self.start,
+            "chunks_done": self.chunks_done,
+            "frames_seen": self.frames_seen,
+            "ingest_done": bool(self.ingest_done),
+            "drained": bool(self.drained),
+            "failed_reason": self.failed_reason,
+            "retries": self.retries, "shed_frames": self.shed_frames,
+            "cache": {"ref_idx": cs["ref_idx"],
+                      "scored_frames": cs["scored_frames"],
+                      "reused_frames": cs["reused_frames"]},
+            "acct": self.acct.state_dict(),
+            "hist": ({str(k): v for k, v in self.hist.as_dict().items()}
+                     if self.hist is not None else None),
+            "stream": (asdict(self.stream) if is_dataclass(self.stream)
+                       else None),
+            "pending": [],
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state(cls, arrays: dict, meta: dict, serve_cfg: ServingConfig,
+                   cfg, ladder: BucketLadder | None = None,
+                   layer_bits: tuple | None = None,
+                   stream: VideoStream | None = None) -> "StreamSession":
+        """Rebuild a session from ``state_dict()`` output. ``stream``
+        overrides the snapshot's serialized spec — required when the
+        original source was not a plain ``VideoStream`` dataclass."""
+        if stream is None:
+            if meta.get("stream") is None:
+                raise ValueError(
+                    f"session {meta['sid']}'s snapshot carries no stream "
+                    f"spec (non-dataclass source) — pass its stream via "
+                    f"``streams={{sid: stream}}``")
+            stream = VideoStream(**meta["stream"])
+        s = cls(int(meta["sid"]), stream, int(meta["n_frames"]),
+                int(meta["start"]), serve_cfg, cfg, ladder=ladder,
+                layer_bits=layer_bits)
+        s.chunks_done = int(meta["chunks_done"])
+        s.frames_seen = int(meta["frames_seen"])
+        s.ingest_done = bool(meta["ingest_done"])
+        s.drained = bool(meta["drained"])
+        s.failed_reason = meta["failed_reason"]
+        s.retries = int(meta["retries"])
+        s.shed_frames = int(meta["shed_frames"])
+        cm = meta["cache"]
+        s.cache.load_state({
+            "ref_frame": arrays.get("cache_ref_frame"),
+            "ref_scores": arrays.get("cache_ref_scores"),
+            "ref_idx": cm["ref_idx"],
+            "scored_frames": cm["scored_frames"],
+            "reused_frames": cm["reused_frames"]})
+        s.acct.load_state(meta["acct"])
+        if s.hist is not None and meta.get("hist"):
+            for k, v in meta["hist"].items():
+                s.hist.add(int(k), int(v))
+        didx = arrays["deferred_idx"]
+        if len(didx):
+            s.deferred.append(([int(i) for i in didx],
+                               np.asarray(arrays["deferred_pred"])))
+        pend = []
+        for j, p in enumerate(meta.get("pending", ())):
+            toks = p.get("tokens")
+            if toks is None:
+                toks = arrays[f"pend{j}"]
+            pend.append((int(p["bucket"]), np.asarray(toks),
+                         [int(f) for f in p["fidx"]], int(p["now"]),
+                         bool(p["is_row"])))
+        s._pending_restore = pend
+        return s

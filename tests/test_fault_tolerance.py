@@ -70,3 +70,42 @@ def test_straggler_detector_warmup_quiet():
     det = StragglerDetector()
     for step in range(9):                     # < 10 samples: never flags
         assert det.record(step, 100.0 * (step + 1)) is False
+
+
+def test_straggler_detector_history_is_bounded():
+    """A long-lived server's watchdog records forever: the raw history
+    must stay trimmed to ``window``, and the windowing must actually
+    forget — a regime change ages out instead of skewing the median."""
+    det = StragglerDetector(window=20)
+    for step in range(10_000):
+        det.record(step, 0.1)
+    assert len(det._durations) == 20
+    # after a slow-regime shift fills the window, the old fast samples
+    # are gone: a 0.5s step is no longer an outlier
+    for step in range(10_000, 10_040):
+        det.record(step, 0.5)
+    assert det.record(20_000, 0.5) is False
+
+
+def test_straggler_detector_all_equal_durations():
+    """MAD = 0 on perfectly uniform history: the epsilon floor keeps the
+    detector from flagging equal (or infinitesimally slower) steps, while
+    a genuine outlier still trips."""
+    det = StragglerDetector(k=5.0)
+    for step in range(30):
+        det.record(step, 0.2)
+    assert det.record(30, 0.2) is False
+    assert det.record(31, 0.2 + 1e-7) is False   # below k * eps floor
+    assert det.record(32, 2.0) is True
+    assert len(det.flags) == 1
+
+
+def test_straggler_detector_short_history_median():
+    """Exactly at the 10-sample threshold the median/MAD come from the
+    full (short) history — no off-by-one slicing surprises."""
+    det = StragglerDetector(k=3.0, window=50)
+    for step in range(10):
+        det.record(step, 0.1 if step % 2 == 0 else 0.12)
+    # 10 samples on record 11: stats live now
+    assert det.record(10, 10.0) is True
+    assert det.record(11, 0.11) is False
