@@ -1,0 +1,223 @@
+"""Fleet front-end benchmark: worker scaling, sharded parity, placement.
+
+Three gates over ``serving/fleet.py`` + the model-sharded encoder, all on
+a forced-multi-device CPU host (``--xla_force_host_platform_device_count``
+— subprocesses, so the parent's JAX runtime stays untouched):
+
+  1. **scaling**: the bursty tiny-96 fleet (8 streams, skewed 1x..3x
+     frame mix) must serve >= 1.5x more aggregate frames/s on 4 workers
+     than on 1. Workers are in-process and serve sequentially, each on
+     its own measured wall; fleet fps is ``total_frames / max(wall)`` —
+     the W-host model where walls overlap. The win is structural
+     (multiplexing W-ways smaller queues), so the gate mostly guards
+     against the router serializing what should parallelize.
+  2. **sharded parity**: the fully-fused serving combo
+     (photonic_pallas + flash + fused) under ``model_shards=2`` on the
+     2-D ("data", "model") mesh must predict **bitwise identically** to
+     the 1-device fused path, and the sharded jit cache must actually
+     engage (no silent fallback) — the tentpole contract of
+     models/sharded_encoder.py.
+  3. **placement**: on a mix adversarial to round-robin (the two heavy
+     streams land on the same worker mod W), cost placement's aggregate
+     fps must beat rr by >= 1.15x (structural ~1.5x; the margin absorbs
+     wall-clock noise).
+
+Results merge into ``BENCH_serving.json`` under ``"fleet"``.
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench            # gates
+    PYTHONPATH=src python -m benchmarks.fleet_bench --smoke    # fast CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+SCALE_GATE = 1.5
+PLACEMENT_GATE = 1.15
+OUT_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+
+# heavy streams collide on worker 0 under rr (i % workers), so the mix is
+# adversarial to blind placement: rr's max queue is ~2x cost's
+_HEAVY, _LIGHT = 3, 1
+
+
+def _env(devices: int = 4) -> dict:
+    return dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu",
+                XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                           f" --xla_force_host_platform_device_count"
+                           f"={devices}"))
+
+
+def _run_script(script: str, *argv: str, devices: int = 4) -> dict:
+    proc = subprocess.run(
+        [sys.executable, "-c", script, *argv],
+        capture_output=True, text=True, timeout=1200, env=_env(devices),
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+# one fleet serve: argv = workers, placement, streams, base_frames, img,
+# heavy_every. The frame mix depends only on heavy_every (every run
+# serves the identical stream set — fps comparisons stay apples-to-
+# apples); heavy_every equal to the many-worker count makes the heavy
+# streams collide on worker 0 under rr. Prices come from the PR-7 cost
+# model (EncodeCostModel per-bucket per-frame seconds) — the fleet
+# router's default pricing path.
+_FLEET_SCRIPT = """
+import json, sys, warnings
+from repro.configs.opto_vit import get_config
+from repro.data.pipeline import video_fleet
+from repro.serving.fleet import FleetRouter
+from repro.serving.server import ServerConfig
+from repro.serving.session import ServingConfig
+
+workers, placement, streams, base, img, heavy_every = (
+    int(sys.argv[1]), sys.argv[2], int(sys.argv[3]), int(sys.argv[4]),
+    int(sys.argv[5]), int(sys.argv[6]))
+cfg = get_config("tiny", img_size=img, mgnet=True).with_(
+    matmul_backend="bf16")
+sc = ServerConfig.from_serving(
+    ServingConfig(microbatch=4, chunk=8, force_bucket=0.5),
+    warm_start=True)
+router = FleetRouter(cfg, sc, workers=workers, placement=placement)
+heavy, light = %d, %d
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore")       # dead buckets: expected at 50%%
+    for i, st in enumerate(video_fleet(streams, img_size=img, patch=16,
+                                       cut_every=32)):
+        nf = base * (heavy if i %% heavy_every == 0 else light)
+        router.add_job(st, n_frames=nf, start=8 * i)
+    res = router.serve()
+print(json.dumps({
+    "fps": router.aggregate_fps,
+    "frames": sum(r.frames for r in res.values()),
+    "walls": router.last_walls,
+    "owners": {j.job_id: j.worker for j in router.jobs.values()},
+    "price": router.price_per_frame(),
+}))
+""" % (_HEAVY, _LIGHT)
+
+# one sharded-vs-unsharded serve on the fully-fused combo:
+# argv = model_shards ("0" = mesh off)
+_PARITY_SCRIPT = """
+import json, sys
+import jax
+from repro.data.pipeline import video_fleet
+from repro.serving.engine import _smoke_cfg
+from repro.serving.server import ServerConfig, StreamServer
+
+shards = int(sys.argv[1])
+cfg = _smoke_cfg("photonic_pallas", "flash", "fused")
+sc = ServerConfig(microbatch=4, chunk=8, warm_start=False,
+                  mesh="auto" if shards else "off",
+                  model_shards=shards, one_shape=True)
+srv = StreamServer(cfg, sc, n_classes=8)
+if shards:
+    assert srv.mesh is not None and len(jax.devices()) == 4, jax.devices()
+    assert tuple(srv.mesh.axis_names) == ("data", "model"), srv.mesh
+sessions = [srv.add_session(st, n_frames=16)
+            for st in video_fleet(2, img_size=32, patch=8, seed=0,
+                                  cut_every=16)]
+res = srv.serve()
+from repro.models.sharded_encoder import sharded_encoder_cache_size
+print(json.dumps({
+    "predictions": {str(s.sid): res[s.sid].predictions for s in sessions},
+    "sharded_jits": sharded_encoder_cache_size(),
+}))
+"""
+
+
+def run(smoke: bool = False) -> dict:
+    streams = 4 if smoke else 8
+    base = 8 if smoke else 16
+    img = 64 if smoke else 96
+    many = 2 if smoke else 4
+    print(f"\n== fleet front-end: {streams} bursty streams, tiny-{img}, "
+          f"1 vs {many} workers ==")
+
+    he = str(many)
+    one = _run_script(_FLEET_SCRIPT, "1", "cost", str(streams), str(base),
+                      str(img), he)
+    cost = _run_script(_FLEET_SCRIPT, str(many), "cost", str(streams),
+                       str(base), str(img), he)
+    rr = _run_script(_FLEET_SCRIPT, str(many), "rr", str(streams),
+                     str(base), str(img), he)
+    scale = cost["fps"] / one["fps"]
+    place = cost["fps"] / rr["fps"]
+    print(f"  1 worker : {one['frames']} frames, wall "
+          f"{max(one['walls']):.2f}s -> {one['fps']:6.1f} fps "
+          f"(cost-model price {one['price'] * 1e3:.2f} ms/frame)")
+    print(f"  {many} workers: cost-placed {cost['fps']:6.1f} fps "
+          f"(walls {['%.2f' % w for w in cost['walls']]}) | "
+          f"rr-placed {rr['fps']:6.1f} fps "
+          f"(walls {['%.2f' % w for w in rr['walls']]})")
+    print(f"  -> scaling {scale:.2f}x (gate {SCALE_GATE}x), "
+          f"cost-vs-rr {place:.2f}x (gate {PLACEMENT_GATE}x)")
+
+    print("  sharded parity: photonic_pallas+flash+fused, "
+          "model_shards=2 on forced 4 devices vs mesh off ...")
+    sharded = _run_script(_PARITY_SCRIPT, "2")
+    plain = _run_script(_PARITY_SCRIPT, "0")
+    bitwise = sharded["predictions"] == plain["predictions"]
+    engaged = sharded["sharded_jits"] > 0 and plain["sharded_jits"] == 0
+    print(f"  -> bitwise equal: {bitwise} | sharded jits engaged: "
+          f"{sharded['sharded_jits']} (unsharded run: "
+          f"{plain['sharded_jits']})")
+
+    payload = {
+        "config": f"tiny-{img}", "streams": streams,
+        "base_frames": base, "workers": many,
+        "fps_1": one["fps"], "fps_cost": cost["fps"], "fps_rr": rr["fps"],
+        "scaling": scale, "placement_speedup": place,
+        "price_s_per_frame": cost["price"],
+        "sharded_bitwise": bitwise,
+        "sharded_jits": sharded["sharded_jits"],
+    }
+
+    assert bitwise, (
+        "model-sharded fused encode must predict bitwise-identically to "
+        "the 1-device fused path (models/sharded_encoder.py contract)")
+    assert engaged, (
+        f"sharded jit cache must engage under model_shards=2 (got "
+        f"{sharded['sharded_jits']}) and stay cold unsharded (got "
+        f"{plain['sharded_jits']}) — a silent fallback would make the "
+        f"parity check vacuous")
+    if smoke:
+        print("  (smoke mode: scaling/placement gates + BENCH json "
+              "skipped)")
+        return payload
+
+    merged = {}
+    if os.path.exists(OUT_JSON):           # shared with the serving benches
+        with open(OUT_JSON) as f:
+            merged = json.load(f)
+    merged["fleet"] = payload
+    with open(OUT_JSON, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"  wrote {OUT_JSON}")
+
+    assert scale >= SCALE_GATE, (
+        f"fleet aggregate fps must scale >= {SCALE_GATE}x from 1 -> "
+        f"{many} workers on the bursty tiny-{img} mix; measured "
+        f"{scale:.2f}x")
+    assert place >= PLACEMENT_GATE, (
+        f"cost placement must beat round-robin by >= {PLACEMENT_GATE}x "
+        f"on the rr-adversarial mix; measured {place:.2f}x")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fleet, parity gate only (fast CI)")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,9 +18,9 @@ import time
 from benchmarks import (attention_bench, bench_backend_cache,
                         controller_bench, fault_bench, ffn_bench,
                         fig8_energy, fig9_latency, fig10_11_mgnet,
-                        mixed_precision_bench, multistream_bench,
-                        robustness_bench, roofline_table, serving_bench,
-                        table1_qat, table4_kfps)
+                        fleet_bench, mixed_precision_bench,
+                        multistream_bench, robustness_bench, roofline_table,
+                        serving_bench, table1_qat, table4_kfps)
 
 ALL = {
     "fig8": fig8_energy.run,
@@ -51,6 +51,10 @@ ALL = {
     # per-session quarantine isolation, crash-and-restore exactness
     # ("faults" key in BENCH_serving.json)
     "faults": fault_bench.run,
+    # fleet front-end: 1 -> W worker scaling, cost-vs-rr placement, and
+    # model-sharded fused-encode bitwise parity on a forced 4-device host
+    # ("fleet" key in BENCH_serving.json)
+    "fleet": fleet_bench.run,
 }
 
 HISTORY = os.environ.get("BENCH_HISTORY_JSONL", "BENCH_history.jsonl")

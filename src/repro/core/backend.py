@@ -390,6 +390,45 @@ def prepare_params(params, bits: int = 8, min_size: int = 128,
         _prep, params, is_leaf=lambda x: isinstance(x, QuantizedWeight))
 
 
+def place_params(params, logical_axes, ctx):
+    """Pin a prepared param pytree onto a serving mesh with NamedSharding.
+
+    ``logical_axes`` is the model's per-leaf logical-axis tree (e.g.
+    ``models.vit.vit_logical_axes``); ``ctx`` a ShardingCtx whose rules
+    map those axes to mesh axes (MODEL_RULES shards head-/d_ff-major dims
+    over "model", replicates everything else). QuantizedWeight leaves
+    place both the int8 codes and the f32 scales — the scale's size-1
+    contraction dim falls back to replicated via the standard
+    divisibility rule, so per-out-channel scales land wherever their
+    columns do. Leaves whose rank does not match their axes entry (or
+    with every axis unmapped) replicate.
+
+    Placement is a *bandwidth* optimization: the sharded encoder's
+    shard_map would resolve mismatched layouts with an automatic reshard,
+    so correctness never depends on this — but placing the quantize-once
+    cache at prepare time moves the weight bytes exactly once. Only call
+    it when the sharded path will actually engage: committed model-axis
+    shardings on params fed to the *unsharded* jit would make GSPMD weave
+    collectives into a graph whose bitwise contract assumes none.
+    """
+    from repro.distributed.sharding import named_sharding
+
+    def _place(w, ax):
+        axt = tuple(ax)
+        if isinstance(w, QuantizedWeight):
+            wq = jax.device_put(w.wq, named_sharding(w.wq.shape, axt, ctx))
+            sc = jax.device_put(w.scale,
+                                named_sharding(w.scale.shape, axt, ctx))
+            return QuantizedWeight(wq, sc, w.bits)
+        if getattr(w, "ndim", -1) == len(axt):
+            return jax.device_put(w, named_sharding(w.shape, axt, ctx))
+        return w
+
+    return jax.tree_util.tree_map(
+        _place, params, logical_axes,
+        is_leaf=lambda x: isinstance(x, QuantizedWeight))
+
+
 def _infer_n_layers(params) -> int:
     """Leading dim of the scan-stacked ``blocks`` leaves (plan sizing)."""
     blocks = params.get("blocks") if isinstance(params, dict) else None

@@ -1,62 +1,71 @@
-"""Distributed-optimization utilities: compressed all-reduce, straggler
-tolerance primitives.
+"""Exact collectives for the model-sharded fused serving path.
 
-``compressed_psum``: int8-quantized gradient all-reduce (quantize ->
-psum int32 -> dequantize) under shard_map — 4x wire-bytes reduction vs f32
-(2x vs bf16) at the cost of one extra max-allreduce for the shared scale.
-Used by the ``grad_compression`` train-step variant and measured in the
-roofline collective term (EXPERIMENTS.md §Perf).
+These are the *bitwise-exact* primitives that let the fused int8 kernels
+run under ``shard_map`` over the 2-D ("data", "model") serving mesh while
+staying prediction-identical to the unsharded path:
+
+``replicated_absmax_scale``
+    Per-launch activation absmax scale with a *global* scope: the local
+    absmax is pmax'd over the given mesh axes before the epsilon clamp
+    and the reciprocal-multiply. max is associative and the subsequent
+    ops replicate ``core.quant.absmax_scale``'s exact op order, so every
+    shard computes the same f32 scale the unsharded launch would — the
+    quantized codes (and therefore the int32 accumulates) match bitwise.
+
+``exact_int_psum``
+    Integer partial-sum reduction over the model axis (the fused FFN's
+    d_ff contraction). Integer addition is associative and lossless in
+    int32 (n_devices * n_k * 127 * 127 stays far under 2^31 for every
+    config here), so the reduced accumulate equals the unsharded
+    contraction exactly — the float epilogue then sees identical inputs.
+
+The previous occupants (``compressed_psum`` / ``compressed_allreduce_tree``,
+lossy int8 gradient all-reduce) had zero callers anywhere in the repo and
+were removed; lossy reduction is the opposite of what the serving path
+needs (bitwise parity is the contract every serving test pins).
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["compressed_psum", "compressed_allreduce_tree"]
+from repro.core import quant
+
+__all__ = ["replicated_absmax_scale", "exact_int_psum"]
 
 
-def compressed_psum(x: jnp.ndarray, axis_name: str, bits: int = 8):
-    """int-quantized psum for use *inside* shard_map.
+def replicated_absmax_scale(x: jnp.ndarray, bits: int,
+                            axis_names, eps: float = 1e-8) -> jnp.ndarray:
+    """Global per-tensor absmax quantization scale inside ``shard_map``.
 
-    scale = global absmax / qmax (one scalar psum-max), codes int8 are
-    summed exactly in int32 (no saturation: sum of n devices' int8 fits
-    int32 for n < 2^23), then dequantized.
+    Mirrors ``core.quant.absmax_scale(x, bits)`` exactly — same epsilon
+    clamp, same reciprocal-multiply (never a divide) — with one pmax over
+    ``axis_names`` inserted between the local max and the clamp. Pass
+    every mesh axis the launch's rows are split over (both ``"data"`` and
+    ``"model"`` when the batch axis is sharded too): the result is the
+    scale the *unsharded* launch would compute, replicated on all shards.
     """
-    qmax = 2 ** (bits - 1) - 1
-    amax = jax.lax.pmax(jnp.max(jnp.abs(x)).astype(jnp.float32), axis_name)
-    scale = jnp.maximum(amax, 1e-12) / qmax
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax
-                 ).astype(jnp.int32)
-    total = jax.lax.psum(q, axis_name)
-    return total.astype(jnp.float32) * scale
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    _, qmax = quant.quant_range(bits)
+    inv_qmax = jnp.float32(1.0 / qmax)
+    amax = jnp.max(jnp.abs(x))
+    amax = jax.lax.pmax(amax, tuple(axis_names))
+    amax = jnp.maximum(amax, eps)
+    return amax.astype(jnp.float32) * inv_qmax
 
 
-def compressed_allreduce_tree(partial_grads: Any, mesh: Mesh,
-                              axis: str = "data", bits: int = 8) -> Any:
-    """Compressed all-reduce-MEAN of per-device partial gradients.
+def exact_int_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Lossless integer psum of partial accumulates over one mesh axis.
 
-    Each leaf has a leading device axis of size mesh.shape[axis] holding
-    that device's partial gradient (manual-DP layout); returns the
-    compressed mean, replicated. This is the explicit-DP path that makes
-    gradient compression real (under GSPMD the grad psum is implicit and
-    uncompressible from user code).
+    Guards the dtype: the whole point is that *integer* partial sums
+    reduce exactly (addition is associative, no rounding), so a float
+    input is a caller bug — it would reintroduce reduction-order
+    nondeterminism that the int8 serving path exists to exclude.
     """
-    n = mesh.shape[axis]
-
-    def per_leaf(g):
-        assert g.shape[0] == n, (g.shape, n)
-
-        def body(gl):                     # gl: (1, ...) local partial
-            return compressed_psum(gl[0], axis, bits) / n
-
-        return jax.shard_map(
-            body, mesh=mesh,
-            in_specs=P(axis, *([None] * (g.ndim - 1))),
-            out_specs=P(*([None] * (g.ndim - 1))))(g)
-
-    return jax.tree_util.tree_map(per_leaf, partial_grads)
+    if not jnp.issubdtype(x.dtype, jnp.integer):
+        raise TypeError(f"exact_int_psum needs an integer dtype (got "
+                        f"{x.dtype}): float partial sums do not reduce "
+                        f"bitwise-exactly")
+    return jax.lax.psum(x, axis_name)

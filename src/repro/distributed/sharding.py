@@ -21,8 +21,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardingCtx", "use_sharding", "current_ctx", "shard", "logical_spec",
-           "DEFAULT_RULES", "MULTIPOD_RULES", "DATA_RULES", "named_sharding",
-           "param_spec"]
+           "DEFAULT_RULES", "MULTIPOD_RULES", "DATA_RULES", "MODEL_RULES",
+           "named_sharding", "param_spec", "rules_for_mesh", "validate_rules"]
 
 # Default logical->mesh axis rules, single-pod (data, model) mesh.
 # FSDP: parameter "embed"/"mlp_in" dims shard over data; TP dims over model.
@@ -62,6 +62,73 @@ MULTIPOD_RULES.update({
 # params stay replicated (inference over one small prepared weight set).
 DATA_RULES: dict[str, str | tuple[str, ...] | None] = {"batch": "data"}
 
+# Model-sharded serving over a 2-D ("data", "model") mesh
+# (launch.mesh.make_serving_mesh(model=M)): the encode batch axis still
+# data-parallelizes, while attention heads and the FFN hidden dim split
+# over "model" — wq/wk/wv/w1 column-shard and w2 row-shards (their output
+# columns / input rows are the head / d_ff axis via the vit logical
+# axes; wo stays whole — models/sharded_encoder.py all-gathers the merged
+# head outputs instead, because wo's dequant runs inside the photonic
+# matmul kernel). "p_embed" is deliberately unmapped: inference weights replicate
+# on their embed dims (no FSDP — the prepared int8 cache is small), and
+# the fused kernels' per-launch activation absmax scopes stay global via
+# collectives.replicated_absmax_scale, keeping sharded predictions
+# bitwise-identical to the unsharded fused path.
+MODEL_RULES: dict[str, str | tuple[str, ...] | None] = {
+    "batch": "data",
+    "heads": "model",
+    "mlp": "model",
+    "p_heads": "model",
+    "p_mlp": "model",
+}
+
+
+def validate_rules(mesh: Mesh, rules: Mapping) -> None:
+    """Raise when a mesh axis of size > 1 appears in no rule value — that
+    axis would silently replicate everything, which is exactly the bug
+    that made 2-D meshes fall back to batch-only sharding. Size-1 axes
+    are exempt (replication over one device is a no-op by construction).
+    """
+    used: set[str] = set()
+    for rule in rules.values():
+        if rule is None:
+            continue
+        used.update(rule if isinstance(rule, tuple) else (rule,))
+    unmapped = [ax for ax in mesh.axis_names
+                if mesh.shape[ax] > 1 and ax not in used]
+    if unmapped:
+        raise ValueError(
+            f"mesh axes {unmapped} (size > 1) are not mapped by any "
+            f"sharding rule — everything would silently replicate over "
+            f"them. Pass rules that use them (e.g. MODEL_RULES for a "
+            f"('data','model') serving mesh) or shrink the mesh.")
+
+
+def rules_for_mesh(mesh: Mesh | None) -> Mapping | None:
+    """Explicit mesh-shape -> rules selection (no silent fallback):
+
+      * ``None`` mesh            -> ``None`` (annotations disabled)
+      * any mesh with a "pod"    -> MULTIPOD_RULES
+      * 1-D ("data",)            -> DATA_RULES  (batch-only DP serving)
+      * 2-D ("data", "model")    -> MODEL_RULES (model-sharded serving)
+      * anything else            -> DEFAULT_RULES
+
+    The chosen table is validated against the mesh: every size->1 mesh
+    axis must be used by some rule, else ValueError.
+    """
+    if mesh is None:
+        return None
+    if "pod" in mesh.axis_names:
+        rules = MULTIPOD_RULES
+    elif tuple(mesh.axis_names) == ("data",):
+        rules = DATA_RULES
+    elif tuple(mesh.axis_names) == ("data", "model"):
+        rules = MODEL_RULES
+    else:
+        rules = DEFAULT_RULES
+    validate_rules(mesh, rules)
+    return rules
+
 
 @dataclass
 class ShardingCtx:
@@ -96,12 +163,9 @@ def use_sharding(mesh: Mesh | None, rules: Mapping | None = None):
         _local.ctx = None
     else:
         if rules is None:
-            if "pod" in mesh.axis_names:
-                rules = MULTIPOD_RULES
-            elif tuple(mesh.axis_names) == ("data",):
-                rules = DATA_RULES      # 1-D serving mesh: batch-only DP
-            else:
-                rules = DEFAULT_RULES
+            rules = rules_for_mesh(mesh)
+        else:
+            validate_rules(mesh, rules)
         _local.ctx = ShardingCtx(mesh, rules)
     try:
         yield _local.ctx

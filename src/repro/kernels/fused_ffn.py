@@ -71,7 +71,7 @@ from repro.core import quant
 from repro.kernels.flash_attention import _pad_axis
 
 __all__ = ["fused_ffn_kernel", "fused_ffn_int8", "fused_ffn_xla",
-           "fused_ffn"]
+           "fused_ffn", "fused_ffn_sharded"]
 
 
 def _bits_pair(bits) -> tuple[int, int]:
@@ -316,6 +316,66 @@ def fused_ffn_xla(x: jax.Array, w1q: jax.Array, sw1: jax.Array,
     g = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
     y = _int8_linear_xla(g.astype(jnp.float32), w2q, sw2,
                          bits=bits2).astype(x.dtype) + b2
+    return _restore_dead(y.reshape(*lead, dout), n_tokens)
+
+
+def _int8_linear_sharded(x2: jax.Array, wq: jax.Array, sw: jax.Array, *,
+                         bits: int, scale_axes,
+                         psum_axis: str | None = None) -> jax.Array:
+    """``_int8_linear_xla`` for use *inside* ``shard_map``: the activation
+    absmax scale is pmax'd over ``scale_axes`` (so every shard quantizes
+    with the scale the unsharded launch would compute — the bitwise-parity
+    anchor), and an optional ``psum_axis`` reduces row-sharded partial
+    accumulates exactly in int32 before the dequant epilogue. With wq
+    column-sharded (no psum) the output holds this shard's columns of the
+    full result; with wq row-sharded + psum it holds the full contraction,
+    replicated over the model axis — either way bit-identical to the
+    corresponding slice of the unsharded ``_int8_linear_xla``."""
+    from repro.distributed.collectives import (exact_int_psum,
+                                               replicated_absmax_scale)
+    sx = replicated_absmax_scale(x2, bits, scale_axes)
+    xq = quant.quantize(x2, sx, bits=bits)
+    acc = jax.lax.dot_general(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    if psum_axis is not None:
+        acc = exact_int_psum(acc, psum_axis)
+    return _dequant_epilogue(acc, sx, sw)
+
+
+def fused_ffn_sharded(x: jax.Array, w1q: jax.Array, sw1: jax.Array,
+                      b1: jax.Array, w2q: jax.Array, sw2: jax.Array,
+                      b2: jax.Array, *, bits=8,
+                      live_rows: int | None = None,
+                      model_axis: str = "model",
+                      scale_axes=("data", "model")) -> jax.Array:
+    """``fused_ffn_xla`` under ``shard_map`` over the d_ff (model) axis.
+
+    Per-shard operands: w1q (d_in, d_ff/M) columns + sw1/b1 (d_ff/M,),
+    w2q (d_ff/M, d_out) rows + *full* sw2 (d_out,) / b2 (d_out,). The
+    hidden activation lives column-sharded (each shard runs its GELU on
+    its own d_ff slice); the only cross-shard traffic is two scalar pmaxes
+    (activation absmax scopes stay global — ``replicated_absmax_scale``)
+    and one int32 psum of the w2 partial accumulates (exact). Every float
+    op then sees bit-identical inputs to the unsharded twin, including
+    the Pallas dequant epilogue (the FMA fusion boundary), so the result
+    is bitwise-equal to ``fused_ffn_xla`` on the gathered operands.
+    ``scale_axes`` must name every mesh axis the token rows are split
+    over *plus* the model axis (batch-sharded callers pass both)."""
+    bits1, bits2 = _bits_pair(bits)
+    n_tokens = x.shape[-2]
+    xl, lv = _slice_live(x, live_rows)
+    if lv == 0:
+        return jnp.zeros(x.shape[:-1] + (w2q.shape[1],), x.dtype)
+    lead = xl.shape[:-1]
+    dout = w2q.shape[1]
+    x2 = xl.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    h = _int8_linear_sharded(x2, w1q, sw1, bits=bits1,
+                             scale_axes=scale_axes).astype(x.dtype) + b1
+    g = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    y = _int8_linear_sharded(g.astype(jnp.float32), w2q, sw2, bits=bits2,
+                             scale_axes=scale_axes,
+                             psum_axis=model_axis).astype(x.dtype) + b2
     return _restore_dead(y.reshape(*lead, dout), n_tokens)
 
 

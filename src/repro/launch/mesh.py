@@ -32,13 +32,29 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
-def make_serving_mesh():
-    """1-D ("data",) mesh over every visible device, or None on a single
-    device. The serving server's encode batch axis data-parallelizes over
-    it (distributed.sharding.DATA_RULES) — params replicate, each device
-    encodes a slice of the micro-batch. None keeps the single-device path
-    annotation-free (ShardingCtx is never installed)."""
+def make_serving_mesh(model: int = 1):
+    """Serving mesh over every visible device, or None on a single device.
+
+    ``model == 1`` (default): 1-D ("data",) mesh — the encode batch axis
+    data-parallelizes (distributed.sharding.DATA_RULES), params replicate,
+    each device encodes a slice of the micro-batch. None keeps the
+    single-device path annotation-free (ShardingCtx is never installed).
+
+    ``model > 1``: 2-D ("data", "model") mesh of shape (n // model,
+    model) — attention heads and the FFN hidden dim shard over "model"
+    (distributed.sharding.MODEL_RULES) so big ViT variants serve at all,
+    batch still splits over "data". Raises when the device count cannot
+    host the requested model axis (silent clamping would change which
+    kernels run)."""
     n = len(jax.devices())
+    if model > 1:
+        if model > n:
+            raise ValueError(f"model={model} shards need at least {model} "
+                             f"devices, have {n}")
+        if n % model != 0:
+            raise ValueError(f"device count {n} is not divisible by "
+                             f"model={model}")
+        return jax.make_mesh((n // model, model), ("data", "model"))
     if n < 2:
         return None
     return jax.make_mesh((n,), ("data",))

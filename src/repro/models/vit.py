@@ -44,7 +44,7 @@ from repro.core import mgnet as mgnet_mod
 from repro.core import noise as noise_mod
 from repro.core.decomposed_attention import mhsa_decomposed, mhsa_standard
 from repro.core.mgnet import MGNetConfig, mgnet_scores, patchify
-from repro.distributed.sharding import shard
+from repro.distributed.sharding import current_ctx, shard
 from repro.models import ffn as ffn_mod
 from repro.models.layers import (ExecPolicy, QuantizedWeight, he_init,
                                  layernorm, linear)
@@ -98,8 +98,16 @@ def init_vit(key, cfg: ArchConfig, n_classes: int = 1000,
 def vit_logical_axes(cfg: ArchConfig) -> dict:
     from repro.models.transformer import _tree_prepend_axis
     layer = {"ln1_g": (None,), "ln1_b": (None,),
-             "attn": {"wq": ("p_embed", "p_heads"), "wk": ("p_embed", None),
-                      "wv": ("p_embed", None), "wo": ("p_heads", "p_embed")},
+             # wq/wk/wv output columns are head-major, so a "model" mesh
+             # axis splits them into whole head groups (the sharded
+             # encoder's layout — MODEL_RULES maps p_heads there). wo is
+             # deliberately NOT tagged p_heads on its (head-major) rows:
+             # the sharded encoder consumes it whole after all-gathering
+             # the merged head outputs (its dequant runs inside the
+             # photonic matmul kernel, so a row split cannot reduce the
+             # int32 accumulates before dequant without changing numerics)
+             "attn": {"wq": ("p_embed", "p_heads"), "wk": ("p_embed", "p_heads"),
+                      "wv": ("p_embed", "p_heads"), "wo": (None, "p_embed")},
              "ln2_g": (None,), "ln2_b": (None,),
              "ffn": ffn_mod.mlp_logical_axes()}
     ax = {"patch_embed": {"w": (None, "p_embed"), "b": ("p_embed",)},
@@ -353,6 +361,21 @@ def encode_tokens(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
         raise ValueError("give patch_mask or kv_len, not both")
     reason = _fused_encoder_ineligible_reason(params, cfg, policy)
     if reason is None:
+        ctx = current_ctx()
+        if ctx is not None and "model" in ctx.mesh.axis_names \
+                and ctx.mesh.shape["model"] > 1:
+            # 2-D serving mesh: try the model-sharded twin of the fused
+            # jit (same graph under shard_map — bitwise-equal logits);
+            # ineligible combos warn once and keep the unsharded jit.
+            from repro.models import sharded_encoder
+            sreason = sharded_encoder.sharded_encode_ineligible_reason(
+                params, cfg, policy, ctx)
+            if sreason is None:
+                return sharded_encoder.sharded_encode(
+                    params, tokens, cfg, policy, patch_mask,
+                    None if kv_len is None else int(kv_len), ctx)
+            from repro.core.backend import warn_fused_fallback
+            warn_fused_fallback("sharded encoder", policy, sreason)
         fn = _fused_encoder_jit(cfg, policy,
                                 _blocks_bits_key(params["blocks"]),
                                 None if kv_len is None else int(kv_len),

@@ -302,7 +302,7 @@ class StreamAccounting:
         return tuple(k for k in self.ladder_sizes
                      if self.bucket_frames[k] == 0)
 
-    def summary(self) -> str:
+    def summary(self, warn: bool = True) -> str:
         """Per-bucket hit/launch counts (plus measured ms per flush when
         the server timed them), warning on dead buckets.
 
@@ -310,7 +310,10 @@ class StreamAccounting:
         that bucket's jit compile, so ``launches >= 1`` marks the bucket
         as compiled. Dead buckets compiled nothing *only if* the engine
         never warmed them — but their ladder slot still constrains
-        routing, so the warning fires either way.
+        routing, so the warning fires either way. ``warn=False`` keeps the
+        ``[dead: ...]`` text but suppresses the UserWarning — fleet
+        callers (serving/fleet.py) aggregate dead buckets across every
+        worker and warn ONCE at the router instead of N identical times.
         """
         sizes = (self.ladder_sizes if self.ladder_sizes is not None
                  else tuple(sorted(self.bucket_frames)))
@@ -324,7 +327,7 @@ class StreamAccounting:
                 part += f" ({meas * 1e3:.1f}ms/flush measured)"
             parts.append(part)
         dead = self.dead_buckets()
-        if dead:
+        if dead and warn:
             warnings.warn(
                 f"dead ladder buckets {list(dead)}: no frame routed to "
                 f"them in {self.frames} frames — every ladder entry costs "

@@ -72,8 +72,8 @@ from repro.core.noise import DriftState, NoiseSpec
 from repro.core.noise import scoped as _noise_scoped
 from repro.data.pipeline import VideoStream, video_fleet
 from repro.distributed.fault_tolerance import StragglerDetector
-from repro.distributed.sharding import (DATA_RULES, ShardingCtx,
-                                        named_sharding, use_sharding)
+from repro.distributed.sharding import (ShardingCtx, named_sharding,
+                                        rules_for_mesh, use_sharding)
 from repro.launch.mesh import make_serving_mesh
 from repro.models.vit import (embed_patches, forward_vit_masked,
                               forward_vit_tokens, init_vit)
@@ -137,6 +137,11 @@ class ServerConfig(ServingConfig):
     mesh: str = "auto"           # "auto": shard the encode batch axis over a
     #                              1-D data mesh when > 1 device is visible;
     #                              "off": never
+    model_shards: int = 0        # > 1: 2-D ("data", "model") serving mesh —
+    #                              attention heads + d_ff shard over "model"
+    #                              (MODEL_RULES), the fused encode runs under
+    #                              shard_map (models/sharded_encoder.py),
+    #                              bitwise-equal to unsharded. 0/1 = batch-only
     bit_plan: tuple = ()         # mixed-precision bit plan for the shared
     #                              weight cache (per-layer tuple or the dict
     #                              form — core/bitalloc.py); () = uniform
@@ -235,10 +240,13 @@ class StreamServer:
                                    or getattr(cfg, "bit_plan", None) or None)
         self.params = params
 
-        self.mesh = (make_serving_mesh()
+        self.mesh = (make_serving_mesh(
+                         model=max(1, self.serve_cfg.model_shards))
                      if self.serve_cfg.mesh == "auto" else None)
-        self._ctx = (ShardingCtx(self.mesh, DATA_RULES)
+        self._rules = rules_for_mesh(self.mesh)
+        self._ctx = (ShardingCtx(self.mesh, self._rules)
                      if self.mesh is not None else None)
+        self.params = self._maybe_place(self.params)
 
         cfg_, pol = cfg, self.policy
         gpol = pol.gate_policy()
@@ -313,6 +321,26 @@ class StreamServer:
         # exactly the dead-bucket compiles the probe exists to skip
         if self.serve_cfg.warm_start and not self.serve_cfg.autotune:
             self.warm_start()
+
+    def _maybe_place(self, params):
+        """Pin the prepared weight cache onto a 2-D serving mesh — only
+        when the model-sharded encoder will actually engage. Params fed to
+        the *unsharded* jit must stay replicated: a committed model-axis
+        sharding there would make GSPMD add collectives to a graph whose
+        bitwise contract assumes none."""
+        if (self._ctx is None or "model" not in self.mesh.axis_names
+                or self.mesh.shape["model"] < 2):
+            return params
+        from repro.core.backend import place_params
+        from repro.models import sharded_encoder, vit
+        if vit._fused_encoder_ineligible_reason(
+                params, self.cfg, self.policy) is not None:
+            return params
+        if sharded_encoder.sharded_encode_ineligible_reason(
+                params, self.cfg, self.policy, self._ctx) is not None:
+            return params
+        return place_params(params, vit.vit_logical_axes(self.cfg),
+                            self._ctx)
 
     def _prepare(self, plan):
         """MR-tune the shared cache from the raw weights under ``plan``
@@ -390,7 +418,7 @@ class StreamServer:
         accounting as one full-model tuning pass."""
         if self.policy.is_photonic():
             aot = self._encode_aot
-            self.params = self._prepare(self._active_plan)
+            self.params = self._maybe_place(self._prepare(self._active_plan))
             # same raw weights + same plan -> identical codes, avals and
             # treedef: the cost model's AOT executables stay valid (unlike
             # calibrate_bits, which changes the plan and must drop them)
@@ -418,7 +446,7 @@ class StreamServer:
         targets = tuple(k for k in self.ladder.sizes
                         if buckets is None or k in buckets)
         t0 = time.time()
-        with use_sharding(self.mesh, DATA_RULES if self.mesh else None):
+        with use_sharding(self.mesh, self._rules):
             zf = jnp.zeros((sc.chunk, cfg.img_size, cfg.img_size, 3),
                            jnp.float32)
             toks = self._embed(self.params, zf, *self._nargs())  # (C, N, d)
@@ -566,7 +594,7 @@ class StreamServer:
             self._raw_params, tokens, self.cfg, cpol,
             target_mean_bits=target_mean_bits, candidates=candidates,
             default=self.cfg.quant_bits or 8)
-        self.params = self._prepare(plan)
+        self.params = self._maybe_place(self._prepare(plan))
         self._sessions = [
             s if s.finished or s.frames_seen > 0
             else StreamSession(s.sid, s.stream, s.n_frames, s.start,
@@ -730,7 +758,7 @@ class StreamServer:
         ctl = self.controller
         live = st["live"]
         rounds = 0
-        with use_sharding(self.mesh, DATA_RULES if self.mesh else None):
+        with use_sharding(self.mesh, self._rules):
             early, st["early"] = st.get("early") or [], []
             if early:
                 # flushes that became ready while re-queuing a restored
@@ -1370,6 +1398,11 @@ def main(argv=None):
                          "and settled (the CI smoke gate)")
     ap.add_argument("--mesh", default="auto", choices=["auto", "off"],
                     help="shard the encode batch axis over visible devices")
+    ap.add_argument("--model-shards", type=int, default=0,
+                    help="> 1: 2-D (data, model) serving mesh — attention "
+                         "heads + d_ff shard over the model axis and the "
+                         "fused encode runs under shard_map, bitwise-equal "
+                         "to unsharded (needs n_heads and d_ff divisible)")
     ap.add_argument("--noise", action="store_true",
                     help="run with calibrated device noise (FPV + shot + "
                          "MR drift, core/noise.py NoiseSpec); off = clean, "
@@ -1470,7 +1503,8 @@ def main(argv=None):
         mask_refresh=args.mask_refresh,
         delta_threshold=args.delta_threshold, one_shape=args.one_shape,
         max_wait_chunks=args.max_wait, mix_streams=args.mix_streams,
-        warm_start=False, mesh=args.mesh, bit_plan=bit_plan,
+        warm_start=False, mesh=args.mesh, model_shards=args.model_shards,
+        bit_plan=bit_plan,
         autotune=args.autotune, retune_every=args.retune_every,
         faults=faults, retry_limit=args.retry_limit,
         watchdog=args.watchdog, max_pending_rows=args.max_pending,

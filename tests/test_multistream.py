@@ -403,3 +403,58 @@ def test_mesh_sharded_encode_matches_single_device():
         assert proc.returncode == 0, proc.stderr[-2000:]
         outs[mode] = json.loads(proc.stdout.strip().splitlines()[-1])
     assert outs["auto"] == outs["off"]
+
+
+_MODEL_MESH_SCRIPT = """
+import json, sys
+import jax
+from repro.data.pipeline import video_fleet
+from repro.serving.engine import _smoke_cfg
+from repro.serving.server import ServerConfig, StreamServer
+
+shards = int(sys.argv[1])
+cfg = _smoke_cfg("photonic_pallas", "flash", "fused")
+srv = StreamServer(cfg, ServerConfig(microbatch=4, chunk=8,
+                                     warm_start=False,
+                                     mesh="auto" if shards else "off",
+                                     model_shards=shards, one_shape=True),
+                   n_classes=8)
+if shards:
+    assert srv.mesh is not None and len(jax.devices()) == 4, jax.devices()
+    assert tuple(srv.mesh.axis_names) == ("data", "model"), srv.mesh
+else:
+    assert srv.mesh is None
+sessions = [srv.add_session(st, n_frames=16)
+            for st in video_fleet(2, img_size=32, patch=8, seed=0,
+                                  cut_every=16)]
+res = srv.serve()
+from repro.models.sharded_encoder import sharded_encoder_cache_size
+print(json.dumps({
+    "predictions": {str(s.sid): res[s.sid].predictions for s in sessions},
+    "sharded_jits": sharded_encoder_cache_size(),
+}))
+"""
+
+
+@pytest.mark.slow
+def test_model_sharded_fused_encode_matches_single_device():
+    """The tentpole contract: the fully-fused serving combo
+    (photonic_pallas + flash + fused) under model_shards=2 on a forced
+    4-device 2-D ("data", "model") mesh predicts bitwise-identically to
+    the unsharded fused path, and the sharded jit cache actually engages
+    (a silent fallback to the unsharded encoder would make the parity
+    assertion vacuous)."""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu",
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                          " --xla_force_host_platform_device_count=4"))
+    outs = {}
+    for shards in ("2", "0"):
+        proc = subprocess.run(
+            [sys.executable, "-c", _MODEL_MESH_SCRIPT, shards],
+            capture_output=True, text=True, timeout=600, env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        outs[shards] = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert outs["2"]["predictions"] == outs["0"]["predictions"]
+    assert outs["2"]["sharded_jits"] > 0
+    assert outs["0"]["sharded_jits"] == 0

@@ -7,10 +7,16 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import (DEFAULT_RULES, MULTIPOD_RULES,
+from repro.core import quant
+from repro.core.backend import QuantizedWeight, place_params
+from repro.distributed.collectives import (exact_int_psum,
+                                           replicated_absmax_scale)
+from repro.distributed.sharding import (DATA_RULES, DEFAULT_RULES,
+                                        MODEL_RULES, MULTIPOD_RULES,
                                         ShardingCtx, current_ctx,
-                                        logical_spec, named_sharding, shard,
-                                        use_sharding)
+                                        logical_spec, named_sharding,
+                                        rules_for_mesh, shard, use_sharding,
+                                        validate_rules)
 
 
 @pytest.fixture(scope="module")
@@ -88,3 +94,112 @@ def test_shard_rank_mismatch_raises(ctx):
 def test_named_sharding_roundtrip(ctx):
     ns = named_sharding((8, 16), ("batch", "mlp"), ctx)
     assert ns.spec == P("data", "model")
+
+
+# ---- 2-D serving mesh: MODEL_RULES / rules_for_mesh / validate_rules ----
+
+
+def test_model_rules_mapping():
+    """MODEL_RULES shards heads/d_ff over "model", keeps embed replicated
+    (no FSDP at inference — see the table's comment)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    mctx = ShardingCtx(mesh, MODEL_RULES)
+    assert mctx.spec("batch", "heads", None) == P("data", "model", None)
+    assert mctx.spec("p_embed", "p_heads") == P(None, "model")
+    assert mctx.spec("p_embed", "p_mlp") == P(None, "model")
+    # embed dims replicate: the prepared int8 cache is small
+    assert MODEL_RULES.get("p_embed") is None
+
+
+def test_rules_for_mesh_selection():
+    assert rules_for_mesh(None) is None
+    assert rules_for_mesh(jax.make_mesh((1,), ("data",))) is DATA_RULES
+    assert rules_for_mesh(
+        jax.make_mesh((1, 1), ("data", "model"))) is MODEL_RULES
+    assert rules_for_mesh(
+        jax.make_mesh((1, 1, 1), ("pod", "data", "model"))) is MULTIPOD_RULES
+
+
+def test_validate_rules_raises_on_unmapped_axis():
+    """A size>1 mesh axis no rule uses would silently replicate everything
+    — validate_rules turns that into a loud error. Size-1 axes are exempt."""
+
+    class FakeMesh:
+        shape = {"data": 2, "model": 2}
+        axis_names = ("data", "model")
+
+    with pytest.raises(ValueError, match="model"):
+        validate_rules(FakeMesh(), DATA_RULES)
+    validate_rules(FakeMesh(), MODEL_RULES)      # uses both axes: fine
+
+    class DegenerateModel:
+        shape = {"data": 2, "model": 1}
+        axis_names = ("data", "model")
+
+    validate_rules(DegenerateModel(), DATA_RULES)    # size-1 exempt
+
+
+def test_use_sharding_validates_explicit_rules():
+    class FakeMesh:
+        shape = {"data": 2, "model": 2}
+        axis_names = ("data", "model")
+
+    with pytest.raises(ValueError, match="model"):
+        with use_sharding(FakeMesh(), DATA_RULES):
+            pass
+
+
+def test_place_params_pins_quantized_weights():
+    """place_params puts QuantizedWeight codes *and* scales under the
+    logical-axis sharding; the scale's size-1 contraction dim falls back
+    to replicated so per-out-channel scales follow their columns."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    mctx = ShardingCtx(mesh, MODEL_RULES)
+    params = {
+        "wq": QuantizedWeight(jnp.zeros((8, 16), jnp.int8),
+                              jnp.zeros((1, 16), jnp.float32), 8),
+        "ln": jnp.ones((8,)),
+    }
+    axes = {"wq": ("p_embed", "p_heads"), "ln": (None,)}
+    placed = place_params(params, axes, mctx)
+    assert placed["wq"].wq.sharding.spec == P(None, "model")
+    assert placed["wq"].scale.sharding.spec == P(None, "model")
+    assert placed["ln"].sharding.is_fully_replicated
+    assert placed["wq"].bits == 8
+
+
+# ---- exact collectives (distributed/collectives.py) ----
+
+
+def test_replicated_absmax_scale_bitwise_matches_unsharded():
+    """Inside shard_map on a degenerate mesh the pmax is an identity, so
+    the result must equal core.quant.absmax_scale bit for bit — the op
+    order (max -> pmax -> eps clamp -> reciprocal-multiply) is the whole
+    contract."""
+    from jax.experimental.shard_map import shard_map
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 32), jnp.float32)
+    ref = quant.absmax_scale(x, bits=8)
+    got = shard_map(
+        lambda t: replicated_absmax_scale(t, 8, ("data", "model")),
+        mesh=mesh, in_specs=P(None, None), out_specs=P(),
+        check_rep=False)(x)
+    assert got.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_exact_int_psum_rejects_float():
+    with pytest.raises(TypeError, match="integer"):
+        exact_int_psum(jnp.ones((4,), jnp.float32), "model")
+
+
+def test_exact_int_psum_identity_on_degenerate_axis():
+    from jax.experimental.shard_map import shard_map
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    x = jnp.arange(8, dtype=jnp.int32)
+    got = shard_map(lambda t: exact_int_psum(t, "model"), mesh=mesh,
+                    in_specs=P(None), out_specs=P(None),
+                    check_rep=False)(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
